@@ -1,0 +1,23 @@
+"""Shared benchmark utilities: timing + CSV row emission."""
+import sys
+import time
+
+import jax
+
+
+def timeit(fn, *args, warmup=2, iters=5):
+    """Median wall time per call in microseconds (blocks on device)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def emit(name, us, derived=""):
+    print(f"{name},{us if us is not None else ''},{derived}")
+    sys.stdout.flush()

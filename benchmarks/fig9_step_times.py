@@ -1,0 +1,89 @@
+"""Fig. 9 — per-benchmark step time, reduced configs on CPU.
+
+The paper reports end-to-end seconds for its five MLPerf models at pod
+scale; the CPU analogue is the per-train-step wall time of each model's
+reduced config, which feeds the derived steps/s column. Includes the
+Transformer max-seq-97 trick (paper §3): step time with seq 256 vs 97.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.dist import split_tree
+from repro.models import gnmt as G
+from repro.models import resnet as R
+from repro.models import ssd as S
+from repro.models import transformer_mlperf as TM
+from repro.optim import adam, constant
+
+
+def _train_step(loss_fn, vals, batch, opt):
+    st = opt.init(vals)
+
+    @jax.jit
+    def step(vals, st, batch):
+        (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(vals, batch)
+        vals, st = opt.update(g, st, vals)
+        return vals, st, l
+
+    return lambda: step(vals, st, batch)[2]
+
+
+def run():
+    rng = np.random.default_rng(0)
+    opt = adam(constant(1e-3))
+    rows = []
+
+    # ResNet-50 (tiny)
+    cfg = R.RESNET_TINY
+    vals, _ = split_tree(R.init_resnet(cfg, jax.random.PRNGKey(0)))
+    batch = {"images": jnp.asarray(rng.standard_normal((8, 16, 16, 3)),
+                                   jnp.float32),
+             "labels": jnp.asarray(rng.integers(0, 10, 8))}
+    us = timeit(_train_step(lambda p, b: R.loss_fn(p, cfg, b), vals, batch,
+                            opt))
+    rows.append(("fig9/resnet50_tiny_step", us, f"steps_per_s={1e6/us:.2f}"))
+
+    # SSD (tiny)
+    scfg = S.SSD_TINY
+    svals, _ = split_tree(S.init_ssd(scfg, jax.random.PRNGKey(0)))
+    A = S.forward_shape(scfg)
+    sbatch = {
+        "images": jnp.asarray(rng.standard_normal(
+            (4, scfg.image_size, scfg.image_size, 3)), jnp.float32),
+        "cls_targets": jnp.asarray(rng.integers(0, scfg.num_classes, (4, A))),
+        "box_targets": jnp.asarray(rng.standard_normal((4, A, 4)),
+                                   jnp.float32),
+    }
+    us = timeit(_train_step(lambda p, b: S.loss_fn(p, scfg, b), svals,
+                            sbatch, opt))
+    rows.append(("fig9/ssd_tiny_step", us, f"steps_per_s={1e6/us:.2f}"))
+
+    # Transformer (tiny) — seq 256 vs the paper's eval-truncated 97
+    tcfg = TM.TRANSFORMER_TINY
+    tvals, _ = split_tree(TM.init_transformer(tcfg, jax.random.PRNGKey(0)))
+    for seq in (256, 97):
+        tb = {"src": jnp.asarray(rng.integers(1, tcfg.vocab, (2, seq))),
+              "tgt": jnp.asarray(rng.integers(1, tcfg.vocab, (2, seq)))}
+        us = timeit(_train_step(lambda p, b: TM.loss_fn(p, tcfg, b), tvals,
+                                tb, opt))
+        rows.append((f"fig9/transformer_tiny_seq{seq}", us,
+                     f"steps_per_s={1e6/us:.2f}"))
+
+    # GNMT (tiny)
+    gcfg = G.GNMT_TINY
+    gvals, _ = split_tree(G.init_gnmt(gcfg, jax.random.PRNGKey(0)))
+    gb = {"src": jnp.asarray(rng.integers(1, gcfg.vocab, (4, 24))),
+          "tgt": jnp.asarray(rng.integers(1, gcfg.vocab, (4, 24)))}
+    us = timeit(_train_step(lambda p, b: G.loss_fn(p, gcfg, b), gvals, gb,
+                            opt))
+    rows.append(("fig9/gnmt_tiny_step", us, f"steps_per_s={1e6/us:.2f}"))
+
+    for r in rows:
+        emit(*r)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

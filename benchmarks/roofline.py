@@ -1,0 +1,57 @@
+"""§Roofline — three-term roofline per (arch x shape x mesh) from the
+dry-run artifacts (results/dryrun_{1pod,2pod}.json) + the analytic models
+in repro.analysis (see DESIGN.md §6.5 for why both exist).
+"""
+import json
+import os
+
+from benchmarks.common import emit
+from repro.analysis import roofline
+from repro.configs import INPUT_SHAPES, get_config, get_shape, list_archs
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def load_dryruns():
+    out = {}
+    for multi, name in ((False, "dryrun_1pod.json"), (True,
+                                                      "dryrun_2pod.json")):
+        path = os.path.join(ROOT, "results", name)
+        if not os.path.exists(path):
+            continue
+        for r in json.load(open(path)):
+            out[(r["arch"], r["shape"], multi)] = r
+    return out
+
+
+def full_table(multi_pod=False):
+    dr = load_dryruns()
+    rows = []
+    for arch in list_archs():
+        cfg = get_config(arch)
+        for shape_name in INPUT_SHAPES:
+            shape = get_shape(shape_name)
+            rec = dr.get((arch, shape_name, multi_pod))
+            if rec is None or "skipped" in rec:
+                continue
+            rows.append(roofline(cfg, shape, rec, multi_pod))
+    return rows
+
+
+def run():
+    rows = []
+    for r in full_table(multi_pod=False):
+        total = r["compute_s"] + r["memory_s"] + r["collective_s"]
+        derived = (
+            f"compute={r['compute_s']:.3e}s;memory={r['memory_s']:.3e}s;"
+            f"collective={r['collective_s']:.3e}s;dominant={r['dominant']};"
+            f"useful_ratio={r['useful_ratio']:.2f};"
+            f"mem={r['mem_budget_GiB']:.1f}GiB;fits={r['fits_16GiB']}"
+        )
+        rows.append((f"roofline/{r['arch']}/{r['shape']}", None, derived))
+        emit(*rows[-1])
+    return rows
+
+
+if __name__ == "__main__":
+    run()

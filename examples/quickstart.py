@@ -1,0 +1,38 @@
+"""Quickstart: train a reduced assigned architecture for a few steps on
+CPU with the same pjit code paths used on the pod meshes.
+
+    PYTHONPATH=src python examples/quickstart.py [--arch mixtral-8x7b]
+"""
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.configs import get_config, list_archs
+from repro.data.pipeline import synthetic_eval_set, synthetic_lm_batches
+from repro.launch.mesh import single_device_mesh
+from repro.train import Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mixtral-8x7b", choices=list_archs())
+    ap.add_argument("--steps", type=int, default=20)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced()
+    print(f"arch={args.arch} reduced: {cfg.n_layers}L d={cfg.d_model} "
+          f"vocab={cfg.vocab} pattern={[s.mixer for s in cfg.block_pattern]}")
+    trainer = Trainer(
+        cfg, single_device_mesh(),
+        TrainerConfig(total_steps=args.steps, eval_every=args.steps,
+                      log_every=5),
+    )
+    batches = synthetic_lm_batches(cfg, batch=8, seq=64, steps=args.steps)
+    eval_fn = synthetic_eval_set(cfg, batch=8, seq=64)
+    history = trainer.fit(batches, eval_fn)
+    print("final:", history[-1])
+
+
+if __name__ == "__main__":
+    main()

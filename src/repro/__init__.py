@@ -1,0 +1,4 @@
+"""repro — multi-pod JAX reproduction of "Scale MLPerf-0.6 models on
+Google TPU-v3 Pods" (Kumar et al., 2019). See DESIGN.md / README.md."""
+
+__version__ = "1.0.0"

@@ -1,0 +1,62 @@
+"""Architecture registry: ``get_config(arch_id)`` / ``list_archs()``.
+
+The 10 assigned architectures plus the paper's own MLPerf models (which use
+their own config types, see ``repro.models.resnet`` etc.).
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.configs.base import (
+    INPUT_SHAPES,
+    InputShape,
+    LayerSpec,
+    MambaConfig,
+    ModelConfig,
+    MoEConfig,
+    RWKV6Config,
+)
+
+# arch-id -> module name under repro.configs
+_ARCH_MODULES: Dict[str, str] = {
+    "jamba-1.5-large-398b": "jamba_1_5_large_398b",
+    "grok-1-314b": "grok_1_314b",
+    "whisper-medium": "whisper_medium",
+    "mixtral-8x7b": "mixtral_8x7b",
+    "qwen1.5-32b": "qwen1_5_32b",
+    "rwkv6-3b": "rwkv6_3b",
+    "gemma-7b": "gemma_7b",
+    "yi-9b": "yi_9b",
+    "command-r-35b": "command_r_35b",
+    "qwen2-vl-7b": "qwen2_vl_7b",
+}
+
+
+def list_archs() -> List[str]:
+    return list(_ARCH_MODULES)
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {list_archs()}")
+    mod = importlib.import_module(f"repro.configs.{_ARCH_MODULES[arch]}")
+    return mod.CONFIG
+
+
+def get_shape(name: str) -> InputShape:
+    return INPUT_SHAPES[name]
+
+
+__all__ = [
+    "ModelConfig",
+    "MoEConfig",
+    "MambaConfig",
+    "RWKV6Config",
+    "LayerSpec",
+    "InputShape",
+    "INPUT_SHAPES",
+    "get_config",
+    "get_shape",
+    "list_archs",
+]

@@ -1,0 +1,283 @@
+"""Config dataclasses for all model families and benchmark input shapes.
+
+Every assigned architecture (see ``src/repro/configs/<id>.py``) instantiates
+``ModelConfig`` with the exact published dimensions and cites its source in
+the module docstring. ``ModelConfig.reduced()`` produces the CPU smoke-test
+variant (<=2 layers, d_model<=512, <=4 experts) of the same family.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    """Mixture-of-experts FFN config (switch/mixtral-style top-k routing)."""
+    n_experts: int
+    top_k: int = 2
+    capacity_factor: float = 1.25
+    aux_loss_weight: float = 0.01
+
+
+@dataclass(frozen=True)
+class MambaConfig:
+    """Mamba (S6) mixer config [arXiv:2312.00752], used by hybrid archs."""
+    d_state: int = 16
+    d_conv: int = 4
+    expand: int = 2
+    dt_rank: int = 0  # 0 -> ceil(d_model / 16)
+
+
+@dataclass(frozen=True)
+class RWKV6Config:
+    """RWKV-6 "Finch" mixer config [arXiv:2404.05892]."""
+    head_dim: int = 64
+    decay_lora_dim: int = 64  # low-rank dim for data-dependent decay w_t
+
+
+@dataclass(frozen=True)
+class LayerSpec:
+    """One layer of a (possibly heterogeneous) stack.
+
+    mixer: 'attn' | 'mamba' | 'rwkv6'
+    ffn:   'dense' | 'moe' | 'none'
+    """
+    mixer: str = "attn"
+    ffn: str = "dense"
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # 'dense'|'moe'|'ssm'|'hybrid'|'audio'|'vlm'
+    n_layers: int
+    d_model: int
+    d_ff: int
+    vocab: int
+    n_heads: int = 0          # 0 for attention-free archs
+    n_kv_heads: int = 0
+    head_dim: int = 0         # 0 -> d_model // n_heads
+    qkv_bias: bool = False
+    rope: str = "rope"        # 'rope' | 'mrope' | 'none'
+    rope_theta: float = 10000.0
+    norm: str = "rmsnorm"     # 'rmsnorm' | 'layernorm'
+    activation: str = "silu"  # 'silu' (SwiGLU) | 'gelu' (GeGLU) | 'relu'
+    glu: bool = True          # gated FFN (SwiGLU/GeGLU); False -> plain MLP
+    tie_embeddings: bool = False
+    sliding_window: Optional[int] = None   # native SWA (mixtral)
+    # Window used ONLY for the long_500k decode variant on archs whose
+    # native attention is full/causal (beyond-paper sliding-window decode).
+    long_context_window: Optional[int] = None
+    moe: Optional[MoEConfig] = None
+    mamba: Optional[MambaConfig] = None
+    rwkv6: Optional[RWKV6Config] = None
+    # Repeating heterogeneous stack; empty tuple -> homogeneous (mixer per
+    # family, ffn='moe' iff moe config present).
+    block_pattern: Tuple[LayerSpec, ...] = ()
+    # Encoder-decoder (audio family): encoder layer count + source length.
+    n_enc_layers: int = 0
+    enc_source_len: int = 0
+    # Modality frontend STUB: 'none' | 'audio_frames' | 'vision_patches'.
+    # input_specs() supplies precomputed embeddings of shape (B, n_media, d).
+    frontend: str = "none"
+    n_media_tokens: int = 0
+    # Distribution defaults.
+    param_sharding: str = "fsdp"   # 'replicated' | 'wus' | 'fsdp'
+    remat: bool = True
+    seq_parallel: bool = True      # shard residual stream seq dim over model
+    #                                (Megatron-SP; required to fit 16GB HBM)
+    loss_chunk: int = 256          # CE computed in seq chunks of this size
+    dtype: str = "bfloat16"        # activation/compute dtype
+    param_dtype: str = "float32"   # master weights
+    kv_cache_dtype: str = "bfloat16"  # 'bfloat16' | 'int8' (quantized cache)
+    grad_dtype: str = "float32"    # gradient summation dtype (C7: fp32;
+    #                                bf16 for the 300B+ configs, see DESIGN)
+    moment_dtype: str = "float32"  # Adam moment dtype (bf16 for 300B+)
+    microbatches: int = 1          # gradient-accumulation microbatches
+
+    # ------------------------------------------------------------------ #
+    def __post_init__(self):
+        if self.n_heads:
+            object.__setattr__(
+                self, "head_dim", self.head_dim or self.d_model // self.n_heads
+            )
+        if not self.block_pattern:
+            if self.family == "ssm" and self.rwkv6 is not None:
+                mixer = "rwkv6"
+            elif self.family == "ssm":
+                mixer = "mamba"
+            else:
+                mixer = "attn"
+            ffn = "moe" if self.moe is not None else "dense"
+            object.__setattr__(self, "block_pattern", (LayerSpec(mixer, ffn),))
+        if self.n_layers % len(self.block_pattern) != 0:
+            raise ValueError(
+                f"{self.name}: n_layers={self.n_layers} not divisible by "
+                f"block_pattern length {len(self.block_pattern)}"
+            )
+
+    @property
+    def n_blocks(self) -> int:
+        return self.n_layers // len(self.block_pattern)
+
+    @property
+    def uses_attention(self) -> bool:
+        return any(s.mixer == "attn" for s in self.block_pattern)
+
+    @property
+    def uses_moe(self) -> bool:
+        return any(s.ffn == "moe" for s in self.block_pattern)
+
+    @property
+    def is_encdec(self) -> bool:
+        return self.n_enc_layers > 0
+
+    def supports_long_context(self) -> bool:
+        """True when a 524k-token decode is sub-quadratic for this arch."""
+        if self.is_encdec:
+            return False  # enc-dec decoder family: noted skip in DESIGN.md
+        # SSM / hybrid are O(L); attention archs need a window.
+        only_attn = all(s.mixer == "attn" for s in self.block_pattern)
+        if not only_attn:
+            return True
+        return (self.sliding_window or self.long_context_window) is not None
+
+    def effective_window(self, shape: "InputShape") -> Optional[int]:
+        """Attention window for a given input shape (None = full causal)."""
+        if self.sliding_window is not None:
+            return self.sliding_window
+        if shape.name == "long_500k":
+            return self.long_context_window
+        return None
+
+    # ------------------------------------------------------------------ #
+    def reduced(self) -> "ModelConfig":
+        """Smoke-test variant: same family/pattern, tiny dims (CPU-runnable)."""
+        pat = self.block_pattern[: max(1, min(2, len(self.block_pattern)))]
+        # Preserve at least one of each distinct sublayer type if possible.
+        kinds = {(s.mixer, s.ffn) for s in self.block_pattern}
+        if len(kinds) > len(pat):
+            seen, keep = set(), []
+            for s in self.block_pattern:
+                k = (s.mixer, s.ffn)
+                if k not in seen:
+                    seen.add(k)
+                    keep.append(s)
+                if len(keep) == 4:
+                    break
+            pat = tuple(keep)
+        d_model = min(self.d_model, 256)
+        n_heads = min(self.n_heads, 4) if self.n_heads else 0
+        n_kv = min(self.n_kv_heads, n_heads) if self.n_kv_heads else 0
+        if n_kv:
+            n_kv = max(1, min(n_kv, n_heads))
+            while n_heads % n_kv:
+                n_kv -= 1
+        return dataclasses.replace(
+            self,
+            name=self.name + "-smoke",
+            n_layers=len(pat),
+            block_pattern=tuple(pat),
+            d_model=d_model,
+            d_ff=min(self.d_ff, 512),
+            vocab=min(self.vocab, 1024),
+            n_heads=n_heads,
+            n_kv_heads=n_kv,
+            head_dim=(d_model // n_heads) if n_heads else 0,
+            # high capacity factor: no token drops, so prefill == decode
+            # exactly in the smoke tests (capacity drops are a known MoE
+            # train/serve asymmetry at tight capacity)
+            moe=None
+            if self.moe is None
+            else dataclasses.replace(
+                self.moe, n_experts=min(self.moe.n_experts, 4),
+                capacity_factor=float(min(self.moe.n_experts, 4)),
+            ),
+            rwkv6=None
+            if self.rwkv6 is None
+            else dataclasses.replace(self.rwkv6, head_dim=32, decay_lora_dim=16),
+            n_enc_layers=min(self.n_enc_layers, 2),
+            enc_source_len=min(self.enc_source_len, 64) or 0,
+            n_media_tokens=min(self.n_media_tokens, 16),
+            sliding_window=None if self.sliding_window is None else 64,
+            long_context_window=None
+            if self.long_context_window is None
+            else 64,
+            param_sharding="replicated",
+            remat=False,
+            microbatches=1,
+        )
+
+    def param_count(self) -> int:
+        """Analytic parameter count (used for MODEL_FLOPS = 6*N*D)."""
+        d, f, v = self.d_model, self.d_ff, self.vocab
+        total = v * d + (0 if self.tie_embeddings else v * d)
+        for spec in self.block_pattern:
+            n_this = self.n_blocks
+            d_, f_ = d, f
+            mixer = 0
+            if spec.mixer == "attn":
+                hd = self.head_dim
+                mixer = d_ * (self.n_heads * hd) * 2 + d_ * (self.n_kv_heads * hd) * 2
+            elif spec.mixer == "mamba":
+                m = self.mamba or MambaConfig()
+                di = m.expand * d_
+                dt_rank = m.dt_rank or -(-d_ // 16)
+                mixer = (
+                    d_ * di * 2
+                    + di * m.d_conv
+                    + di * (dt_rank + 2 * m.d_state)
+                    + dt_rank * di
+                    + di * m.d_state
+                    + di
+                    + di * d_
+                )
+            elif spec.mixer == "rwkv6":
+                r = self.rwkv6 or RWKV6Config()
+                mixer = d_ * d_ * 4 + 2 * d_ * r.decay_lora_dim + d_ * 6
+            if spec.ffn == "dense":
+                ffn = d_ * f_ * (3 if self.glu else 2)
+            elif spec.ffn == "moe":
+                ffn = self.moe.n_experts * d_ * f_ * (3 if self.glu else 2) + d_ * self.moe.n_experts
+            else:
+                ffn = 0
+            total += n_this * (mixer + ffn)
+        if self.is_encdec:
+            # encoder layers: self-attn + dense ffn; decoder adds cross-attn.
+            hd = self.head_dim
+            attn = d * (self.n_heads * hd) * 2 + d * (self.n_kv_heads * hd) * 2
+            enc = self.n_enc_layers * (attn + d * f * (3 if self.glu else 2))
+            cross = self.n_layers * attn  # cross-attention per decoder layer
+            total += enc + cross
+        return int(total)
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: top_k of n_experts)."""
+        if not self.uses_moe:
+            return self.param_count()
+        total = self.param_count()
+        m = self.moe
+        dense_eq = self.d_model * self.d_ff * (3 if self.glu else 2)
+        n_moe_layers = sum(
+            self.n_blocks for s in self.block_pattern if s.ffn == "moe"
+        )
+        total -= n_moe_layers * (m.n_experts - m.top_k) * dense_eq
+        return int(total)
+
+
+@dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # 'train' | 'prefill' | 'decode'
+
+
+INPUT_SHAPES = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}

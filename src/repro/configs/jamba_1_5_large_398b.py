@@ -1,0 +1,43 @@
+"""jamba-1.5-large-398b [hybrid] — AI21 Jamba-1.5-Large [arXiv:2403.19887].
+
+72L d_model=8192 64H (GQA kv=8) d_ff=24576 vocab=65536, MoE 16 experts top-2.
+Mamba+attention 1:7 interleave (one attention layer per 8-layer block, as in
+the Jamba block structure), MoE applied every other layer.
+"""
+from repro.configs.base import LayerSpec, MambaConfig, ModelConfig, MoEConfig
+
+# One Jamba block = 8 layers: attention at position 4, Mamba elsewhere
+# (1:7 attn:mamba); MoE FFN on odd positions (every other layer).
+_PATTERN = tuple(
+    LayerSpec(
+        mixer="attn" if i == 4 else "mamba",
+        ffn="moe" if i % 2 == 1 else "dense",
+    )
+    for i in range(8)
+)
+
+CONFIG = ModelConfig(
+    name="jamba-1.5-large-398b",
+    family="hybrid",
+    n_layers=72,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    d_ff=24576,
+    vocab=65536,
+    moe=MoEConfig(n_experts=16, top_k=2),
+    mamba=MambaConfig(d_state=16, d_conv=4, expand=2),
+    block_pattern=_PATTERN,
+    rope="none",  # Jamba uses no positional encoding (Mamba carries position)
+    # In long-context mode the 1-in-8 attention layers fall back to a
+    # sliding window so 500k decode stays sub-quadratic.
+    long_context_window=4096,
+    param_sharding="fsdp",
+    # 398B on 256x16GB chips: bf16 grads + Adam moments, 4 microbatches
+    # (memory budget in DESIGN.md §2.5).
+    grad_dtype="bfloat16",
+    moment_dtype="bfloat16",
+    # §Perf hillclimb C2: mb=8 minimizes peak temp (60.5 GiB @4, 45.7 @8,
+    # 49.7 @16 on the CPU dry-run; see EXPERIMENTS.md §Perf).
+    microbatches=8,
+)

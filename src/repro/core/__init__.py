@@ -1,0 +1,3 @@
+# The paper's techniques (see DESIGN.md table): weight_update_sharding
+# (C1), gradient_summation (C2), spatial_partitioning (C3),
+# distributed_eval (C4), distributed_norm (C5).

@@ -1,0 +1,228 @@
+"""Weight-update sharding (paper §2 "Weight update sharding", Fig. 4; C1).
+
+When per-core batch is small, the (replicated) optimizer update becomes a
+serial bottleneck: the paper measures ~6% of step time for ResNet-50/LARS
+on 2048 cores and ~45% for Transformer/ADAM. The fix: shard the optimizer
+state and the update computation across the data-parallel cores, feed each
+shard with a reduce-scattered gradient, and all-gather the fresh weights.
+
+Two implementations, tested equivalent to the unsharded update:
+
+1. ``sharded_update`` — explicit shard_map: flatten (params, grads, moments)
+   into contiguous buffers (the paper's non-contiguous-tensor pipelining,
+   shared with C2), ``psum_scatter`` the grads, run the optimizer on the
+   1/N-size shard, ``all_gather`` the new weights. This is the
+   paper-faithful, inspectable path.
+
+2. The GSPMD path used inside pjit'd train steps: optimizer-state
+   shardings from ``repro.dist.opt_state_specs`` put the 'data' axis on the
+   moments, and XLA inserts the same reduce-scatter + all-gather. (See
+   ``repro.train.steps``.)
+
+Limitation of the explicit path: per-tensor norms (LARS) need the whole
+tensor, so ``sharded_update`` applies to element-wise optimizers (SGD-M,
+Adam); for LARS it shards at tensor granularity instead (each core updates
+a subset of whole tensors — exactly the XLA implementation choice the
+paper describes for non-elementwise updates).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+from jax import shard_map
+
+from repro.core.gradient_summation import flatten_tree, unflatten_tree
+from repro.optim.base import Optimizer
+
+
+# --------------------------------------------------------------------------- #
+# Element-wise optimizers: flat-buffer sharded update.
+# --------------------------------------------------------------------------- #
+def _flat_adam_update(w, g, m, v, *, lr, b1, b2, eps, weight_decay, t):
+    m_new = b1 * m + (1 - b1) * g
+    v_new = b2 * v + (1 - b2) * g * g
+    upd = (m_new / (1 - b1 ** t)) / (jnp.sqrt(v_new / (1 - b2 ** t)) + eps)
+    if weight_decay:
+        upd = upd + weight_decay * w
+    return w - lr * upd, m_new, v_new
+
+
+def _flat_sgdm_update(w, g, m, *, lr, momentum, weight_decay):
+    g = g + weight_decay * w
+    m_new = momentum * m + g
+    return w - lr * m_new, m_new
+
+
+def sharded_update(
+    optimizer: Optimizer,
+    lr_schedule,
+    mesh: Mesh,
+    *,
+    scatter_axis: str = "data",
+    reduce_axis: Optional[str] = None,
+):
+    """Build a WUS update fn: (grads, state, params) -> (params, state).
+
+    Gradients enter as per-device local sums (replicated layout); weights
+    leave replicated (all-gathered). Optimizer moments live scattered: the
+    state holds flat 1/N shards, which is the memory saving of Fig. 4.
+    """
+    if reduce_axis is not None and reduce_axis not in mesh.axis_names:
+        reduce_axis = None
+    n = mesh.shape[scatter_axis]
+    name = optimizer.name
+    hyper = optimizer.hyper
+
+    def init(params):
+        flat, _ = flatten_tree(params, pad_multiple=n)
+        mk = lambda: shard_map(
+            lambda b: jnp.zeros((b.size // n,), jnp.float32),
+            mesh=mesh, in_specs=P(), out_specs=P(scatter_axis),
+            check_vma=False,
+        )(flat)
+        state = {"step": jnp.zeros((), jnp.int32), "m": mk()}
+        if name == "adam":
+            state["v"] = mk()
+        return state
+
+    def update(grads, state, params):
+        step = state["step"]
+        lr = lr_schedule(step)
+        t = jnp.asarray(step, jnp.float32) + 1.0
+        w_flat, w_meta = flatten_tree(params, pad_multiple=n)
+        g_flat, _ = flatten_tree(grads, pad_multiple=n)
+
+        if name == "adam":
+
+            @functools.partial(
+                shard_map, mesh=mesh,
+                in_specs=(P(), P(), P(scatter_axis), P(scatter_axis)),
+                out_specs=(P(), P(scatter_axis), P(scatter_axis)),
+                check_vma=False,
+            )
+            def run(w, g, m, v):
+                g_sh = jax.lax.psum_scatter(g, scatter_axis, tiled=True)
+                if reduce_axis is not None:
+                    g_sh = jax.lax.psum(g_sh, reduce_axis)
+                idx = jax.lax.axis_index(scatter_axis)
+                sz = w.size // n
+                w_sh = jax.lax.dynamic_slice(w, (idx * sz,), (sz,))
+                w_new, m_new, v_new = _flat_adam_update(
+                    w_sh, g_sh, m, v, lr=lr, b1=hyper["b1"], b2=hyper["b2"],
+                    eps=hyper["eps"], weight_decay=hyper["weight_decay"], t=t,
+                )
+                w_full = jax.lax.all_gather(w_new, scatter_axis, tiled=True)
+                return w_full, m_new, v_new
+
+            w_new, m_new, v_new = run(w_flat, g_flat, state["m"], state["v"])
+            new_state = {"step": step + 1, "m": m_new, "v": v_new}
+        elif name == "sgd_momentum":
+
+            @functools.partial(
+                shard_map, mesh=mesh,
+                in_specs=(P(), P(), P(scatter_axis)),
+                out_specs=(P(), P(scatter_axis)),
+                check_vma=False,
+            )
+            def run(w, g, m):
+                g_sh = jax.lax.psum_scatter(g, scatter_axis, tiled=True)
+                if reduce_axis is not None:
+                    g_sh = jax.lax.psum(g_sh, reduce_axis)
+                idx = jax.lax.axis_index(scatter_axis)
+                sz = w.size // n
+                w_sh = jax.lax.dynamic_slice(w, (idx * sz,), (sz,))
+                w_new, m_new = _flat_sgdm_update(
+                    w_sh, g_sh, m, lr=lr, momentum=hyper["momentum"],
+                    weight_decay=hyper["weight_decay"],
+                )
+                return jax.lax.all_gather(w_new, scatter_axis, tiled=True), m_new
+
+            w_new, m_new = run(w_flat, g_flat, state["m"])
+            new_state = {"step": step + 1, "m": m_new}
+        else:
+            raise ValueError(
+                f"flat WUS supports elementwise optimizers, got {name}; "
+                "use tensor_sharded_update for LARS"
+            )
+        return unflatten_tree(w_new, w_meta), new_state
+
+    return init, update
+
+
+# --------------------------------------------------------------------------- #
+# Tensor-granular WUS for LARS (per-tensor norms need whole tensors).
+# --------------------------------------------------------------------------- #
+def lars_sharded_update(lr_schedule, mesh: Mesh, *, momentum=0.9,
+                        weight_decay=1e-4, eta=0.001, eps=1e-9,
+                        scaled_momentum=True, scatter_axis: str = "data"):
+    """Round-robin whole tensors across the scatter axis.
+
+    Each device runs the LARS update only for the tensors it owns
+    (``lax.cond`` skips the rest at runtime), then a sum over disjoint
+    supports rebuilds the full tree — an all-gather at tensor granularity,
+    matching the paper's description for optimizers with per-tensor
+    reductions like LARS.
+    """
+    from repro.kernels import ref as kref
+
+    n = mesh.shape[scatter_axis]
+
+    def init(params):
+        return {
+            "m": jax.tree_util.tree_map(
+                lambda w: jnp.zeros_like(w, jnp.float32), params
+            ),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params):
+        step = state["step"]
+        lr = lr_schedule(step)
+        leaves_w = jax.tree_util.tree_leaves(params)
+        owner = [i % n for i in range(len(leaves_w))]
+
+        @functools.partial(
+            shard_map, mesh=mesh, in_specs=(P(), P(), P()), out_specs=P(),
+            check_vma=False,
+        )
+        def run(params_, grads_, m_):
+            idx = jax.lax.axis_index(scatter_axis)
+            lw, td = jax.tree_util.tree_flatten(params_)
+            lg = jax.tree_util.tree_leaves(grads_)
+            lm = jax.tree_util.tree_leaves(m_)
+            new_w, new_m = [], []
+            for i, (w, g, m) in enumerate(zip(lw, lg, lm)):
+                g = jax.lax.psum(g, scatter_axis)
+
+                def do(w=w, g=g, m=m):
+                    if w.ndim <= 1:
+                        mn = momentum * m + g.astype(jnp.float32)
+                        return (
+                            w.astype(jnp.float32) - lr * mn
+                        ).astype(w.dtype), mn
+                    return kref.lars_update(
+                        w, g, m, lr=lr, weight_decay=weight_decay,
+                        momentum=momentum, eta=eta, eps=eps,
+                        scaled_momentum=scaled_momentum,
+                    )
+
+                def skip(w=w, m=m):
+                    return jnp.zeros_like(w), jnp.zeros_like(m)
+
+                wn, mn = jax.lax.cond(idx == owner[i], do, skip)
+                new_w.append(jax.lax.psum(wn, scatter_axis))
+                new_m.append(jax.lax.psum(mn, scatter_axis))
+            return (
+                jax.tree_util.tree_unflatten(td, new_w),
+                jax.tree_util.tree_unflatten(td, new_m),
+            )
+
+        new_params, new_m = run(params, grads, state["m"])
+        return new_params, {"m": new_m, "step": step + 1}
+
+    return init, update

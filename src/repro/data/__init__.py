@@ -1,0 +1,3 @@
+from repro.data import bucketization, pipeline
+
+__all__ = ["bucketization", "pipeline"]

@@ -1,0 +1,3 @@
+# Pallas TPU kernels for the compute hot-spots (flash_attention,
+# lstm_cell, lars, mamba) + ops.py (backend-dispatching wrappers) +
+# ref.py (pure-jnp oracles used by the allclose sweeps).

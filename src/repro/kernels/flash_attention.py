@@ -1,0 +1,124 @@
+"""Blocked online-softmax attention Pallas kernel (TPU target).
+
+Tiling: grid (B, H, nQ, nKV); each step loads a (block_q, D) query tile and
+a (block_k, D) key/value tile into VMEM, runs the (block_q x block_k) MXU
+matmul, and maintains fp32 online-softmax accumulators in VMEM scratch
+across the sequential minor grid dimension (TPU grids execute
+minor-to-major, so the KV axis acts as the inner loop). Blocks default to
+128 — MXU-aligned on both matmul dims.
+
+Supports causal + sliding-window masks and GQA (the K/V index map folds
+the query head to its KV head). Validated against ``kernels/ref.py`` in
+interpret mode on CPU (tests/test_kernels.py).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc, m, l, *, scale, causal, window,
+            q_offset, k_offset, n_kv, block_q, block_k, sq, sk):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m[...] = jnp.full_like(m, NEG_INF)
+        l[...] = jnp.zeros_like(l)
+        acc[...] = jnp.zeros_like(acc)
+
+    qb = q_ref[0, :, 0, :].astype(jnp.float32) * scale  # (bq, D)
+    kb = k_ref[0, :, 0, :].astype(jnp.float32)          # (bk, D)
+    vb = v_ref[0, :, 0, :].astype(jnp.float32)
+    s = jax.lax.dot_general(
+        qb, kb, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # (bq, bk)
+
+    rows = jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+    q_idx = qi * block_q + rows
+    k_idx = ki * block_k + cols
+    qpos = q_offset + q_idx
+    kpos = k_offset + k_idx
+    mask = (q_idx < sq) & (k_idx < sk) & (kpos >= 0)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l[...] = l[...] * corr + p.sum(axis=-1)
+    acc[...] = acc[...] * corr[:, None] + jax.lax.dot_general(
+        p, vb, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    m[...] = m_new
+
+    @pl.when(ki == n_kv - 1)
+    def _finish():
+        o_ref[0, :, 0, :] = (
+            acc[...] / jnp.maximum(l[...], 1e-30)[:, None]
+        ).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal=True, window=None, q_offset=0,
+                    k_offset=0, scale=None, interpret=False,
+                    block_q=128, block_k=128):
+    """q: (B, Sq, H, D); k, v: (B, Sk, K, D) with H % K == 0."""
+    if not isinstance(q_offset, int) or not isinstance(k_offset, int):
+        raise ValueError("flash kernel needs static offsets; use the jnp "
+                         "path for traced offsets")
+    B, Sq, H, D = q.shape
+    _, Sk, K, _ = k.shape
+    G = H // K
+    scale = scale if scale is not None else D ** -0.5
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Sk)
+    n_q = -(-Sq // block_q)
+    n_kv = -(-Sk // block_k)
+    pad_q = n_q * block_q - Sq
+    pad_k = n_kv * block_k - Sk
+    qp = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0))) if pad_q else q
+    kp = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0))) if pad_k else k
+    vp = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0))) if pad_k else v
+
+    kernel = functools.partial(
+        _kernel, scale=scale, causal=causal, window=window,
+        q_offset=q_offset, k_offset=k_offset, n_kv=n_kv,
+        block_q=block_q, block_k=block_k, sq=Sq, sk=Sk,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, H, n_q, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, block_q, 1, D),
+                         lambda b, h, qi, ki: (b, qi, h, 0)),
+            pl.BlockSpec((1, block_k, 1, D),
+                         lambda b, h, qi, ki: (b, ki, h // G, 0)),
+            pl.BlockSpec((1, block_k, 1, D),
+                         lambda b, h, qi, ki: (b, ki, h // G, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, 1, D),
+                               lambda b, h, qi, ki: (b, qi, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, n_q * block_q, H, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, D), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qp, kp, vp)
+    return out[:, :Sq]

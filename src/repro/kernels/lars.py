@@ -1,0 +1,100 @@
+"""Fused LARS update Pallas kernels (weight-update hot spot, C1+C6).
+
+Two-phase at block granularity (the per-tensor ||w||, ||g|| reductions need
+a global sum before the elementwise update):
+  1. ``_norms_kernel``: per-block partial sums of w^2 and g^2 (VMEM tiles,
+     fp32 accumulation) -> tiny (n_blocks, 2) output reduced in one add;
+  2. ``_update_kernel``: elementwise momentum + trust-ratio update with the
+     scalar trust ratio prefetch-broadcast to every block.
+
+This is the kernel the paper's weight-update sharding runs on each core's
+1/N shard of the flattened parameter buffer.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+_BLOCK = 65536  # 64k elements per tile: 256 KiB fp32 in VMEM x 3 operands
+
+
+def _norms_kernel(w_ref, g_ref, out_ref):
+    w = w_ref[...].astype(jnp.float32)
+    g = g_ref[...].astype(jnp.float32)
+    out_ref[0, 0] = jnp.sum(w * w)
+    out_ref[0, 1] = jnp.sum(g * g)
+
+
+def _update_kernel(w_ref, g_ref, m_ref, t_ref, w_out, m_out, *, lr,
+                   weight_decay, momentum, scaled_momentum):
+    w = w_ref[...].astype(jnp.float32)
+    g = g_ref[...].astype(jnp.float32)
+    m = m_ref[...].astype(jnp.float32)
+    trust = t_ref[0, 0]
+    upd = g + weight_decay * w
+    if scaled_momentum:
+        m_new = momentum * m + upd
+        w_new = w - lr * trust * m_new
+    else:
+        m_new = momentum * m + lr * trust * upd
+        w_new = w - m_new
+    w_out[...] = w_new.astype(w_out.dtype)
+    m_out[...] = m_new.astype(m_out.dtype)
+
+
+def lars_update(w, g, m, *, lr, weight_decay, momentum, eta, eps=1e-9,
+                scaled_momentum=True, interpret=False):
+    """Shapes/semantics identical to kernels.ref.lars_update."""
+    shape, dtype = w.shape, w.dtype
+    n = w.size
+    blk = min(_BLOCK, n)
+    n_blocks = -(-n // blk)
+    pad = n_blocks * blk - n
+    wf = jnp.pad(w.reshape(-1), (0, pad)).reshape(n_blocks, blk)
+    gf = jnp.pad(g.reshape(-1), (0, pad)).reshape(n_blocks, blk)
+    mf = jnp.pad(m.reshape(-1).astype(jnp.float32), (0, pad)).reshape(
+        n_blocks, blk)
+
+    partial = pl.pallas_call(
+        _norms_kernel,
+        grid=(n_blocks,),
+        in_specs=[pl.BlockSpec((1, blk), lambda i: (i, 0)),
+                  pl.BlockSpec((1, blk), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, 2), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_blocks, 2), jnp.float32),
+        interpret=interpret,
+    )(wf, gf)
+    sums = partial.sum(axis=0)
+    w_norm = jnp.sqrt(sums[0])
+    g_norm = jnp.sqrt(sums[1])
+    trust = jnp.where(
+        (w_norm > 0) & (g_norm > 0),
+        eta * w_norm / (g_norm + weight_decay * w_norm + eps),
+        1.0,
+    ).reshape(1, 1)
+
+    w_new, m_new = pl.pallas_call(
+        functools.partial(
+            _update_kernel, lr=lr, weight_decay=weight_decay,
+            momentum=momentum, scaled_momentum=scaled_momentum,
+        ),
+        grid=(n_blocks,),
+        in_specs=[
+            pl.BlockSpec((1, blk), lambda i: (i, 0)),
+            pl.BlockSpec((1, blk), lambda i: (i, 0)),
+            pl.BlockSpec((1, blk), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),  # broadcast trust
+        ],
+        out_specs=[pl.BlockSpec((1, blk), lambda i: (i, 0)),
+                   pl.BlockSpec((1, blk), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((n_blocks, blk), jnp.float32),
+                   jax.ShapeDtypeStruct((n_blocks, blk), jnp.float32)],
+        interpret=interpret,
+    )(wf, gf, mf, trust)
+    w_out = w_new.reshape(-1)[:n].reshape(shape).astype(dtype)
+    m_out = m_new.reshape(-1)[:n].reshape(shape).astype(m.dtype)
+    return w_out, m_out

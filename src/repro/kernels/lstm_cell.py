@@ -1,0 +1,72 @@
+"""Fused LSTM cell Pallas kernel (GNMT hot spot, paper C9).
+
+One VMEM-resident kernel computes gates = x_proj + h @ W_h + b and applies
+the sigmoid/tanh nonlinearities + state update — the paper's observation is
+that with the input projection hoisted out of the RNN loop (see
+models/gnmt.py), this cell is the entire loop body and is memory-bound at
+small per-core batch; fusing it avoids materializing the (B, 4F) gates in
+HBM. Grid tiles the batch; weights stay resident across the grid.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(xp_ref, h_ref, c_ref, w_ref, b_ref, h_out, c_out):
+    xp = xp_ref[...].astype(jnp.float32)           # (bb, 4F)
+    h = h_ref[...].astype(jnp.float32)             # (bb, F)
+    w = w_ref[...].astype(jnp.float32)             # (F, 4F)
+    b = b_ref[...].astype(jnp.float32)             # (1, 4F)
+    gates = xp + jax.lax.dot_general(
+        h, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    ) + b
+    F = h.shape[-1]
+    i = jax.nn.sigmoid(gates[:, :F])
+    f = jax.nn.sigmoid(gates[:, F:2 * F])
+    g = jnp.tanh(gates[:, 2 * F:3 * F])
+    o = jax.nn.sigmoid(gates[:, 3 * F:])
+    c = f * c_ref[...].astype(jnp.float32) + i * g
+    h_out[...] = (o * jnp.tanh(c)).astype(h_out.dtype)
+    c_out[...] = c.astype(c_out.dtype)
+
+
+def lstm_cell(x_proj, h_prev, c_prev, w_h, b, *, interpret=False,
+              block_b=128):
+    """x_proj: (B, 4F); h_prev: (B, F); c_prev: (B, F); w_h: (F, 4F);
+    b: (4F,). Gate order i,f,g,o. Returns (h, c) — h in x_proj.dtype,
+    c fp32 (matches kernels/ref.py oracle)."""
+    B, F4 = x_proj.shape
+    F = F4 // 4
+    bb = min(block_b, B)
+    n_b = -(-B // bb)
+    pad = n_b * bb - B
+    if pad:
+        x_proj = jnp.pad(x_proj, ((0, pad), (0, 0)))
+        h_prev = jnp.pad(h_prev, ((0, pad), (0, 0)))
+        c_prev = jnp.pad(c_prev, ((0, pad), (0, 0)))
+    b2 = b.reshape(1, F4)
+    h, c = pl.pallas_call(
+        _kernel,
+        grid=(n_b,),
+        in_specs=[
+            pl.BlockSpec((bb, F4), lambda i: (i, 0)),
+            pl.BlockSpec((bb, F), lambda i: (i, 0)),
+            pl.BlockSpec((bb, F), lambda i: (i, 0)),
+            pl.BlockSpec((F, F4), lambda i: (0, 0)),   # resident weights
+            pl.BlockSpec((1, F4), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bb, F), lambda i: (i, 0)),
+            pl.BlockSpec((bb, F), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_b * bb, F), x_proj.dtype),
+            jax.ShapeDtypeStruct((n_b * bb, F), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x_proj, h_prev, c_prev, w_h, b2)
+    return h[:B], c[:B]

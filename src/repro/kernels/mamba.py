@@ -1,0 +1,80 @@
+"""Selective-scan (Mamba S6) Pallas kernel — the TPU-native adaptation of
+the CUDA selective_scan kernel.
+
+GPU version: one thread block per (batch, channel-chunk), state in
+registers/shared memory. TPU adaptation (DESIGN.md §2): grid over
+(batch, channel tiles); the (block_d, N) recurrent state lives in VMEM
+scratch for the whole time loop, timesteps stream through VMEM tiles, and
+each step is a (block_d, N) elementwise FMA on the VPU — the recurrence
+never round-trips HBM, which is the entire point of the fused kernel
+(the jnp fallback writes (B, S, D, N) decay products to HBM).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(u_ref, dt_ref, A_ref, B_ref, C_ref, D_ref, y_ref, h_out, h, *,
+            seq_len):
+    A = A_ref[...].astype(jnp.float32)        # (bd, N)
+    Dp = D_ref[...].astype(jnp.float32)       # (1, bd)
+    h[...] = jnp.zeros_like(h)
+
+    def step(t, _):
+        u_t = u_ref[0, t, :].astype(jnp.float32)       # (bd,)
+        dt_t = dt_ref[0, t, :].astype(jnp.float32)     # (bd,)
+        B_t = B_ref[0, t, :].astype(jnp.float32)       # (N,)
+        C_t = C_ref[0, t, :].astype(jnp.float32)       # (N,)
+        da = jnp.exp(dt_t[:, None] * A)                # (bd, N)
+        h[...] = da * h[...] + (dt_t * u_t)[:, None] * B_t[None, :]
+        y = jnp.sum(h[...] * C_t[None, :], axis=-1) + Dp[0] * u_t
+        y_ref[0, t, :] = y.astype(y_ref.dtype)
+        return 0
+
+    jax.lax.fori_loop(0, seq_len, step, 0)
+    h_out[0] = h[...].astype(h_out.dtype)
+
+
+def mamba_scan(u, dt, A, B, C, D, *, interpret=False, block_d=512):
+    """Shapes as kernels.ref.mamba_scan: u, dt (Bt,S,Di); A (Di,N);
+    B, C (Bt,S,N); D (Di,). Returns (y (Bt,S,Di), h (Bt,Di,N) fp32)."""
+    Bt, S, Di = u.shape
+    N = A.shape[-1]
+    bd = min(block_d, Di)
+    n_d = -(-Di // bd)
+    pad = n_d * bd - Di
+    if pad:
+        u = jnp.pad(u, ((0, 0), (0, 0), (0, pad)))
+        dt = jnp.pad(dt, ((0, 0), (0, 0), (0, pad)))
+        A = jnp.pad(A, ((0, pad), (0, 0)))
+        D = jnp.pad(D, (0, pad))
+    D2 = D.reshape(1, -1)
+
+    y, h = pl.pallas_call(
+        functools.partial(_kernel, seq_len=S),
+        grid=(Bt, n_d),
+        in_specs=[
+            pl.BlockSpec((1, S, bd), lambda b, d: (b, 0, d)),   # u
+            pl.BlockSpec((1, S, bd), lambda b, d: (b, 0, d)),   # dt
+            pl.BlockSpec((bd, N), lambda b, d: (d, 0)),         # A
+            pl.BlockSpec((1, S, N), lambda b, d: (b, 0, 0)),    # B
+            pl.BlockSpec((1, S, N), lambda b, d: (b, 0, 0)),    # C
+            pl.BlockSpec((1, bd), lambda b, d: (0, d)),         # D
+        ],
+        out_specs=[
+            pl.BlockSpec((1, S, bd), lambda b, d: (b, 0, d)),
+            pl.BlockSpec((1, bd, N), lambda b, d: (b, d, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bt, S, n_d * bd), u.dtype),
+            jax.ShapeDtypeStruct((Bt, n_d * bd, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((bd, N), jnp.float32)],
+        interpret=interpret,
+    )(u, dt, A, B, C, D2)
+    return y[..., :Di], h[:, :Di]

@@ -1,0 +1,283 @@
+"""Public jit'd wrappers for the compute hot-spots.
+
+Backend selection: on TPU the Pallas kernels are used; on CPU (this
+container) the memory-safe pure-JAX implementations below are used for
+model execution and dry-run lowering (so ``cost_analysis`` reflects the
+real math), while the Pallas kernels are validated separately with
+``interpret=True`` against ``kernels/ref.py``.
+
+Set ``REPRO_USE_PALLAS=interpret`` to route model execution through the
+Pallas kernels in interpret mode (slow; used by kernel integration tests).
+"""
+from __future__ import annotations
+
+import functools
+import math
+import os
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+
+
+def _pallas_mode() -> Optional[str]:
+    env = os.environ.get("REPRO_USE_PALLAS", "")
+    if env in ("1", "tpu"):
+        return "tpu"
+    if env == "interpret":
+        return "interpret"
+    if jax.default_backend() == "tpu":
+        return "tpu"
+    return None
+
+
+# --------------------------------------------------------------------------- #
+# Attention.
+# --------------------------------------------------------------------------- #
+def attention(q, k, v, *, causal=True, window=None, q_offset=0, k_offset=0,
+              scale=None, chunk=512):
+    """Multi-head (GQA) attention; flash kernel on TPU, chunked jnp off-TPU.
+
+    q: (B, Sq, H, D); k, v: (B, Sk, K, D). Softmax accumulators in fp32.
+    """
+    mode = _pallas_mode()
+    if mode is not None:
+        from repro.kernels import flash_attention as fa
+
+        return fa.flash_attention(
+            q, k, v, causal=causal, window=window, q_offset=q_offset,
+            k_offset=k_offset, scale=scale, interpret=(mode == "interpret"),
+        )
+    return _chunked_attention(
+        q, k, v, causal=causal, window=window, q_offset=q_offset,
+        k_offset=k_offset, scale=scale, chunk=chunk,
+    )
+
+
+def _chunked_attention(q, k, v, *, causal, window, q_offset, k_offset, scale,
+                       chunk, block_skip=True):
+    """Online-softmax attention over KV chunks (O(S) memory).
+
+    §Perf hillclimb A (block skipping): with static offsets, query chunks
+    only visit the KV chunks their causal/window band intersects, instead
+    of scanning all of them with masking — for a 32k causal prefill that
+    halves attention FLOPs, and for sliding-window prefill it drops them to
+    O(S*W). Falls back to the masked full scan for traced offsets
+    (sequence-parallel shard_map path).
+    """
+    B, Sq, H, D = q.shape
+    _, Sk, K, _ = k.shape
+    G = H // K
+    scale = scale if scale is not None else D ** -0.5
+    qf_all = (q.astype(jnp.float32) * scale).reshape(B, Sq, K, G, D)
+
+    ck = min(chunk, Sk)
+    n_chunks = -(-Sk // ck)
+    pad = n_chunks * ck - Sk
+    kp = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = jnp.moveaxis(
+        kp.reshape(B, n_chunks, ck, K, D).astype(jnp.float32), 1, 0)
+    vc = jnp.moveaxis(
+        vp.reshape(B, n_chunks, ck, K, D).astype(jnp.float32), 1, 0)
+
+    def run_range(qf, q_lo, chunk_lo, chunk_hi):
+        """Attend queries qf (B,nq,K,G,D) at positions q_offset+q_lo+i to
+        KV chunks [chunk_lo, chunk_hi).
+
+        The body dynamic-indexes into the SHARED kc/vc stacks (scanning
+        only chunk indices) — materializing kc[lo:hi] slices per query
+        chunk would keep O(n_q^2) KV copies live at once."""
+        nq = qf.shape[1]
+        qpos = q_offset + q_lo + jnp.arange(nq)
+
+        def body(carry, cidx):
+            m, l, acc = carry
+            k_i = jax.lax.dynamic_index_in_dim(kc, cidx, 0, keepdims=False)
+            v_i = jax.lax.dynamic_index_in_dim(vc, cidx, 0, keepdims=False)
+            logits = jnp.einsum("bqkgd,bskd->bqkgs", qf, k_i)
+            kidx = cidx * ck + jnp.arange(ck)
+            kpos = k_offset + kidx
+            mask = (kidx[None, :] < Sk) & (kpos[None, :] >= 0)
+            if causal:
+                mask &= kpos[None, :] <= qpos[:, None]
+            if window is not None:
+                mask &= kpos[None, :] > qpos[:, None] - window
+            logits = jnp.where(mask[None, :, None, None, :], logits, -1e30)
+            m_new = jnp.maximum(m, logits.max(axis=-1))
+            p = jnp.exp(logits - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bqkgs,bskd->bqkgd", p, v_i
+            )
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, nq, K, G), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((B, nq, K, G), jnp.float32)
+        acc0 = jnp.zeros((B, nq, K, G, D), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            body, (m0, l0, acc0), jnp.arange(chunk_lo, chunk_hi)
+        )
+        return acc / jnp.maximum(l, 1e-30)[..., None]
+
+    skippable = (
+        block_skip and causal and isinstance(q_offset, int)
+        and isinstance(k_offset, int) and Sq > ck
+    )
+    if not skippable:
+        out = run_range(qf_all, 0, 0, n_chunks)
+        return out.reshape(B, Sq, H, D).astype(q.dtype)
+
+    cq = ck  # query chunk = kv chunk size
+    n_q = -(-Sq // cq)
+    outs = []
+    for qi in range(n_q):
+        q_lo = qi * cq
+        q_hi = min(Sq, q_lo + cq)
+        qf = qf_all[:, q_lo:q_hi]
+        # band of kv chunks this query chunk can see
+        hi_pos = q_offset + q_hi - 1 - k_offset      # newest visible key
+        chunk_hi = min(n_chunks, hi_pos // ck + 1)
+        if window is not None:
+            lo_pos = max(q_offset + q_lo - window + 1 - k_offset, 0)
+            chunk_lo = min(max(lo_pos // ck, 0), chunk_hi)
+        else:
+            chunk_lo = 0
+        if chunk_hi <= chunk_lo:
+            outs.append(jnp.zeros((B, q_hi - q_lo, K, G, D), jnp.float32))
+            continue
+        outs.append(run_range(qf, q_lo, chunk_lo, chunk_hi))
+    out = jnp.concatenate(outs, axis=1)
+    return out.reshape(B, Sq, H, D).astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, slot_pos, *, pos, window=None,
+                     scale=None, k_scale=None, v_scale=None):
+    """Single-token attention against a (possibly ring-buffer) KV cache.
+
+    q: (B, 1, H, D). k_cache/v_cache: (B, L, K, D) in bf16 or int8.
+    slot_pos: (B, L) int32 — absolute position stored in each slot (-1 empty).
+    k_scale/v_scale: (B, L, K) dequant scales when the cache is int8.
+    """
+    B, _, H, D = q.shape
+    _, L, K, _ = k_cache.shape
+    G = H // K
+    scale = scale if scale is not None else D ** -0.5
+    kf = k_cache.astype(jnp.float32)
+    vf = v_cache.astype(jnp.float32)
+    if k_scale is not None:
+        kf = kf * k_scale[..., None].astype(jnp.float32)
+    if v_scale is not None:
+        vf = vf * v_scale[..., None].astype(jnp.float32)
+    qf = (q.astype(jnp.float32) * scale).reshape(B, K, G, D)
+    logits = jnp.einsum("bkgd,blkd->bkgl", qf, kf)  # (B,K,G,L)
+    valid = (slot_pos >= 0) & (slot_pos <= pos)
+    if window is not None:
+        valid &= slot_pos > pos - window
+    logits = jnp.where(valid[:, None, None, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgl,blkd->bkgd", probs, vf)
+    return out.reshape(B, 1, H, D).astype(q.dtype)
+
+
+# --------------------------------------------------------------------------- #
+# LSTM cell (GNMT hot spot, C9).
+# --------------------------------------------------------------------------- #
+def lstm_cell(x_proj, h_prev, c_prev, w_h, b):
+    mode = _pallas_mode()
+    if mode is not None:
+        from repro.kernels import lstm_cell as lk
+
+        return lk.lstm_cell(
+            x_proj, h_prev, c_prev, w_h, b, interpret=(mode == "interpret")
+        )
+    return _ref.lstm_cell(x_proj, h_prev, c_prev, w_h, b)
+
+
+# --------------------------------------------------------------------------- #
+# LARS fused update (C1/C6 hot spot).
+# --------------------------------------------------------------------------- #
+def lars_update(w, g, m, *, lr, weight_decay, momentum, eta, eps=1e-9,
+                scaled_momentum=True):
+    mode = _pallas_mode()
+    if mode is not None and w.ndim >= 1 and w.size >= 1024:
+        from repro.kernels import lars as lkr
+
+        return lkr.lars_update(
+            w, g, m, lr=lr, weight_decay=weight_decay, momentum=momentum,
+            eta=eta, eps=eps, scaled_momentum=scaled_momentum,
+            interpret=(mode == "interpret"),
+        )
+    return _ref.lars_update(
+        w, g, m, lr=lr, weight_decay=weight_decay, momentum=momentum,
+        eta=eta, eps=eps, scaled_momentum=scaled_momentum,
+    )
+
+
+# --------------------------------------------------------------------------- #
+# MoE gating (top-k + capacity dispatch).
+# --------------------------------------------------------------------------- #
+def moe_gating(x, router_w, *, top_k, capacity):
+    return _ref.moe_gating(x, router_w, top_k=top_k, capacity=capacity)
+
+
+# --------------------------------------------------------------------------- #
+# Mamba selective scan.
+# --------------------------------------------------------------------------- #
+def mamba_scan(u, dt, A, B, C, D):
+    """lax.scan selective scan: O(S) memory, sequential over time.
+
+    Shapes as in kernels.ref.mamba_scan. Returns (y, final_state).
+    """
+    mode = _pallas_mode()
+    if mode is not None:
+        from repro.kernels import mamba as mk
+
+        return mk.mamba_scan(
+            u, dt, A, B, C, D, interpret=(mode == "interpret")
+        )
+    u32 = u.astype(jnp.float32)
+    dt32 = dt.astype(jnp.float32)
+    A32 = A.astype(jnp.float32)
+    B32 = B.astype(jnp.float32)
+    C32 = C.astype(jnp.float32)
+    D32 = D.astype(jnp.float32)
+    Bt, S, Di = u.shape
+    N = A.shape[-1]
+
+    def step(h, inp):
+        u_t, dt_t, B_t, C_t = inp  # (Bt,Di), (Bt,Di), (Bt,N), (Bt,N)
+        da = jnp.exp(dt_t[..., None] * A32[None])  # (Bt,Di,N)
+        h = da * h + dt_t[..., None] * B_t[:, None, :] * u_t[..., None]
+        y = jnp.einsum("bdn,bn->bd", h, C_t) + D32 * u_t
+        return h, y
+
+    from repro.models.scan_utils import chunked_scan
+
+    h0 = jnp.zeros((Bt, Di, N), jnp.float32)
+    xs = (
+        jnp.moveaxis(u32, 1, 0),
+        jnp.moveaxis(dt32, 1, 0),
+        jnp.moveaxis(B32, 1, 0),
+        jnp.moveaxis(C32, 1, 0),
+    )
+    # chunked+checkpointed: a plain scan would stash (S,Bt,Di,N) fp32 for
+    # the backward pass (gigabytes per layer at 4k tokens).
+    h, ys = chunked_scan(step, h0, xs, chunk=256)
+    y = jnp.moveaxis(ys, 0, 1).astype(u.dtype)
+    return y, h
+
+
+def mamba_step(h, u_t, dt_t, A, B_t, C_t, D):
+    """Single decode step of the selective scan. h: (Bt, Di, N)."""
+    da = jnp.exp(dt_t.astype(jnp.float32)[..., None] * A.astype(jnp.float32))
+    h = da * h + dt_t.astype(jnp.float32)[..., None] * B_t.astype(jnp.float32)[
+        :, None, :
+    ] * u_t.astype(jnp.float32)[..., None]
+    y = jnp.einsum("bdn,bn->bd", h, C_t.astype(jnp.float32)) + D.astype(
+        jnp.float32
+    ) * u_t.astype(jnp.float32)
+    return h, y.astype(u_t.dtype)

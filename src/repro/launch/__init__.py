@@ -1,0 +1,4 @@
+# Launch entry points: mesh.py (production meshes), specs.py
+# (input_specs), dryrun.py (multi-pod AOT compile), train.py (trainer CLI).
+# NOTE: dryrun.py must be the process entry point (it sets XLA_FLAGS
+# before jax initializes) — do not import it from library code.

@@ -1,0 +1,278 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("REPRO_EXTRA_XLA_FLAGS", "")
+)
+
+"""Multi-pod dry-run: AOT lower + compile every (architecture x input
+shape) on the production meshes, proving the distribution config is
+coherent without hardware.
+
+The two lines above MUST stay the first statements in this file: jax locks
+the device count at first init, and the dry-run needs 512 placeholder CPU
+devices to build the 2x16x16 mesh.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma-7b \
+      --shape train_4k [--multi-pod] [--json out.json]
+  PYTHONPATH=src python -m repro.launch.dryrun --all
+"""
+import argparse  # noqa: E402
+import json  # noqa: E402
+import re  # noqa: E402
+import sys  # noqa: E402
+import time  # noqa: E402
+from collections import defaultdict  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import INPUT_SHAPES, get_config, get_shape, list_archs  # noqa: E402
+from repro.dist import Rules  # noqa: E402
+from repro.launch import specs as S  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.train import steps as T  # noqa: E402
+
+
+# --------------------------------------------------------------------------- #
+# Collective-bytes extraction from the compiled/optimized HLO (for §Roofline:
+# cost_analysis has FLOPs and HBM bytes but not collective traffic).
+# --------------------------------------------------------------------------- #
+_COLL_RE = re.compile(
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"[-a-z0-9.]*\(",
+)
+_SHAPE_RE = re.compile(r"(f32|bf16|f16|s32|u32|s8|u8|pred|s64|f64)\[([0-9,]*)\]")
+_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1,
+          "u8": 1, "pred": 1, "s64": 8, "f64": 8}
+
+
+def collective_bytes(hlo_text: str):
+    """Sum result-shape bytes of every collective op, by kind.
+
+    Parses optimized HLO module text: lines like
+      %ag = bf16[2,1024]{...} all-gather(%x), ...
+    Returns dict kind -> bytes (per device, since post-SPMD shapes are
+    per-device)."""
+    out = defaultdict(int)
+    counts = defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(1)
+        if "start" in line and f"{kind}-done" in hlo_text:
+            pass  # async pairs: count the start (has the shape)
+        if f"{kind}-done" in line:
+            continue  # avoid double counting async done
+        lhs = line.split("=")[0] if "=" in line else ""
+        shapes = _SHAPE_RE.findall(line.split("=", 1)[1].split(kind)[0]) if "=" in line else []
+        nbytes = 0
+        for dt, dims in shapes:
+            n = 1
+            if dims:
+                for d in dims.split(","):
+                    n *= int(d)
+            nbytes += n * _BYTES.get(dt, 4)
+        out[kind] += nbytes
+        counts[kind] += 1
+    return dict(out), dict(counts)
+
+
+# --------------------------------------------------------------------------- #
+# Per-(arch, shape, mesh) dry run.
+# --------------------------------------------------------------------------- #
+def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
+               verbose: bool = True):
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    if shape.kind == "decode" and shape_name == "long_500k":
+        if not cfg.supports_long_context():
+            return {"arch": arch, "shape": shape_name,
+                    "multi_pod": multi_pod, "skipped": "no sub-quadratic "
+                    "long-context path (see DESIGN.md §Arch-applicability)"}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mode = cfg.param_sharding
+    # §Perf hillclimb B: REPRO_SERVE_MODE=tp2d switches serving shapes to
+    # weight-stationary 2-D tensor parallelism (see dist.sharding.Rules).
+    if shape.kind != "train" and os.environ.get("REPRO_SERVE_MODE"):
+        mode = os.environ["REPRO_SERVE_MODE"]
+    rules = Rules(mesh, mode, seq_parallel=cfg.seq_parallel)
+    t0 = time.time()
+
+    key = jax.random.PRNGKey(0)
+    if shape.kind == "train":
+        optimizer = T.make_optimizer(cfg)
+        state, axes = T.init_train_state(cfg, optimizer, key)
+        state_specs = T.train_state_specs(cfg, state, axes, rules)
+        batch = S.batch_structure(cfg, shape)
+        b_specs = T.batch_pspecs(batch, rules)
+        step = T.make_train_step(cfg, optimizer, rules, axes)
+        jitted = jax.jit(
+            step,
+            donate_argnums=(0,),  # alias state in/out (halves state memory)
+            in_shardings=(
+                jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s), state_specs),
+                jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s), b_specs),
+            ),
+            out_shardings=(
+                jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s), state_specs),
+                NamedSharding(mesh, P()),
+            ),
+        )
+        with mesh:
+            lowered = jitted.lower(state, batch)
+    elif shape.kind == "prefill":
+        params, axes = T.init_params_and_axes(cfg, key)
+        params = jax.tree_util.tree_map(
+            lambda s: jax.ShapeDtypeStruct(
+                s.shape,
+                jnp.bfloat16 if (s.dtype == jnp.float32 and len(s.shape) > 1)
+                else s.dtype,
+            ),
+            params,
+        )  # serving checkpoints are bf16
+        p_specs = T.param_specs_serving(cfg, params, axes, rules)
+        batch = S.batch_structure(cfg, shape)
+        b_specs = T.batch_pspecs(batch, rules)
+        cache = S.cache_structure(cfg, shape)
+        c_specs = T.cache_pspecs(cfg, cache, rules)
+        step = T.make_prefill_step(cfg, shape, rules)
+        ns = lambda tree: jax.tree_util.tree_map(
+            lambda s: NamedSharding(mesh, s), tree
+        )
+        jitted = jax.jit(
+            step,
+            in_shardings=(ns(p_specs), ns(b_specs)),
+            out_shardings=(
+                NamedSharding(mesh, T.batch_pspecs(
+                    {"t": batch["tokens"]}, rules)["t"]),
+                ns(c_specs),
+            ),
+        )
+        with mesh:
+            lowered = jitted.lower(params, batch)
+    else:  # decode
+        params, axes = T.init_params_and_axes(cfg, key)
+        params = jax.tree_util.tree_map(
+            lambda s: jax.ShapeDtypeStruct(
+                s.shape,
+                jnp.bfloat16 if (s.dtype == jnp.float32 and len(s.shape) > 1)
+                else s.dtype,
+            ),
+            params,
+        )  # serving checkpoints are bf16
+        p_specs = T.param_specs_serving(cfg, params, axes, rules)
+        cache = S.cache_structure(cfg, shape)
+        c_specs = T.cache_pspecs(cfg, cache, rules)
+        dstruct = S.decode_structure(cfg, shape)
+        step = T.make_decode_step(cfg, shape, rules)
+        ns = lambda tree: jax.tree_util.tree_map(
+            lambda s: NamedSharding(mesh, s), tree
+        )
+        jitted = jax.jit(
+            step,
+            donate_argnums=(2,),  # alias the KV cache in/out
+            in_shardings=(
+                ns(p_specs),
+                NamedSharding(mesh, T.batch_pspecs(
+                    {"t": dstruct["token"]}, rules)["t"]),
+                ns(c_specs),
+                NamedSharding(mesh, P()),
+            ),
+            out_shardings=(NamedSharding(mesh, P()), ns(c_specs)),
+        )
+        with mesh:
+            lowered = jitted.lower(
+                params, dstruct["token"], cache, dstruct["pos"]
+            )
+
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    hlo = compiled.as_text()
+    coll, coll_counts = collective_bytes(hlo)
+
+    n_dev = mesh.size
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "multi_pod": multi_pod,
+        "devices": n_dev,
+        "flops_per_device": float(cost.get("flops", 0.0)),
+        "hbm_bytes_accessed_per_device": float(
+            cost.get("bytes accessed", 0.0)
+        ),
+        "collective_bytes_per_device": coll,
+        "collective_counts": coll_counts,
+        "argument_bytes_per_device": getattr(mem, "argument_size_in_bytes", 0),
+        "output_bytes_per_device": getattr(mem, "output_size_in_bytes", 0),
+        "temp_bytes_per_device": getattr(mem, "temp_size_in_bytes", 0),
+        "peak_bytes_per_device": (
+            getattr(mem, "argument_size_in_bytes", 0)
+            + getattr(mem, "output_size_in_bytes", 0)
+            + getattr(mem, "temp_size_in_bytes", 0)
+        ),
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+    }
+    if verbose:
+        print(f"== {arch} x {shape_name} ({'2-pod' if multi_pod else '1-pod'},"
+              f" {n_dev} devices) ==")
+        print(f"  memory_analysis: args={result['argument_bytes_per_device']/2**30:.2f}GiB"
+              f" out={result['output_bytes_per_device']/2**30:.2f}GiB"
+              f" temp={result['temp_bytes_per_device']/2**30:.2f}GiB")
+        print(f"  cost_analysis: {result['flops_per_device']:.3e} FLOPs/dev, "
+              f"{result['hbm_bytes_accessed_per_device']:.3e} bytes/dev")
+        print(f"  collectives: { {k: f'{v/2**20:.1f}MiB' for k, v in coll.items()} }")
+        print(f"  lower {t_lower:.1f}s compile {t_compile:.1f}s")
+        sys.stdout.flush()
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true",
+                    help="all (arch x shape) on the single-pod mesh")
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args()
+
+    results = []
+    if args.all:
+        for arch in list_archs():
+            for shape in INPUT_SHAPES:
+                try:
+                    results.append(
+                        dryrun_one(arch, shape, multi_pod=args.multi_pod)
+                    )
+                except Exception as e:  # noqa: BLE001 — report, keep going
+                    print(f"FAILED {arch} x {shape}: {type(e).__name__}: {e}")
+                    results.append({"arch": arch, "shape": shape,
+                                    "multi_pod": args.multi_pod,
+                                    "error": str(e)[:500]})
+    else:
+        results.append(
+            dryrun_one(args.arch, args.shape, multi_pod=args.multi_pod)
+        )
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(results, f, indent=1)
+    ok = sum(1 for r in results if "error" not in r)
+    print(f"\n{ok}/{len(results)} dry-runs succeeded")
+    return 0 if ok == len(results) else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

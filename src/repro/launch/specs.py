@@ -1,0 +1,86 @@
+"""``input_specs()`` — ShapeDtypeStruct stand-ins for every model input.
+
+Weak-type-correct, shardable, never allocating. The dry-run lowers
+train/prefill/decode steps against these; the same helper feeds the smoke
+tests with real arrays of the reduced configs.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import InputShape, ModelConfig
+
+
+def batch_structure(cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
+    """Abstract train/prefill batch: tokens (+ stub media embeddings)."""
+    B, S = shape.global_batch, shape.seq_len
+    out = {}
+    if cfg.frontend == "vision_patches":
+        n_media = min(cfg.n_media_tokens, S // 2)
+        out["tokens"] = jax.ShapeDtypeStruct((B, S - n_media), jnp.int32)
+        out["media"] = jax.ShapeDtypeStruct(
+            (B, n_media, cfg.d_model), jnp.float32
+        )
+    elif cfg.frontend == "audio_frames":
+        out["tokens"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        out["media"] = jax.ShapeDtypeStruct(
+            (B, cfg.enc_source_len, cfg.d_model), jnp.float32
+        )
+    else:
+        out["tokens"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    return out
+
+
+def decode_structure(cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
+    """Abstract decode-step inputs (the cache comes from cache_structure)."""
+    B = shape.global_batch
+    return {
+        "token": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def cache_structure(cfg: ModelConfig, shape: InputShape):
+    """Abstract decode cache via eval_shape of the real init_cache."""
+    window = cfg.effective_window(shape)
+
+    def build():
+        if cfg.is_encdec:
+            from repro.models import encdec
+
+            return encdec.init_cache(
+                cfg, shape.global_batch, shape.seq_len, window
+            )
+        from repro.models import lm
+
+        return lm.init_cache(cfg, shape.global_batch, shape.seq_len, window)
+
+    return jax.eval_shape(build)
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
+    """All abstract inputs for the step kind implied by ``shape.kind``."""
+    if shape.kind in ("train", "prefill"):
+        return {"batch": batch_structure(cfg, shape)}
+    specs = decode_structure(cfg, shape)
+    return {"token": specs["token"], "pos": specs["pos"],
+            "cache": cache_structure(cfg, shape)}
+
+
+def demo_batch(cfg: ModelConfig, shape: InputShape, key=None):
+    """Concrete synthetic batch matching batch_structure (smoke tests)."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    structure = batch_structure(cfg, shape)
+    out = {}
+    k1, k2 = jax.random.split(key)
+    out["tokens"] = jax.random.randint(
+        k1, structure["tokens"].shape, 0, cfg.vocab, jnp.int32
+    )
+    if "media" in structure:
+        out["media"] = jax.random.normal(
+            k2, structure["media"].shape, jnp.float32
+        )
+    return out

@@ -1,0 +1,69 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> ...``.
+
+On this CPU container it runs reduced configs end-to-end; on a pod the same
+entry point takes ``--mesh pod|multipod`` and the full config.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, get_shape
+from repro.data.pipeline import synthetic_lm_batches, synthetic_eval_set
+from repro.launch.mesh import (
+    make_production_mesh,
+    make_test_mesh,
+    single_device_mesh,
+)
+from repro.train import Trainer, TrainerConfig
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=30)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--reduced", action="store_true", default=True,
+                    help="use the smoke-scale variant (CPU default)")
+    ap.add_argument("--full", dest="reduced", action="store_false")
+    ap.add_argument("--mesh", choices=["single", "pod", "multipod"],
+                    default="single")
+    ap.add_argument("--eval-every", type=int, default=0)
+    ap.add_argument("--checkpoint-every", type=int, default=0)
+    ap.add_argument("--checkpoint-dir", default="/tmp/repro_ckpt")
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    mesh = {
+        "single": single_device_mesh,
+        "pod": lambda: make_production_mesh(),
+        "multipod": lambda: make_production_mesh(multi_pod=True),
+    }[args.mesh]()
+
+    tcfg = TrainerConfig(
+        total_steps=args.steps,
+        eval_every=args.eval_every,
+        checkpoint_every=args.checkpoint_every,
+        checkpoint_dir=args.checkpoint_dir,
+        log_every=max(1, args.steps // 10),
+    )
+    trainer = Trainer(cfg, mesh, tcfg)
+    batches = synthetic_lm_batches(
+        cfg, batch=args.batch, seq=args.seq, steps=args.steps
+    )
+    eval_fn = None
+    if args.eval_every:
+        eval_fn = synthetic_eval_set(cfg, batch=args.batch, seq=args.seq)
+    history = trainer.fit(batches, eval_fn)
+    print("done", history[-1] if history else "")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

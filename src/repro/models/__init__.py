@@ -1,0 +1,3 @@
+# Model zoo: assigned-architecture families (lm, encdec) + the paper's
+# MLPerf models (resnet, ssd, gnmt, transformer_mlperf). Submodules are
+# imported lazily by ModelAPI / benchmarks to keep import time low.

@@ -1,0 +1,209 @@
+"""GNMT (paper §3): LSTM encoder-decoder with the paper's RNN-loop
+restructuring (C9).
+
+The paper's optimization: an LSTM step's loop-carried dependency is only on
+the hidden state, so the *input-feature projection* (x_t @ W_x) is hoisted
+out of the RNN loop and computed for all timesteps as one large batched
+matmul — critical when per-core batch is small and the cell is
+memory-bound. ``hoist_input_projection=False`` keeps the naive per-step
+projection as the benchmark baseline (benchmarks/gnmt_hoist.py).
+
+Structure (faithful to [18] at reduced scale): bidirectional first encoder
+layer, residual uni layers, decoder with dot-product attention over encoder
+outputs, concatenated into each decoder layer input.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist import p
+from repro.kernels import ops
+from repro.models.scan_utils import chunked_scan
+
+
+@dataclasses.dataclass(frozen=True)
+class GNMTConfig:
+    name: str = "gnmt"
+    vocab: int = 32000
+    d_model: int = 1024          # LSTM feature size F
+    n_enc_layers: int = 4        # first is bidirectional
+    n_dec_layers: int = 4
+    dtype: str = "bfloat16"
+    hoist_input_projection: bool = True  # the C9 optimization
+
+
+GNMT_TINY = GNMTConfig(name="gnmt_tiny", vocab=512, d_model=64,
+                       n_enc_layers=2, n_dec_layers=2)
+
+
+def _lstm_init(key, in_dim, F):
+    k1, k2 = jax.random.split(key)
+    return {
+        "w_x": p(jax.random.normal(k1, (in_dim, 4 * F), jnp.float32)
+                 * in_dim ** -0.5, None, "mlp"),
+        "w_h": p(jax.random.normal(k2, (F, 4 * F), jnp.float32) * F ** -0.5,
+                 None, "mlp"),
+        "b": p(jnp.zeros((4 * F,), jnp.float32), None),
+    }
+
+
+def init_gnmt(cfg: GNMTConfig, key):
+    F = cfg.d_model
+    ks = iter(jax.random.split(key, 64))
+    params: Dict[str, Any] = {
+        "embed": p(jax.random.normal(next(ks), (cfg.vocab, F), jnp.float32)
+                   * F ** -0.5, "vocab", None),
+        "enc_fwd0": _lstm_init(next(ks), F, F),
+        "enc_bwd0": _lstm_init(next(ks), F, F),
+    }
+    in_dim = 2 * F
+    for i in range(1, cfg.n_enc_layers):
+        params[f"enc{i}"] = _lstm_init(next(ks), in_dim, F)
+        in_dim = F
+    params["dec0"] = _lstm_init(next(ks), 2 * F, F)  # [emb, ctx]
+    for i in range(1, cfg.n_dec_layers):
+        params[f"dec{i}"] = _lstm_init(next(ks), 2 * F, F)  # [h, ctx]
+    params["head"] = p(
+        jax.random.normal(next(ks), (F, cfg.vocab), jnp.float32) * F ** -0.5,
+        None, "vocab")
+    return params
+
+
+def _get(params, name):
+    v = params[name]
+    return v[0] if isinstance(v, tuple) else v
+
+
+def lstm_layer(prm, x, cfg: GNMTConfig, *, reverse: bool = False):
+    """Run one LSTM layer over x (B,S,in_dim) -> (B,S,F).
+
+    C9: with hoisting, x @ W_x is one (B*S, in) x (in, 4F) matmul outside
+    the loop; the scanned cell only does the (B,F)x(F,4F) hidden matmul.
+    """
+    dt = jnp.dtype(cfg.dtype)
+    w_x = _get(prm, "w_x").astype(dt)
+    w_h = _get(prm, "w_h").astype(dt)
+    b = _get(prm, "b")
+    B, S, _ = x.shape
+    F = w_h.shape[0]
+    xs = jnp.flip(x, axis=1) if reverse else x
+
+    if cfg.hoist_input_projection:
+        x_proj = jnp.einsum("bsi,ij->bsj", xs.astype(dt), w_x)  # hoisted
+
+        def step(carry, xp_t):
+            h, c = carry
+            h2, c2 = ops.lstm_cell(xp_t, h, c, w_h, b)
+            return (h2, c2), h2
+
+        xs_scan = jnp.moveaxis(x_proj, 1, 0)
+    else:
+        def step(carry, x_t):
+            h, c = carry
+            xp_t = jnp.einsum("bi,ij->bj", x_t.astype(dt), w_x)  # in-loop
+            h2, c2 = ops.lstm_cell(xp_t, h, c, w_h, b)
+            return (h2, c2), h2
+
+        xs_scan = jnp.moveaxis(xs, 1, 0)
+
+    h0 = jnp.zeros((B, F), dt)
+    c0 = jnp.zeros((B, F), jnp.float32)
+    _, hs = chunked_scan(step, (h0, c0), xs_scan, chunk=64)
+    out = jnp.moveaxis(hs, 0, 1)
+    return jnp.flip(out, axis=1) if reverse else out
+
+
+def encode(params, cfg: GNMTConfig, src_tokens):
+    dt = jnp.dtype(cfg.dtype)
+    x = jnp.take(_get(params, "embed"), src_tokens, axis=0).astype(dt)
+    fwd = lstm_layer(params["enc_fwd0"], x, cfg)
+    bwd = lstm_layer(params["enc_bwd0"], x, cfg, reverse=True)
+    h = jnp.concatenate([fwd, bwd], axis=-1)
+    for i in range(1, cfg.n_enc_layers):
+        y = lstm_layer(params[f"enc{i}"], h, cfg)
+        h = y if i == 1 else h + y  # residual from layer 2 on (GNMT)
+    return h  # (B, S, F)
+
+
+def decode_train(params, cfg: GNMTConfig, enc_out, tgt_tokens):
+    """Teacher-forced decoder with per-step dot attention."""
+    dt = jnp.dtype(cfg.dtype)
+    B, S = tgt_tokens.shape
+    F = cfg.d_model
+    emb = jnp.take(_get(params, "embed"), tgt_tokens, axis=0).astype(dt)
+    enc = enc_out.astype(dt)
+
+    w0x = _get(params["dec0"], "w_x").astype(dt)
+    w0h = _get(params["dec0"], "w_h").astype(dt)
+    b0 = _get(params["dec0"], "b")
+    layer_ws = [
+        (
+            _get(params[f"dec{i}"], "w_x").astype(dt),
+            _get(params[f"dec{i}"], "w_h").astype(dt),
+            _get(params[f"dec{i}"], "b"),
+        )
+        for i in range(1, cfg.n_dec_layers)
+    ]
+
+    def step(carry, emb_t):
+        states, ctx = carry  # states: list of (h,c); ctx: (B,F*?)
+        new_states = []
+        x0 = jnp.concatenate([emb_t, ctx], axis=-1)
+        h, c = states[0]
+        h, c = ops.lstm_cell(x0 @ w0x, h, c, w0h, b0)
+        new_states.append((h, c))
+        # dot attention over encoder outputs with query h
+        scores = jnp.einsum("bf,bsf->bs", h.astype(jnp.float32),
+                            enc.astype(jnp.float32)) * F ** -0.5
+        alpha = jax.nn.softmax(scores, axis=-1)
+        ctx_new = jnp.einsum("bs,bsf->bf", alpha, enc.astype(jnp.float32)
+                             ).astype(dt)
+        y = h
+        for li, (wx, wh, bb) in enumerate(layer_ws):
+            inp = jnp.concatenate([y, ctx_new], axis=-1)
+            h_l, c_l = states[li + 1]
+            h2, c2 = ops.lstm_cell(inp @ wx, h_l, c_l, wh, bb)
+            new_states.append((h2, c2))
+            y = h2 if li == 0 else y + h2  # residual
+        return (new_states, ctx_new), y
+
+    init_states = [
+        (jnp.zeros((B, F), dt), jnp.zeros((B, F), jnp.float32))
+        for _ in range(cfg.n_dec_layers)
+    ]
+    ctx0 = jnp.zeros((B, F), dt)
+    (_, _), ys = chunked_scan(
+        step, (init_states, ctx0), jnp.moveaxis(emb, 1, 0), chunk=32
+    )
+    out = jnp.moveaxis(ys, 0, 1)  # (B,S,F)
+    return jnp.einsum("bsf,fv->bsv", out.astype(jnp.float32),
+                      _get(params, "head").astype(jnp.float32))
+
+
+def loss_fn(params, cfg: GNMTConfig, batch) -> Tuple[jnp.ndarray, Dict]:
+    """batch: {"src": (B,Ss) int32, "tgt": (B,St) int32, optional
+    "tgt_mask": (B,St) 1.0 = real token (bucketized batches pad)}."""
+    enc = encode(params, cfg, batch["src"])
+    logits = decode_train(params, cfg, enc, batch["tgt"])
+    tgt = batch["tgt"][:, 1:]
+    lg = logits[:, :-1].astype(jnp.float32)
+    mask = batch.get("tgt_mask")
+    mask = jnp.ones_like(tgt, jnp.float32) if mask is None else mask[:, 1:]
+    logz = jax.scipy.special.logsumexp(lg, axis=-1)
+    gold = jnp.take_along_axis(lg, tgt[..., None], axis=-1)[..., 0]
+    nll = ((logz - gold) * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return nll, {"nll": nll}
+
+
+def per_example_nll(params, cfg: GNMTConfig, batch):
+    enc = encode(params, cfg, batch["src"])
+    logits = decode_train(params, cfg, enc, batch["tgt"])
+    tgt = batch["tgt"][:, 1:]
+    lg = logits[:, :-1].astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(lg, axis=-1)
+    gold = jnp.take_along_axis(lg, tgt[..., None], axis=-1)[..., 0]
+    return (logz - gold).mean(axis=-1), jnp.zeros(())

@@ -1,0 +1,240 @@
+"""Mask-RCNN (paper §3) — two-stage detector, reduced-fidelity but
+structurally faithful reproduction:
+
+  stage 1: ResNet-50 backbone + FPN + RPN — the paper spatially
+           partitions this stage (C3);
+  stage 2: top-k proposals -> RoIAlign (bilinear crop-resize) -> box /
+           class / mask heads. The paper's "graph partitioning" places
+           these independent head branches on up to 4 different cores;
+           here that maps onto a shard_map over the 'model' axis with one
+           branch per shard group (`core/graph_partitioning.py`).
+
+Simplifications (documented per DESIGN.md): no NMS (fixed top-k by RPN
+score), anchor matching done by the (synthetic) pipeline, single anchor
+aspect ratio. The paper's scaling observation reproduced is structural:
+global batch cannot exceed 128, so scaling beyond 64 cores requires the
+stage-1 spatial partitioning + stage-2 graph partitioning implemented
+here.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist import p
+from repro.models import resnet as R
+
+
+@dataclasses.dataclass(frozen=True)
+class MaskRCNNConfig:
+    name: str = "maskrcnn"
+    image_size: int = 128
+    num_classes: int = 81
+    fpn_channels: int = 64
+    num_proposals: int = 16     # top-k RPN proposals kept (no NMS)
+    roi_size: int = 7
+    mask_size: int = 14
+    backbone: R.ResNetConfig = dataclasses.field(
+        default_factory=lambda: R.RESNET50)
+    dtype: str = "bfloat16"
+    spatial_partition: bool = False
+
+
+MASKRCNN_TINY = MaskRCNNConfig(
+    name="maskrcnn_tiny", image_size=32, num_classes=5, fpn_channels=16,
+    num_proposals=4, roi_size=4, mask_size=8,
+    backbone=R.RESNET_TINY,
+)
+
+
+def init_maskrcnn(cfg: MaskRCNNConfig, key):
+    ks = iter(jax.random.split(key, 64))
+    C = cfg.fpn_channels
+    params: Dict[str, Any] = {"backbone": R.init_resnet(cfg.backbone,
+                                                        next(ks))}
+    n_stages = len(cfg.backbone.stage_sizes)
+    for s in range(n_stages):
+        cin = R._block_channels(cfg.backbone, s)[1]
+        params[f"fpn_lat{s}"] = p(R._conv_init(next(ks), 1, 1, cin, C),
+                                  None, None, None, "mlp")
+        params[f"fpn_out{s}"] = p(R._conv_init(next(ks), 3, 3, C, C),
+                                  None, None, None, "mlp")
+    # RPN: objectness + box deltas per location (1 anchor)
+    params["rpn_conv"] = p(R._conv_init(next(ks), 3, 3, C, C),
+                           None, None, None, "mlp")
+    params["rpn_cls"] = p(R._conv_init(next(ks), 1, 1, C, 1),
+                          None, None, None, None)
+    params["rpn_box"] = p(R._conv_init(next(ks), 1, 1, C, 4),
+                          None, None, None, None)
+    # stage-2 heads (independent branches -> graph-partitionable)
+    roi_feat = C * cfg.roi_size * cfg.roi_size
+    params["head_cls"] = p(
+        jax.random.normal(next(ks), (roi_feat, cfg.num_classes),
+                          jnp.float32) * roi_feat ** -0.5, None, "mlp")
+    params["head_box"] = p(
+        jax.random.normal(next(ks), (roi_feat, 4), jnp.float32)
+        * roi_feat ** -0.5, None, None)
+    params["mask_conv"] = p(R._conv_init(next(ks), 3, 3, C, C),
+                            None, None, None, "mlp")
+    params["mask_out"] = p(R._conv_init(next(ks), 1, 1, C, cfg.num_classes),
+                           None, None, None, None)
+    return params
+
+
+def _get(params, name):
+    v = params[name]
+    return v[0] if isinstance(v, tuple) else v
+
+
+def _conv(x, w, stride=1, dt=jnp.bfloat16):
+    return jax.lax.conv_general_dilated(
+        x.astype(dt), w.astype(dt), (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def fpn_features(params, cfg: MaskRCNNConfig, images, *, mesh=None):
+    """Stage-1 trunk: backbone (spatially partitionable) + FPN top-down."""
+    dt = jnp.dtype(cfg.dtype)
+    bcfg = dataclasses.replace(cfg.backbone,
+                               spatial_partition=cfg.spatial_partition)
+    feats = R.features(params["backbone"], bcfg, images, mesh=mesh)
+    laterals = [
+        _conv(f, _get(params, f"fpn_lat{s}"), dt=dt)
+        for s, f in enumerate(feats)
+    ]
+    # top-down pathway
+    out = [laterals[-1]]
+    for s in range(len(laterals) - 2, -1, -1):
+        up = jax.image.resize(out[0], laterals[s].shape, "nearest")
+        out.insert(0, laterals[s] + up)
+    return [_conv(f, _get(params, f"fpn_out{s}"), dt=dt)
+            for s, f in enumerate(out)]
+
+
+def rpn(params, cfg: MaskRCNNConfig, fpn_feats):
+    """Objectness + boxes over the finest FPN level; returns top-k."""
+    dt = jnp.dtype(cfg.dtype)
+    f = jax.nn.relu(_conv(fpn_feats[0], _get(params, "rpn_conv"), dt=dt))
+    scores = _conv(f, _get(params, "rpn_cls"), dt=dt)[..., 0]  # (B,H,W)
+    boxes = _conv(f, _get(params, "rpn_box"), dt=dt)           # (B,H,W,4)
+    B, H, W = scores.shape
+    flat_s = scores.reshape(B, H * W).astype(jnp.float32)
+    flat_b = boxes.reshape(B, H * W, 4).astype(jnp.float32)
+    top_s, top_i = jax.lax.top_k(flat_s, cfg.num_proposals)
+    top_b = jnp.take_along_axis(flat_b, top_i[..., None], axis=1)
+    # proposal centers from grid index + predicted deltas
+    cy = (top_i // W).astype(jnp.float32) / H
+    cx = (top_i % W).astype(jnp.float32) / W
+    centers = jnp.stack([cy, cx], -1)
+    sizes = jax.nn.sigmoid(top_b[..., 2:]) * 0.5 + 0.05
+    rois = jnp.concatenate([centers - sizes / 2, centers + sizes / 2], -1)
+    return top_s, jnp.clip(rois, 0.0, 1.0), flat_s, flat_b
+
+
+def roi_align(feat, rois, out_size: int):
+    """Bilinear crop-resize (simplified RoIAlign). feat: (B,H,W,C);
+    rois: (B,P,4) in [0,1] (y0,x0,y1,x1) -> (B,P,s,s,C)."""
+    B, H, W, C = feat.shape
+    P = rois.shape[1]
+
+    def one(fm, roi):  # fm (H,W,C), roi (4,)
+        y0, x0, y1, x1 = roi
+        ys = y0 + (y1 - y0) * (jnp.arange(out_size) + 0.5) / out_size
+        xs = x0 + (x1 - x0) * (jnp.arange(out_size) + 0.5) / out_size
+        yi = jnp.clip(ys * H - 0.5, 0, H - 1)
+        xi = jnp.clip(xs * W - 0.5, 0, W - 1)
+        y_lo = jnp.floor(yi).astype(jnp.int32)
+        x_lo = jnp.floor(xi).astype(jnp.int32)
+        y_hi = jnp.minimum(y_lo + 1, H - 1)
+        x_hi = jnp.minimum(x_lo + 1, W - 1)
+        wy = (yi - y_lo)[:, None, None]
+        wx = (xi - x_lo)[None, :, None]
+        g = lambda a, b: fm[a][:, b]  # (s,s,C) gather
+        out = ((1 - wy) * (1 - wx) * g(y_lo, x_lo)
+               + (1 - wy) * wx * g(y_lo, x_hi)
+               + wy * (1 - wx) * g(y_hi, x_lo)
+               + wy * wx * g(y_hi, x_hi))
+        return out
+
+    return jax.vmap(lambda fm, rs: jax.vmap(lambda r: one(fm, r))(rs))(
+        feat.astype(jnp.float32), rois)
+
+
+def stage2_heads(params, cfg: MaskRCNNConfig, fpn_feats, rois, *,
+                 mesh=None):
+    """Independent head branches. With a mesh, the branches are placed on
+    disjoint model-axis shard groups (paper's graph partitioning);
+    without one they run sequentially (identical math — tested)."""
+    roi_feat = roi_align(fpn_feats[0], rois, cfg.roi_size)  # (B,P,s,s,C)
+    B, P = roi_feat.shape[:2]
+    flat = roi_feat.reshape(B, P, -1)
+
+    def branch_cls(flat):
+        return flat @ _get(params, "head_cls").astype(jnp.float32)
+
+    def branch_box(flat):
+        return flat @ _get(params, "head_box").astype(jnp.float32)
+
+    def branch_mask(roi_feat):
+        m = roi_feat.reshape(B * P, cfg.roi_size, cfg.roi_size, -1)
+        m = jax.image.resize(
+            m, (B * P, cfg.mask_size, cfg.mask_size, m.shape[-1]),
+            "bilinear")
+        m = jax.nn.relu(_conv(m, _get(params, "mask_conv"),
+                              dt=jnp.float32))
+        m = _conv(m, _get(params, "mask_out"), dt=jnp.float32)
+        return m.reshape(B, P, cfg.mask_size, cfg.mask_size, -1)
+
+    if mesh is not None and "model" in mesh.axis_names:
+        from repro.core.graph_partitioning import run_partitioned
+
+        cls_logits, box_preds, masks = run_partitioned(
+            [lambda: branch_cls(flat), lambda: branch_box(flat),
+             lambda: branch_mask(roi_feat)],
+            mesh=mesh,
+        )
+    else:
+        cls_logits = branch_cls(flat)
+        box_preds = branch_box(flat)
+        masks = branch_mask(roi_feat)
+    return cls_logits, box_preds, masks
+
+
+def forward(params, cfg: MaskRCNNConfig, images, *, mesh=None):
+    fpn_feats = fpn_features(params, cfg, images, mesh=mesh)
+    scores, rois, rpn_s, rpn_b = rpn(params, cfg, fpn_feats)
+    cls_logits, box_preds, masks = stage2_heads(
+        params, cfg, fpn_feats, rois, mesh=mesh)
+    return {"rpn_scores": rpn_s, "rpn_boxes": rpn_b, "rois": rois,
+            "cls_logits": cls_logits, "box_preds": box_preds,
+            "masks": masks}
+
+
+def loss_fn(params, cfg: MaskRCNNConfig, batch, *, mesh=None):
+    """batch: images (B,H,W,3), rpn_labels (B,A) {0,1}, cls_targets (B,P),
+    box_targets (B,P,4), mask_targets (B,P,ms,ms) {0,1}."""
+    out = forward(params, cfg, batch["images"], mesh=mesh)
+    rpn_l = jnp.mean(
+        _bce(out["rpn_scores"], batch["rpn_labels"].astype(jnp.float32)))
+    logp = jax.nn.log_softmax(out["cls_logits"], -1)
+    cls_l = -jnp.take_along_axis(
+        logp, batch["cls_targets"][..., None], axis=-1).mean()
+    box_l = jnp.abs(out["box_preds"] - batch["box_targets"]).mean()
+    mt = batch["mask_targets"].astype(jnp.float32)
+    mp = jnp.take_along_axis(
+        out["masks"],
+        batch["cls_targets"][:, :, None, None, None].astype(jnp.int32),
+        axis=-1,
+    )[..., 0]
+    mask_l = jnp.mean(_bce(mp, mt))
+    loss = rpn_l + cls_l + box_l + mask_l
+    return loss, {"nll": loss, "rpn": rpn_l, "cls": cls_l, "box": box_l,
+                  "mask": mask_l}
+
+
+def _bce(logits, labels):
+    z = jnp.clip(logits, -30, 30)
+    return jnp.maximum(z, 0) - z * labels + jnp.log1p(jnp.exp(-jnp.abs(z)))

@@ -1,0 +1,225 @@
+"""ResNet v1.5 (paper §3 ResNet-50) in functional JAX.
+
+"v1.5" = the MLPerf variant [9]: in bottleneck blocks the stride-2 conv is
+the 3x3 (not the first 1x1). Supports:
+  * distributed batch norm (C5) — stats over replica subgroups;
+  * spatial partitioning (C3) — convs sharded along H with halo exchange;
+  * bf16 conv compute with fp32 BN (C7).
+
+Used by the MLPerf benchmarks (LARS Table 1, Fig 8/9/10) and as the SSD
+backbone (ResNet-34).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import distributed_norm as DN
+from repro.core import spatial_partitioning as SP
+from repro.dist import p
+
+
+@dataclasses.dataclass(frozen=True)
+class ResNetConfig:
+    name: str = "resnet50"
+    block: str = "bottleneck"          # 'bottleneck' | 'basic'
+    stage_sizes: Tuple[int, ...] = (3, 4, 6, 3)
+    width: int = 64
+    num_classes: int = 1000
+    dtype: str = "bfloat16"
+    stem_stride: int = 2
+    stem_pool: bool = True
+    # distributed BN (C5): replicas per stats group (1 = local BN)
+    bn_group_size: int = 1
+    # spatial partitioning (C3): shard conv H over the 'model' axis
+    spatial_partition: bool = False
+
+
+RESNET50 = ResNetConfig()
+RESNET34 = ResNetConfig(name="resnet34", block="basic",
+                        stage_sizes=(3, 4, 6, 3))
+RESNET18 = ResNetConfig(name="resnet18", block="basic",
+                        stage_sizes=(2, 2, 2, 2))
+RESNET_TINY = ResNetConfig(name="resnet_tiny", block="bottleneck",
+                           stage_sizes=(1, 1), width=16, num_classes=10,
+                           stem_stride=1, stem_pool=False)
+
+
+def _conv_init(key, kh, kw, cin, cout):
+    fan_in = kh * kw * cin
+    return jax.random.normal(key, (kh, kw, cin, cout), jnp.float32) * (
+        2.0 / fan_in
+    ) ** 0.5
+
+
+def _bn_init(c):
+    return {"scale": p(jnp.ones((c,), jnp.float32), None),
+            "bias": p(jnp.zeros((c,), jnp.float32), None)}
+
+
+def _block_channels(cfg: ResNetConfig, stage: int):
+    base = cfg.width * (2 ** stage)
+    return (base, base * 4) if cfg.block == "bottleneck" else (base, base)
+
+
+def init_resnet(cfg: ResNetConfig, key):
+    ks = iter(jax.random.split(key, 2048))
+    params: Dict[str, Any] = {
+        "stem_conv": p(_conv_init(next(ks), 7, 7, 3, cfg.width),
+                       None, None, None, "mlp"),
+        "stem_bn": _bn_init(cfg.width),
+    }
+    cin = cfg.width
+    for s, n_blocks in enumerate(cfg.stage_sizes):
+        mid, cout = _block_channels(cfg, s)
+        for b in range(n_blocks):
+            name = f"s{s}b{b}"
+            stride = 2 if (b == 0 and s > 0) else 1
+            blk = {}
+            if cfg.block == "bottleneck":
+                blk["conv1"] = p(_conv_init(next(ks), 1, 1, cin, mid),
+                                 None, None, None, "mlp")
+                blk["bn1"] = _bn_init(mid)
+                blk["conv2"] = p(_conv_init(next(ks), 3, 3, mid, mid),
+                                 None, None, None, "mlp")
+                blk["bn2"] = _bn_init(mid)
+                blk["conv3"] = p(_conv_init(next(ks), 1, 1, mid, cout),
+                                 None, None, None, "mlp")
+                blk["bn3"] = _bn_init(cout)
+            else:
+                blk["conv1"] = p(_conv_init(next(ks), 3, 3, cin, mid),
+                                 None, None, None, "mlp")
+                blk["bn1"] = _bn_init(mid)
+                blk["conv2"] = p(_conv_init(next(ks), 3, 3, mid, cout),
+                                 None, None, None, "mlp")
+                blk["bn2"] = _bn_init(cout)
+            if stride != 1 or cin != cout:
+                blk["proj"] = p(_conv_init(next(ks), 1, 1, cin, cout),
+                                None, None, None, "mlp")
+                blk["proj_bn"] = _bn_init(cout)
+            params[name] = blk
+            cin = cout
+    params["head"] = p(
+        jax.random.normal(next(ks), (cin, cfg.num_classes), jnp.float32)
+        * cin ** -0.5, None, "mlp")
+    params["head_bias"] = p(jnp.zeros((cfg.num_classes,), jnp.float32), None)
+    return params
+
+
+# --------------------------------------------------------------------------- #
+# Apply.
+# --------------------------------------------------------------------------- #
+def _get(params, name):
+    v = params[name]
+    return v[0] if isinstance(v, tuple) else v
+
+
+def _conv(x, w, stride, cfg: ResNetConfig, mesh=None):
+    dt = jnp.dtype(cfg.dtype)
+    if cfg.spatial_partition and mesh is not None and w.shape[0] > 1:
+        return SP.spatial_conv2d(
+            x.astype(dt), w.astype(dt), stride=stride, mesh=mesh
+        )
+    return jax.lax.conv_general_dilated(
+        x.astype(dt), w.astype(dt), (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def _bn(x, bnp, cfg: ResNetConfig, mesh=None):
+    scale, bias = _get(bnp, "scale"), _get(bnp, "bias")
+    if cfg.bn_group_size > 1 and mesh is not None:
+        return DN.distributed_batch_norm(
+            x, scale, bias, mesh=mesh, group_size=cfg.bn_group_size
+        )
+    return DN.batch_norm(x, scale, bias)[0]
+
+
+def forward(params, cfg: ResNetConfig, images, *, mesh=None):
+    """images: (B, H, W, 3) -> logits (B, num_classes)."""
+    x = _conv(images, _get(params, "stem_conv"), cfg.stem_stride, cfg, mesh)
+    x = jax.nn.relu(_bn(x, params["stem_bn"], cfg, mesh))
+    if cfg.stem_pool:
+        x = jax.lax.reduce_window(
+            x, -jnp.inf, jax.lax.max, (1, 3, 3, 1), (1, 2, 2, 1), "SAME"
+        )
+    cin = cfg.width
+    for s, n_blocks in enumerate(cfg.stage_sizes):
+        mid, cout = _block_channels(cfg, s)
+        for b in range(n_blocks):
+            blk = params[f"s{s}b{b}"]
+            stride = 2 if (b == 0 and s > 0) else 1
+            sc = x
+            if "proj" in blk:
+                sc = _bn(_conv(x, _get(blk, "proj"), stride, cfg, mesh),
+                         blk["proj_bn"], cfg, mesh)
+            if cfg.block == "bottleneck":
+                # v1.5: stride on the 3x3 conv
+                y = jax.nn.relu(_bn(_conv(x, _get(blk, "conv1"), 1, cfg, mesh),
+                                    blk["bn1"], cfg, mesh))
+                y = jax.nn.relu(_bn(_conv(y, _get(blk, "conv2"), stride, cfg,
+                                          mesh), blk["bn2"], cfg, mesh))
+                y = _bn(_conv(y, _get(blk, "conv3"), 1, cfg, mesh),
+                        blk["bn3"], cfg, mesh)
+            else:
+                y = jax.nn.relu(_bn(_conv(x, _get(blk, "conv1"), stride, cfg,
+                                          mesh), blk["bn1"], cfg, mesh))
+                y = _bn(_conv(y, _get(blk, "conv2"), 1, cfg, mesh),
+                        blk["bn2"], cfg, mesh)
+            x = jax.nn.relu(sc + y)
+            cin = cout
+    x = x.mean(axis=(1, 2)).astype(jnp.float32)  # global average pool
+    return x @ _get(params, "head") + _get(params, "head_bias")
+
+
+def features(params, cfg: ResNetConfig, images, *, mesh=None, n_stages=None):
+    """Backbone feature maps per stage (for SSD). Returns list of NHWC."""
+    x = _conv(images, _get(params, "stem_conv"), cfg.stem_stride, cfg, mesh)
+    x = jax.nn.relu(_bn(x, params["stem_bn"], cfg, mesh))
+    if cfg.stem_pool:
+        x = jax.lax.reduce_window(
+            x, -jnp.inf, jax.lax.max, (1, 3, 3, 1), (1, 2, 2, 1), "SAME"
+        )
+    feats = []
+    stages = cfg.stage_sizes if n_stages is None else cfg.stage_sizes[:n_stages]
+    for s, n_blocks in enumerate(stages):
+        mid, cout = _block_channels(cfg, s)
+        for b in range(n_blocks):
+            blk = params[f"s{s}b{b}"]
+            stride = 2 if (b == 0 and s > 0) else 1
+            sc = x
+            if "proj" in blk:
+                sc = _bn(_conv(x, _get(blk, "proj"), stride, cfg, mesh),
+                         blk["proj_bn"], cfg, mesh)
+            if cfg.block == "bottleneck":
+                y = jax.nn.relu(_bn(_conv(x, _get(blk, "conv1"), 1, cfg, mesh),
+                                    blk["bn1"], cfg, mesh))
+                y = jax.nn.relu(_bn(_conv(y, _get(blk, "conv2"), stride, cfg,
+                                          mesh), blk["bn2"], cfg, mesh))
+                y = _bn(_conv(y, _get(blk, "conv3"), 1, cfg, mesh),
+                        blk["bn3"], cfg, mesh)
+            else:
+                y = jax.nn.relu(_bn(_conv(x, _get(blk, "conv1"), stride, cfg,
+                                          mesh), blk["bn1"], cfg, mesh))
+                y = _bn(_conv(y, _get(blk, "conv2"), 1, cfg, mesh),
+                        blk["bn2"], cfg, mesh)
+            x = jax.nn.relu(sc + y)
+        feats.append(x)
+    return feats
+
+
+def loss_fn(params, cfg: ResNetConfig, batch, *, mesh=None,
+            label_smoothing: float = 0.1):
+    """batch: {"images": (B,H,W,3), "labels": (B,)}. MLPerf uses 0.1 LS."""
+    logits = forward(params, cfg, batch["images"], mesh=mesh)
+    n = cfg.num_classes
+    onehot = jax.nn.one_hot(batch["labels"], n)
+    soft = onehot * (1 - label_smoothing) + label_smoothing / n
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32))
+    loss = -(soft * logp).sum(-1).mean()
+    acc = (logits.argmax(-1) == batch["labels"]).mean()
+    return loss, {"nll": loss, "acc": acc}

@@ -1,0 +1,50 @@
+"""Checkpointed two-level scan for long recurrences.
+
+A plain ``lax.scan`` over S timesteps saves every per-step intermediate for
+the backward pass — for the SSM recurrences that is the full (S, B, Di, N)
+state history (gigabytes per layer). ``chunked_scan`` scans over chunks,
+checkpoints each chunk, and recomputes the inner steps in the backward:
+saved memory drops from O(S) to O(S/chunk + chunk).
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def _largest_divisor_leq(n: int, k: int) -> int:
+    k = min(n, k)
+    while n % k:
+        k -= 1
+    return k
+
+
+def chunked_scan(f: Callable, init, xs, *, chunk: int = 256,
+                 checkpoint: bool = True):
+    """Equivalent to ``jax.lax.scan(f, init, xs)`` with chunked remat.
+
+    xs leaves must share the leading time dim S; chunk is clamped to the
+    largest divisor of S.
+    """
+    S = jax.tree_util.tree_leaves(xs)[0].shape[0]
+    c = _largest_divisor_leq(S, chunk)
+    n_chunks = S // c
+    if n_chunks <= 1:
+        return jax.lax.scan(f, init, xs)
+    xs_c = jax.tree_util.tree_map(
+        lambda a: a.reshape((n_chunks, c) + a.shape[1:]), xs
+    )
+
+    def outer(carry, xc):
+        return jax.lax.scan(f, carry, xc)
+
+    if checkpoint:
+        outer = jax.checkpoint(outer)
+
+    carry, ys_c = jax.lax.scan(outer, init, xs_c)
+    ys = jax.tree_util.tree_map(
+        lambda a: a.reshape((S,) + a.shape[2:]), ys_c
+    )
+    return carry, ys

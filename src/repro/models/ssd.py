@@ -1,0 +1,169 @@
+"""SSD (paper §3): single-shot detector with a ResNet-34 backbone.
+
+Faithful compute graph: ResNet-34 backbone truncated after stage 3, extra
+feature pyramid convs down to 1x1, shared-anchor class+box conv heads —
+the exact structure whose shrinking spatial dims the paper calls out as
+limiting spatial-partitioning parallelism ("300x300 in the first layer to
+1x1 in the last").
+
+Target assignment (anchor matching / NMS) is a data-pipeline concern and is
+provided by the (synthetic) pipeline as per-anchor class ids + box offsets;
+the device-side loss is the standard multibox CE + smooth-L1 with hard
+negative mining.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist import p
+from repro.models import resnet as R
+
+
+@dataclasses.dataclass(frozen=True)
+class SSDConfig:
+    name: str = "ssd_resnet34"
+    image_size: int = 300
+    num_classes: int = 81  # COCO + background
+    anchors_per_loc: int = 4
+    # (channels, stride) for the extra pyramid layers after the backbone
+    extra_channels: Tuple[int, ...] = (512, 512, 256, 256, 256)
+    backbone: R.ResNetConfig = dataclasses.field(
+        default_factory=lambda: dataclasses.replace(
+            R.RESNET34, num_classes=0
+        )
+    )
+    dtype: str = "bfloat16"
+    neg_pos_ratio: float = 3.0
+    spatial_partition: bool = False
+
+
+SSD_TINY = SSDConfig(
+    name="ssd_tiny", image_size=64, num_classes=11,
+    extra_channels=(64, 64),
+    backbone=dataclasses.replace(R.RESNET_TINY, block="basic",
+                                 stage_sizes=(1, 1), width=16),
+)
+
+
+def init_ssd(cfg: SSDConfig, key):
+    ks = iter(jax.random.split(key, 256))
+    params: Dict[str, Any] = {
+        "backbone": R.init_resnet(cfg.backbone, next(ks)),
+    }
+    # backbone output channels after 3 stages (SSD truncates resnet34):
+    n_stages = min(3, len(cfg.backbone.stage_sizes))
+    cin = R._block_channels(cfg.backbone, n_stages - 1)[1]
+    feat_channels = [cin]
+    for i, c in enumerate(cfg.extra_channels):
+        params[f"extra{i}_a"] = p(R._conv_init(next(ks), 1, 1, cin, c // 2),
+                                  None, None, None, "mlp")
+        params[f"extra{i}_b"] = p(R._conv_init(next(ks), 3, 3, c // 2, c),
+                                  None, None, None, "mlp")
+        cin = c
+        feat_channels.append(c)
+    for i, c in enumerate(feat_channels):
+        params[f"cls{i}"] = p(
+            R._conv_init(next(ks), 3, 3, c,
+                         cfg.anchors_per_loc * cfg.num_classes),
+            None, None, None, "mlp")
+        params[f"box{i}"] = p(
+            R._conv_init(next(ks), 3, 3, c, cfg.anchors_per_loc * 4),
+            None, None, None, "mlp")
+    return params
+
+
+def _get(params, name):
+    v = params[name]
+    return v[0] if isinstance(v, tuple) else v
+
+
+def forward(params, cfg: SSDConfig, images, *, mesh=None):
+    """Returns (cls_logits (B, A, num_classes), box_preds (B, A, 4))."""
+    dt = jnp.dtype(cfg.dtype)
+    n_stages = min(3, len(cfg.backbone.stage_sizes))
+    bcfg = dataclasses.replace(
+        cfg.backbone, spatial_partition=cfg.spatial_partition
+    )
+    feats = R.features(params["backbone"], bcfg, images, mesh=mesh,
+                       n_stages=n_stages)
+    x = feats[-1]
+    pyramid: List = [x]
+    for i in range(len(cfg.extra_channels)):
+        y = jax.nn.relu(jax.lax.conv_general_dilated(
+            x.astype(dt), _get(params, f"extra{i}_a").astype(dt), (1, 1),
+            "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")))
+        stride = 2 if x.shape[1] > 1 else 1
+        x = jax.nn.relu(jax.lax.conv_general_dilated(
+            y, _get(params, f"extra{i}_b").astype(dt), (stride, stride),
+            "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")))
+        pyramid.append(x)
+    cls_out, box_out = [], []
+    B = images.shape[0]
+    for i, f in enumerate(pyramid):
+        c = jax.lax.conv_general_dilated(
+            f.astype(dt), _get(params, f"cls{i}").astype(dt), (1, 1), "SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        b = jax.lax.conv_general_dilated(
+            f.astype(dt), _get(params, f"box{i}").astype(dt), (1, 1), "SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        cls_out.append(c.reshape(B, -1, cfg.num_classes))
+        box_out.append(b.reshape(B, -1, 4))
+    return (jnp.concatenate(cls_out, 1).astype(jnp.float32),
+            jnp.concatenate(box_out, 1).astype(jnp.float32))
+
+
+def num_anchors(cfg: SSDConfig) -> int:
+    return forward_shape(cfg)
+
+
+def forward_shape(cfg: SSDConfig) -> int:
+    img = jax.ShapeDtypeStruct((1, cfg.image_size, cfg.image_size, 3),
+                               jnp.float32)
+    key = jax.random.PRNGKey(0)
+    cls, _ = jax.eval_shape(
+        lambda k, im: forward(init_ssd(cfg, k), cfg, im), key, img
+    )
+    return cls.shape[1]
+
+
+def loss_fn(params, cfg: SSDConfig, batch, *, mesh=None):
+    """batch: images (B,H,W,3), cls_targets (B,A) int32 (0 = background),
+    box_targets (B,A,4) float32 (only counted where cls_target > 0).
+
+    Multibox loss: smooth-L1 on positives + CE with 3:1 hard negative
+    mining (the MLPerf SSD loss).
+    """
+    cls_logits, box_preds = forward(params, cfg, batch["images"], mesh=mesh)
+    cls_t = batch["cls_targets"]
+    box_t = batch["box_targets"]
+    pos = (cls_t > 0).astype(jnp.float32)
+    n_pos = jnp.maximum(pos.sum(axis=1), 1.0)
+
+    # classification: CE everywhere, then keep positives + top-k negatives
+    logp = jax.nn.log_softmax(cls_logits, axis=-1)
+    ce = -jnp.take_along_axis(logp, cls_t[..., None], axis=-1)[..., 0]
+    neg_ce = jnp.where(pos > 0, -jnp.inf, ce)
+    k = jnp.minimum(
+        (cfg.neg_pos_ratio * n_pos).astype(jnp.int32),
+        cls_t.shape[1] - 1,
+    )
+    # rank negatives: keep those with rank < k (per-example dynamic k).
+    # Selection is a mask, not a differentiable quantity -> stop_gradient
+    # (also avoids differentiating argsort's gather).
+    neg_ce_sg = jax.lax.stop_gradient(neg_ce)
+    order = jnp.argsort(-neg_ce_sg, axis=1)
+    rank = jnp.argsort(order, axis=1).astype(jnp.int32)
+    neg_keep = (rank < k[:, None]).astype(jnp.float32) * (1 - pos)
+    cls_loss = (ce * (pos + neg_keep)).sum(axis=1) / n_pos
+
+    # localization: smooth L1 on positives
+    diff = jnp.abs(box_preds - box_t)
+    sl1 = jnp.where(diff < 1.0, 0.5 * diff ** 2, diff - 0.5).sum(-1)
+    box_loss = (sl1 * pos).sum(axis=1) / n_pos
+
+    loss = (cls_loss + box_loss).mean()
+    return loss, {"nll": loss, "cls": cls_loss.mean(), "box": box_loss.mean()}

@@ -1,0 +1,114 @@
+"""MLPerf-0.6 Transformer (paper §3): Vaswani enc-dec on WMT EN-DE.
+
+Reuses the enc-dec blocks from ``repro.models.encdec`` with a *token*
+encoder (shared source/target embedding, as in the MLPerf reference).
+The paper's serving-side trick — truncating max sequence length to 97 (the
+longest eval example) to cut eval overhead — is the ``max_len`` knob used
+by benchmarks/fig9_step_times.py.
+
+Trained with Adam; the paper notes large-batch convergence needed tuned
+(beta1, beta2) + lower LR (see benchmarks/fig8_batch_epochs.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.dist import constrain, p, split_tree
+from repro.models import encdec as E
+from repro.models import layers as L
+from repro.models.lm import _is_tagged_tree
+
+# MLPerf Transformer "big" (the benchmark config) and a CPU-size variant.
+TRANSFORMER_BIG = ModelConfig(
+    name="transformer_mlperf_big", family="audio",  # enc-dec plumbing
+    n_layers=6, n_enc_layers=6, d_model=1024, n_heads=16, n_kv_heads=16,
+    d_ff=4096, vocab=33708, norm="layernorm", activation="relu", glu=False,
+    rope="none", tie_embeddings=True, enc_source_len=97,
+    param_sharding="wus",
+)
+TRANSFORMER_TINY = dataclasses.replace(
+    TRANSFORMER_BIG, name="transformer_mlperf_tiny", n_layers=2,
+    n_enc_layers=2, d_model=128, n_heads=4, n_kv_heads=4, d_ff=256,
+    vocab=512, enc_source_len=32, remat=False,
+)
+
+
+def init_transformer(cfg: ModelConfig, key):
+    ks = jax.random.split(key, 4)
+    params = {
+        "embed": p(
+            jax.random.normal(ks[0], (cfg.vocab, cfg.d_model), jnp.float32)
+            * cfg.d_model ** -0.5, "vocab", "fsdp"),
+        "enc_blocks": E._stack(E._init_enc_layer, cfg, ks[1],
+                               cfg.n_enc_layers),
+        "enc_norm": L.init_norm(cfg, cfg.d_model),
+        "dec_blocks": E._stack(E._init_dec_layer, cfg, ks[2], cfg.n_layers),
+        "dec_norm": L.init_norm(cfg, cfg.d_model),
+    }
+    return params  # tied embeddings (MLPerf reference shares all three)
+
+
+def encode(params, cfg: ModelConfig, src_tokens):
+    """Token encoder: shared embedding + sinusoidal positions."""
+    vals = split_tree(params)[0] if _is_tagged_tree(params) else params
+    dt = jnp.dtype(cfg.dtype)
+    emb = vals["embed"]
+    x = jnp.take(emb, src_tokens, axis=0).astype(dt) * cfg.d_model ** 0.5
+    x = x + E.sinusoid(src_tokens.shape[1], cfg.d_model, dt)
+    return _encode_embedded(vals, cfg, x)
+
+
+def _encode_embedded(vals, cfg, x):
+    B, T, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[None], (B, T))
+    x = constrain(x, "batch", "seq_res", None)
+
+    def block_fn(x, bp):
+        h = L.apply_norm(bp["norm1"], x, cfg)
+        y, _ = L.attention_full(bp["attn"], h, cfg, positions=positions,
+                                causal=False)
+        x = constrain(x + y, "batch", "seq_res", None)
+        h = L.apply_norm(bp["norm2"], x, cfg)
+        return constrain(x + L.apply_ffn(bp["ffn"], h, cfg),
+                         "batch", "seq_res", None), None
+
+    fn = jax.checkpoint(block_fn) if cfg.remat else block_fn
+    x, _ = jax.lax.scan(fn, x, vals["enc_blocks"])
+    return L.apply_norm(vals["enc_norm"], x, cfg)
+
+
+def forward(params, cfg: ModelConfig, src_tokens, tgt_tokens):
+    vals = split_tree(params)[0] if _is_tagged_tree(params) else params
+    enc_out = encode(vals, cfg, src_tokens)
+    dt = jnp.dtype(cfg.dtype)
+    B, S = tgt_tokens.shape
+    x = jnp.take(vals["embed"], tgt_tokens, axis=0).astype(dt)
+    x = x * cfg.d_model ** 0.5 + E.sinusoid(S, cfg.d_model, dt)
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+
+    def block_fn(x, bp):
+        x, _ = E._dec_block_full(cfg, bp, x, enc_out, positions)
+        return x, None
+
+    fn = jax.checkpoint(block_fn) if cfg.remat else block_fn
+    x, _ = jax.lax.scan(fn, x, vals["dec_blocks"])
+    x = L.apply_norm(vals["dec_norm"], x, cfg)
+    w = constrain(vals["embed"].astype(dt), "vocab", None).T
+    return jnp.einsum("bsd,dv->bsv", x, w)
+
+
+def loss_fn(params, cfg: ModelConfig, batch) -> Tuple[jnp.ndarray, Dict]:
+    """batch: {"src": (B,Ss), "tgt": (B,St)} int32, 0 = pad."""
+    logits = forward(params, cfg, batch["src"], batch["tgt"])
+    tgt = batch["tgt"][:, 1:]
+    mask = (tgt != 0).astype(jnp.float32)
+    lg = logits[:, :-1].astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(lg, axis=-1)
+    gold = jnp.take_along_axis(lg, tgt[..., None], axis=-1)[..., 0]
+    nll = ((logz - gold) * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return nll, {"nll": nll}

@@ -1,0 +1,21 @@
+from repro.optim.base import Optimizer
+from repro.optim.sgd import sgd_momentum
+from repro.optim.lars import lars
+from repro.optim.adam import adam
+from repro.optim.schedules import (
+    constant,
+    cosine_warmup,
+    polynomial_warmup,
+    transformer_schedule,
+)
+
+__all__ = [
+    "Optimizer",
+    "sgd_momentum",
+    "lars",
+    "adam",
+    "constant",
+    "cosine_warmup",
+    "polynomial_warmup",
+    "transformer_schedule",
+]

@@ -1,0 +1,57 @@
+"""Adam — the MLPerf Transformer optimizer (paper §3: large-batch training
+required tuning beta1/beta2 alongside a lower learning rate).
+
+``moment_dtype`` allows bf16 moments for the 300B+ assigned configs (memory
+note in DESIGN.md §2.5); master weights stay fp32.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.base import Optimizer
+
+
+def adam(lr_schedule, b1: float = 0.9, b2: float = 0.98, eps: float = 1e-9,
+         weight_decay: float = 0.0, moment_dtype: str = "float32") -> Optimizer:
+    mdt = jnp.dtype(moment_dtype)
+
+    def init(params):
+        z = lambda w: jnp.zeros_like(w, mdt)
+        return {
+            "m": jax.tree_util.tree_map(z, params),
+            "v": jax.tree_util.tree_map(z, params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params, step=None):
+        step = state["step"] if step is None else step
+        lr = lr_schedule(step)
+        t = jnp.asarray(step, jnp.float32) + 1.0
+        bc1 = 1 - b1 ** t
+        bc2 = 1 - b2 ** t
+
+        def one(w, g, m, v):
+            g32 = g.astype(jnp.float32)
+            m_new = b1 * m.astype(jnp.float32) + (1 - b1) * g32
+            v_new = b2 * v.astype(jnp.float32) + (1 - b2) * g32 ** 2
+            upd = (m_new / bc1) / (jnp.sqrt(v_new / bc2) + eps)
+            if weight_decay:
+                upd = upd + weight_decay * w.astype(jnp.float32)
+            return (
+                (w.astype(jnp.float32) - lr * upd).astype(w.dtype),
+                m_new.astype(mdt),
+                v_new.astype(mdt),
+            )
+
+        lw, treedef = jax.tree_util.tree_flatten(params)
+        lg = jax.tree_util.tree_leaves(grads)
+        lm = jax.tree_util.tree_leaves(state["m"])
+        lv = jax.tree_util.tree_leaves(state["v"])
+        res = [one(w, g, m, v) for w, g, m, v in zip(lw, lg, lm, lv)]
+        unf = lambda i: jax.tree_util.tree_unflatten(treedef, [r[i] for r in res])
+        return unf(0), {"m": unf(1), "v": unf(2), "step": step + 1}
+
+    return Optimizer("adam", init, update,
+                     {"b1": b1, "b2": b2, "eps": eps,
+                      "weight_decay": weight_decay})

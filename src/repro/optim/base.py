@@ -1,0 +1,20 @@
+"""Minimal pure-pytree optimizer interface (optax-like, no dependency).
+
+``update`` takes and returns the *parameters* as well as the state, because
+the paper's weight-update sharding (C1) distributes the whole
+(param, grad, state) -> (param, state) computation across the data axis;
+see ``repro.core.weight_update_sharding``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    name: str
+    init: Callable[[Any], Any]  # params -> state
+    # (grads, state, params, step) -> (new_params, new_state)
+    update: Callable[[Any, Any, Any, Any], Tuple[Any, Any]]
+    hyper: Dict[str, Any] = dataclasses.field(default_factory=dict)

@@ -1,0 +1,67 @@
+"""LARS optimizer — both update rules from the paper (Figures 5 and 6).
+
+scaled_momentum=True  (Fig. 5, MLPerf-0.6 reference):
+    lam = eta * ||w|| / (||g|| + beta*||w||)
+    v   = m*v + (g + beta*w)
+    w   = w - lam*lr*v
+
+scaled_momentum=False (Fig. 6, You et al. [20] — the variant the paper
+shows converges in fewer epochs, 70.6 vs 72.8, and with tuned momentum in
+64 epochs / 67.1 s):
+    lam = eta * ||w|| / (||g|| + beta*||w||)
+    v   = m*v + lam*lr*(g + beta*w)
+    w   = w - v
+
+1-D parameters (biases, norm scales) use plain momentum without LARS
+adaptation or weight decay, per the MLPerf reference implementation.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.optim.base import Optimizer
+
+
+def lars(lr_schedule, momentum: float = 0.9, weight_decay: float = 1e-4,
+         eta: float = 0.001, eps: float = 1e-9,
+         scaled_momentum: bool = True) -> Optimizer:
+    def init(params):
+        return {
+            "m": jax.tree_util.tree_map(
+                lambda w: jnp.zeros_like(w, jnp.float32), params
+            ),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params, step=None):
+        step = state["step"] if step is None else step
+        lr = lr_schedule(step)
+
+        def one(w, g, m):
+            if w.ndim <= 1:  # bias/norm: heavy-ball momentum, no adaptation
+                g32 = g.astype(jnp.float32)
+                m_new = momentum * m + g32
+                return (
+                    w.astype(jnp.float32) - lr * m_new
+                ).astype(w.dtype), m_new
+            new_w, new_m = ops.lars_update(
+                w.astype(jnp.float32), g.astype(jnp.float32), m,
+                lr=lr, weight_decay=weight_decay, momentum=momentum,
+                eta=eta, eps=eps, scaled_momentum=scaled_momentum,
+            )
+            return new_w.astype(w.dtype), new_m
+
+        lw, treedef = jax.tree_util.tree_flatten(params)
+        lg = jax.tree_util.tree_leaves(grads)
+        lm = jax.tree_util.tree_leaves(state["m"])
+        res = [one(w, g, m) for w, g, m in zip(lw, lg, lm)]
+        unf = lambda i: jax.tree_util.tree_unflatten(treedef, [r[i] for r in res])
+        return unf(0), {"m": unf(1), "step": step + 1}
+
+    return Optimizer(
+        "lars", init, update,
+        {"momentum": momentum, "weight_decay": weight_decay, "eta": eta,
+         "scaled_momentum": scaled_momentum},
+    )

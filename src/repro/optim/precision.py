@@ -1,0 +1,45 @@
+"""bfloat16 mixed-precision policy (paper §2, C7).
+
+The policy, applied across every model definition:
+  * matmuls / convolutions / attention contractions: bf16 operands
+    (each apply-fn casts weights at use; ``compute_cast`` pins the cast
+    copies to the parameter sharding so FSDP all-gathers move bf16);
+  * normalization statistics, softmax, losses, SSM recurrent state and
+    gradient summation: fp32 (layers cast up internally);
+  * master weights fp32; 1-D parameters (norm scales, biases) stay fp32.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+COMPUTE_DTYPE = jnp.bfloat16
+MASTER_DTYPE = jnp.float32
+NORM_DTYPE = jnp.float32      # batch/rms/layer-norm statistics
+LOSS_DTYPE = jnp.float32
+GRADSUM_DTYPE = jnp.float32   # paper default; 300B+ configs opt into bf16
+
+
+def compute_cast(params, axes, rules, dtype="bfloat16"):
+    """bf16 compute copy of the params, sharding-pinned BEFORE use so the
+    FSDP all-gather moves bf16, not fp32 (half the bytes & HBM).
+
+    1-D params (norm scales, biases) stay fp32 (C7 mixed precision).
+    """
+    dt = jnp.dtype(dtype)
+
+    def one(w, a):
+        if w.dtype != jnp.float32 or w.ndim <= 1:
+            return w
+        c = w.astype(dt)
+        if rules is not None:
+            from jax.sharding import NamedSharding
+
+            c = jax.lax.with_sharding_constraint(
+                c, NamedSharding(rules.mesh, rules.spec_for(a.names, w.shape))
+            )
+        return c
+
+    return jax.tree_util.tree_map(one, params, axes)

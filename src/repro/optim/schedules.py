@@ -1,0 +1,51 @@
+"""Learning-rate schedules used by the MLPerf-0.6 benchmarks."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def polynomial_warmup(base_lr: float, warmup_steps: int, total_steps: int,
+                      power: float = 2.0, end_lr: float = 1e-4):
+    """LARS-style schedule: linear warmup then polynomial decay (MLPerf
+    ResNet reference)."""
+
+    def f(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * (step + 1) / max(1, warmup_steps)
+        frac = jnp.clip(
+            (step - warmup_steps) / max(1, total_steps - warmup_steps), 0, 1
+        )
+        decay = (base_lr - end_lr) * (1 - frac) ** power + end_lr
+        return jnp.where(step < warmup_steps, warm, decay)
+
+    return f
+
+
+def cosine_warmup(base_lr: float, warmup_steps: int, total_steps: int,
+                  min_lr: float = 0.0):
+    def f(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * (step + 1) / max(1, warmup_steps)
+        frac = jnp.clip(
+            (step - warmup_steps) / max(1, total_steps - warmup_steps), 0, 1
+        )
+        decay = min_lr + 0.5 * (base_lr - min_lr) * (1 + jnp.cos(jnp.pi * frac))
+        return jnp.where(step < warmup_steps, warm, decay)
+
+    return f
+
+
+def transformer_schedule(d_model: int, warmup_steps: int, scale: float = 1.0):
+    """Vaswani rsqrt schedule (MLPerf Transformer reference)."""
+
+    def f(step):
+        step = jnp.maximum(jnp.asarray(step, jnp.float32), 1.0)
+        return scale * d_model ** -0.5 * jnp.minimum(
+            step ** -0.5, step * warmup_steps ** -1.5
+        )
+
+    return f

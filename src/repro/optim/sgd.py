@@ -1,0 +1,38 @@
+"""SGD with momentum (+ optional weight decay and Nesterov)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.base import Optimizer
+
+
+def sgd_momentum(lr_schedule, momentum: float = 0.9, weight_decay: float = 0.0,
+                 nesterov: bool = False) -> Optimizer:
+    def init(params):
+        return {
+            "m": jax.tree_util.tree_map(
+                lambda w: jnp.zeros_like(w, jnp.float32), params
+            ),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params, step=None):
+        step = state["step"] if step is None else step
+        lr = lr_schedule(step)
+
+        def one(w, g, m):
+            g32 = g.astype(jnp.float32) + weight_decay * w.astype(jnp.float32)
+            m_new = momentum * m + g32
+            upd = g32 + momentum * m_new if nesterov else m_new
+            return (w.astype(jnp.float32) - lr * upd).astype(w.dtype), m_new
+
+        lw, treedef = jax.tree_util.tree_flatten(params)
+        lg = jax.tree_util.tree_leaves(grads)
+        lm = jax.tree_util.tree_leaves(state["m"])
+        res = [one(w, g, m) for w, g, m in zip(lw, lg, lm)]
+        unf = lambda i: jax.tree_util.tree_unflatten(treedef, [r[i] for r in res])
+        return unf(0), {"m": unf(1), "step": step + 1}
+
+    return Optimizer("sgd_momentum", init, update,
+                     {"momentum": momentum, "weight_decay": weight_decay})

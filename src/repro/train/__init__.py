@@ -1,0 +1,4 @@
+from repro.train import checkpoint, steps
+from repro.train.trainer import Trainer, TrainerConfig
+
+__all__ = ["Trainer", "TrainerConfig", "checkpoint", "steps"]

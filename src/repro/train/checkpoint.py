@@ -1,0 +1,67 @@
+"""Sharded checkpointing: pytree -> (npz shards + json manifest).
+
+Arrays are gathered per-leaf (fine on one host; on a real pod each host
+writes its addressable shards — the manifest format already records the
+PartitionSpec so restore can reshard).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten_with_names(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    names = [jax.tree_util.keystr(path) for path, _ in flat]
+    return names, [leaf for _, leaf in flat], treedef
+
+
+def save_checkpoint(path: str, state, *, step: Optional[int] = None,
+                    pspecs=None):
+    os.makedirs(path, exist_ok=True)
+    names, leaves, _ = _flatten_with_names(state)
+    arrays = {f"a{i}": np.asarray(jax.device_get(l)) for i, l in enumerate(leaves)}
+    np.savez(os.path.join(path, "arrays.npz"), **arrays)
+    manifest: Dict[str, Any] = {
+        "names": names,
+        "dtypes": [str(l.dtype) for l in leaves],
+        "shapes": [list(l.shape) for l in leaves],
+        "step": step,
+    }
+    if pspecs is not None:
+        spec_leaves = jax.tree_util.tree_leaves(
+            pspecs, is_leaf=lambda x: hasattr(x, "__iter__") or x is None
+        )
+        manifest["pspecs"] = [str(s) for s in spec_leaves]
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+
+
+def restore_checkpoint(path: str, state_like):
+    """Restore into the structure of ``state_like`` (shapes must match)."""
+    data = np.load(os.path.join(path, "arrays.npz"))
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    names, leaves, treedef = _flatten_with_names(state_like)
+    assert names == manifest["names"], (
+        "checkpoint structure mismatch: "
+        f"{set(names) ^ set(manifest['names'])}"
+    )
+    new_leaves = [jnp.asarray(data[f"a{i}"]) for i in range(len(leaves))]
+    return jax.tree_util.tree_unflatten(treedef, new_leaves)
+
+
+def latest_step(root: str) -> Optional[int]:
+    if not os.path.isdir(root):
+        return None
+    steps = [
+        int(d.split("_")[-1])
+        for d in os.listdir(root)
+        if d.startswith("step_") and d.split("_")[-1].isdigit()
+    ]
+    return max(steps) if steps else None

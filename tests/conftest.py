@@ -1,0 +1,15 @@
+# NOTE: deliberately NO --xla_force_host_platform_device_count here — smoke
+# tests and benches must see 1 device (the dry-run sets 512 itself, and the
+# multi-device tests in test_core_distributed.py spawn subprocesses).
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,98 @@
+"""KV-cache unit tests: ring-buffer semantics, int8 quantization accuracy,
+prefill->cache construction."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.kernels import ops, ref
+from repro.models import layers as L
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _cfg(kv_dtype="bfloat16"):
+    return dataclasses.replace(
+        get_config("yi-9b").reduced(), kv_cache_dtype=kv_dtype)
+
+
+def test_ring_buffer_overwrites_oldest():
+    cfg = _cfg()
+    B, Lc = 2, 4
+    cache = L.init_kv_cache(cfg, B, Lc)
+    K, hd = cfg.n_kv_heads, cfg.head_dim
+    for pos in range(6):  # wraps twice
+        k = jnp.full((B, K, hd), float(pos))
+        cache = L.cache_insert(cache, k, k, pos)
+    # slots hold positions 4,5,2,3 (pos % 4)
+    assert sorted(np.asarray(cache["slot_pos"][0]).tolist()) == [2, 3, 4, 5]
+    slot = np.asarray(cache["slot_pos"][0]).tolist().index(5)
+    assert float(cache["k"][0, slot, 0, 0]) == 5.0
+
+
+def test_int8_cache_quantization_accuracy():
+    cfg = _cfg("int8")
+    B, Lc = 2, 8
+    K, hd = cfg.n_kv_heads, cfg.head_dim
+    cache = L.init_kv_cache(cfg, B, Lc)
+    ks = jax.random.normal(KEY, (Lc, B, K, hd)) * 3.0
+    for pos in range(Lc):
+        cache = L.cache_insert(cache, ks[pos], ks[pos], pos)
+    # dequantized values within int8 step of the original
+    deq = cache["k"].astype(jnp.float32) * cache["k_scale"][..., None]
+    for pos in range(Lc):
+        err = jnp.abs(deq[:, pos] - ks[pos])
+        step = cache["k_scale"][:, pos][..., None]
+        assert float((err - step).max()) < 1e-5
+
+
+def test_int8_decode_attention_close_to_fp():
+    cfg = _cfg("int8")
+    B, Lc = 2, 16
+    K, hd, H = cfg.n_kv_heads, cfg.head_dim, cfg.n_heads
+    k = jax.random.normal(KEY, (B, Lc, K, hd))
+    v = jax.random.normal(jax.random.PRNGKey(1), (B, Lc, K, hd))
+    q = jax.random.normal(jax.random.PRNGKey(2), (B, 1, H, hd))
+    cache = L.cache_from_prefill(cfg, k, v, Lc)
+    got = ops.decode_attention(
+        q, cache["k"], cache["v"], cache["slot_pos"], pos=Lc - 1,
+        k_scale=cache["k_scale"], v_scale=cache["v_scale"])
+    want = ref.attention(q, k, v, causal=True, q_offset=Lc - 1)
+    # int8 KV quantization error stays small on the attention output
+    assert float(jnp.abs(got - want).max()) < 0.05
+
+
+def test_windowed_decode_ignores_out_of_window():
+    cfg = _cfg()
+    B, Lc = 1, 8
+    K, hd, H = cfg.n_kv_heads, cfg.head_dim, cfg.n_heads
+    k = jax.random.normal(KEY, (B, 12, K, hd))
+    v = jax.random.normal(jax.random.PRNGKey(1), (B, 12, K, hd))
+    q = jax.random.normal(jax.random.PRNGKey(2), (B, 1, H, hd))
+    # fill ring cache of size 8 with positions 0..11 (keeps 4..11)
+    cache = L.init_kv_cache(cfg, B, Lc)
+    for pos in range(12):
+        cache = L.cache_insert(cache, k[:, pos], v[:, pos], pos)
+    got = ops.decode_attention(q, cache["k"], cache["v"],
+                               cache["slot_pos"], pos=11, window=8)
+    want = ref.attention(q, k, v, causal=True, window=8, q_offset=11)
+    assert float(jnp.abs(got - want).max()) < 2e-2
+
+
+def test_cache_from_prefill_matches_inserts():
+    cfg = _cfg()
+    B, Lc = 2, 6
+    K, hd = cfg.n_kv_heads, cfg.head_dim
+    k = jax.random.normal(KEY, (B, Lc, K, hd))
+    v = jax.random.normal(jax.random.PRNGKey(1), (B, Lc, K, hd))
+    bulk = L.cache_from_prefill(cfg, k, v, Lc)
+    step = L.init_kv_cache(cfg, B, Lc)
+    for pos in range(Lc):
+        step = L.cache_insert(step, k[:, pos], v[:, pos], pos)
+    for key in bulk:
+        np.testing.assert_allclose(
+            np.asarray(bulk[key], np.float32),
+            np.asarray(step[key], np.float32), rtol=1e-5, atol=1e-5)

@@ -1,0 +1,22 @@
+"""Runs the multi-device equivalence suite (tests/dist_checks.py) in a
+subprocess with 8 forced host devices — the main pytest process must keep
+one device (dry-run owns the 512-device setting; see conftest)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+
+@pytest.mark.timeout(600)
+def test_distributed_checks_subprocess():
+    script = os.path.join(os.path.dirname(__file__), "dist_checks.py")
+    proc = subprocess.run(
+        [sys.executable, script],
+        capture_output=True, text=True, timeout=580,
+        env={**os.environ, "JAX_PLATFORMS": "cpu"},
+    )
+    sys.stdout.write(proc.stdout)
+    sys.stderr.write(proc.stderr[-4000:])
+    assert proc.returncode == 0, "distributed checks failed"
+    assert "ALL_DIST_CHECKS_PASSED" in proc.stdout

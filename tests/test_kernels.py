@@ -1,0 +1,177 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs ref.py oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels import flash_attention as fa
+from repro.kernels import lstm_cell as lk
+from repro.kernels import lars as lkr
+from repro.kernels import mamba as mk
+from repro.kernels import ops
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _tol(dtype):
+    return dict(rtol=3e-2, atol=3e-2) if dtype == jnp.bfloat16 else dict(
+        rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "B,Sq,Sk,H,K,D,causal,window,q_offset",
+    [
+        (2, 128, 128, 4, 4, 64, True, None, 0),
+        (1, 100, 100, 4, 2, 32, True, None, 0),    # ragged + GQA
+        (2, 64, 64, 8, 1, 128, False, None, 0),    # MQA, bidirectional
+        (1, 256, 256, 4, 4, 64, True, 64, 0),      # sliding window
+        (2, 1, 160, 4, 2, 64, True, None, 159),    # decode-like
+        (1, 96, 96, 2, 2, 64, True, 32, 0),
+    ],
+)
+def test_flash_attention_vs_ref(B, Sq, Sk, H, K, D, causal, window,
+                                q_offset, dtype):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, Sq, H, D), dtype)
+    k = jax.random.normal(ks[1], (B, Sk, K, D), dtype)
+    v = jax.random.normal(ks[2], (B, Sk, K, D), dtype)
+    want = ref.attention(q, k, v, causal=causal, window=window,
+                         q_offset=q_offset)
+    got = fa.flash_attention(q, k, v, causal=causal, window=window,
+                             q_offset=q_offset, interpret=True,
+                             block_q=64, block_k=64)
+    np.testing.assert_allclose(
+        got.astype(np.float32), want.astype(np.float32), **_tol(dtype))
+
+
+def test_flash_attention_k_offset_negative_positions_masked():
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (1, 32, 2, 32))
+    k = jax.random.normal(ks[1], (1, 48, 2, 32))
+    v = jax.random.normal(ks[2], (1, 48, 2, 32))
+    # halo layout: first 16 keys are at negative positions
+    want = ref.attention(q, k, v, causal=True, window=16, q_offset=0,
+                         k_offset=-16)
+    got = fa.flash_attention(q, k, v, causal=True, window=16, q_offset=0,
+                             k_offset=-16, interpret=True, block_q=16,
+                             block_k=16)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_chunked_jnp_attention_vs_ref():
+    ks = jax.random.split(KEY, 3)
+    for (Sq, Sk, chunk) in [(128, 128, 32), (100, 100, 48), (1, 77, 16)]:
+        q = jax.random.normal(ks[0], (2, Sq, 4, 32))
+        k = jax.random.normal(ks[1], (2, Sk, 2, 32))
+        v = jax.random.normal(ks[2], (2, Sk, 2, 32))
+        qo = Sk - Sq
+        want = ref.attention(q, k, v, causal=True, window=24, q_offset=qo)
+        got = ops._chunked_attention(q, k, v, causal=True, window=24,
+                                     q_offset=qo, k_offset=0, scale=None,
+                                     chunk=chunk)
+        np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,F,block", [(48, 96, 32), (5, 64, 128), (128, 128, 64)])
+def test_lstm_cell_vs_ref(B, F, block, dtype):
+    ks = jax.random.split(KEY, 5)
+    xp = jax.random.normal(ks[0], (B, 4 * F), dtype)
+    h = jax.random.normal(ks[1], (B, F), dtype)
+    c = jax.random.normal(ks[2], (B, F), jnp.float32)
+    wh = jax.random.normal(ks[3], (F, 4 * F), dtype) * 0.1
+    b = jax.random.normal(ks[4], (4 * F,), jnp.float32) * 0.1
+    h1, c1 = ref.lstm_cell(xp, h, c, wh, b)
+    h2, c2 = lk.lstm_cell(xp, h, c, wh, b, interpret=True, block_b=block)
+    np.testing.assert_allclose(h2.astype(np.float32),
+                               h1.astype(np.float32), **_tol(dtype))
+    np.testing.assert_allclose(c2, c1, **_tol(dtype))
+
+
+@pytest.mark.parametrize("scaled", [True, False])
+@pytest.mark.parametrize("shape", [(300, 170), (64,), (7, 9, 11)])
+def test_lars_kernel_vs_ref(scaled, shape):
+    ks = jax.random.split(KEY, 2)
+    w = jax.random.normal(ks[0], shape)
+    g = jax.random.normal(ks[1], shape)
+    m = jnp.zeros(shape)
+    kw = dict(lr=0.1, weight_decay=1e-4, momentum=0.9, eta=0.001,
+              scaled_momentum=scaled)
+    w1, m1 = ref.lars_update(w, g, m, **kw)
+    w2, m2 = lkr.lars_update(w, g, m, interpret=True, **kw)
+    np.testing.assert_allclose(w2, w1, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(m2, m1, rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("Bt,S,Di,N,block_d", [(2, 24, 48, 8, 16),
+                                               (1, 17, 33, 4, 32)])
+def test_mamba_kernel_vs_ref(Bt, S, Di, N, block_d):
+    ks = jax.random.split(KEY, 6)
+    u = jax.random.normal(ks[0], (Bt, S, Di)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (Bt, S, Di))) * 0.1
+    A = -jnp.abs(jax.random.normal(ks[2], (Di, N)))
+    B = jax.random.normal(ks[3], (Bt, S, N)) * 0.3
+    C = jax.random.normal(ks[4], (Bt, S, N)) * 0.3
+    D = jax.random.normal(ks[5], (Di,)) * 0.1
+    y1, h1 = ref.mamba_scan(u, dt, A, B, C, D)
+    y2, h2 = mk.mamba_scan(u, dt, A, B, C, D, interpret=True,
+                           block_d=block_d)
+    np.testing.assert_allclose(y2, y1, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(h2, h1, rtol=1e-4, atol=1e-5)
+
+
+def test_ops_mamba_scan_matches_ref():
+    ks = jax.random.split(KEY, 6)
+    Bt, S, Di, N = 2, 40, 16, 4
+    u = jax.random.normal(ks[0], (Bt, S, Di)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (Bt, S, Di))) * 0.1
+    A = -jnp.abs(jax.random.normal(ks[2], (Di, N)))
+    B = jax.random.normal(ks[3], (Bt, S, N)) * 0.3
+    C = jax.random.normal(ks[4], (Bt, S, N)) * 0.3
+    D = jax.random.normal(ks[5], (Di,)) * 0.1
+    y1, h1 = ref.mamba_scan(u, dt, A, B, C, D)
+    y2, h2 = ops.mamba_scan(u, dt, A, B, C, D)
+    np.testing.assert_allclose(y2, y1, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(h2, h1, rtol=1e-4, atol=1e-5)
+
+
+def test_moe_gating_properties():
+    G, S, d, E, k, cap = 3, 16, 8, 4, 2, 9
+    x = jax.random.normal(KEY, (G, S, d))
+    router = jax.random.normal(jax.random.PRNGKey(1), (d, E))
+    dispatch, combine, aux = ref.moe_gating(x, router, top_k=k, capacity=cap)
+    # each token dispatched to <= k slots, one per chosen expert
+    per_token = dispatch.sum(axis=(2, 3))
+    assert (per_token <= k + 1e-6).all()
+    # capacity respected
+    per_slot = dispatch.sum(axis=(0, 1)) if False else dispatch
+    assert (dispatch.sum(axis=1) <= 1 + 1e-6).all()  # one token per (e,c) slot
+    # combine weights only where dispatched, bounded by 1
+    assert (combine <= dispatch + 1e-6).all()
+    assert float(aux) > 0
+
+
+from hypothesis import given, settings, strategies as st
+
+
+@given(
+    st.integers(1, 8),    # Sq chunks-ish
+    st.integers(1, 8),    # extra ragged
+    st.sampled_from([None, 16, 48]),
+    st.sampled_from([16, 32, 64]),
+)
+@settings(max_examples=20, deadline=None)
+def test_block_skip_attention_property(nq, ragged, window, chunk):
+    """Property: block-skipping chunked attention == naive oracle for
+    arbitrary ragged lengths / windows / chunk sizes."""
+    Sq = nq * 16 + ragged
+    q = jax.random.normal(jax.random.PRNGKey(nq), (1, Sq, 2, 16))
+    k = jax.random.normal(jax.random.PRNGKey(nq + 1), (1, Sq, 1, 16))
+    v = jax.random.normal(jax.random.PRNGKey(nq + 2), (1, Sq, 1, 16))
+    want = ref.attention(q, k, v, causal=True, window=window)
+    got = ops._chunked_attention(
+        q, k, v, causal=True, window=window, q_offset=0, k_offset=0,
+        scale=None, chunk=chunk)
+    np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5)

@@ -1,0 +1,133 @@
+"""Layer-level unit/property tests: RoPE, GQA, MoE routing, SSM steps."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import MambaConfig, RWKV6Config
+from repro.dist import split_tree
+from repro.kernels import ops, ref
+from repro.models import layers as L
+
+KEY = jax.random.PRNGKey(0)
+
+
+def test_rope_preserves_norm_and_relative_phase():
+    B, S, H, D = 2, 16, 2, 32
+    x = jax.random.normal(KEY, (B, S, H, D))
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    y = L.apply_rope(x, pos, theta=1e4)
+    np.testing.assert_allclose(
+        jnp.linalg.norm(x, axis=-1), jnp.linalg.norm(y, axis=-1),
+        rtol=1e-5)
+    # relative property: <rope(q,m), rope(k,n)> depends only on m-n
+    q = jax.random.normal(jax.random.PRNGKey(1), (1, 1, 1, D))
+    k = jax.random.normal(jax.random.PRNGKey(2), (1, 1, 1, D))
+    def dot_at(m, n):
+        qm = L.apply_rope(q, jnp.full((1, 1), m), theta=1e4)
+        kn = L.apply_rope(k, jnp.full((1, 1), n), theta=1e4)
+        return float(jnp.sum(qm * kn))
+    assert abs(dot_at(3, 1) - dot_at(10, 8)) < 1e-4
+    assert abs(dot_at(3, 1) - dot_at(3, 2)) > 1e-6  # actually varies
+
+
+def test_mrope_text_only_equals_rope():
+    B, S, H, D = 1, 8, 2, 32
+    x = jax.random.normal(KEY, (B, S, H, D))
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    pos3 = jnp.broadcast_to(pos[..., None], (B, S, 3))
+    a = L.apply_rope(x, pos, theta=1e4)
+    b = L.apply_rope(x, pos3, theta=1e4, mrope=True)
+    np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+
+
+def test_norms_match_numpy():
+    cfg = get_config("yi-9b").reduced()
+    x = jax.random.normal(KEY, (2, 4, cfg.d_model), jnp.float32)
+    prm = L.init_norm(cfg, cfg.d_model)
+    vals, _ = split_tree(prm)
+    y = L.apply_norm(vals, x, cfg)
+    want = x / np.sqrt((np.asarray(x) ** 2).mean(-1, keepdims=True) + 1e-6)
+    np.testing.assert_allclose(np.asarray(y), want, rtol=1e-4, atol=1e-5)
+    cfg_ln = dataclasses.replace(cfg, norm="layernorm")
+    vals_ln, _ = split_tree(L.init_norm(cfg_ln, cfg.d_model))
+    y = L.apply_norm(vals_ln, x, cfg_ln)
+    xn = np.asarray(x)
+    want = (xn - xn.mean(-1, keepdims=True)) / np.sqrt(
+        xn.var(-1, keepdims=True) + 1e-6)
+    np.testing.assert_allclose(np.asarray(y), want, rtol=1e-4, atol=1e-5)
+
+
+def test_moe_ample_capacity_routes_all_topk():
+    cfg = get_config("mixtral-8x7b").reduced()
+    vals, _ = split_tree(L.init_moe(cfg, KEY))
+    x = jax.random.normal(KEY, (2, 8, cfg.d_model), jnp.bfloat16)
+    y, aux = L.apply_moe(vals, x, cfg)
+    assert y.shape == x.shape
+    assert float(aux) >= 1.0 - 1e-3  # load-balance loss lower bound is 1
+    # with ample capacity, output == dense mixture of top-2 experts
+    G, S, d = 1, 16, cfg.d_model
+    xg = jax.random.normal(jax.random.PRNGKey(3), (G, S, d))
+    E, k = cfg.moe.n_experts, cfg.moe.top_k
+    dispatch, combine, _ = ref.moe_gating(
+        xg, split_tree({"r": L.init_moe(cfg, KEY)["router"]})[0]["r"],
+        top_k=k, capacity=S * k)
+    per_token = dispatch.sum(axis=(2, 3))
+    np.testing.assert_allclose(per_token, k, rtol=1e-6)
+
+
+def test_mamba_step_equals_scan():
+    cfg = dataclasses.replace(
+        get_config("jamba-1.5-large-398b").reduced(), dtype="float32")
+    vals, _ = split_tree(L.init_mamba(cfg, KEY))
+    x = jax.random.normal(KEY, (2, 6, cfg.d_model), jnp.float32)
+    y_full, state_full = L.apply_mamba(vals, x, cfg)
+    cache = L.init_mamba_cache(cfg, 2)
+    cache = jax.tree_util.tree_map(
+        lambda a: a.astype(jnp.float32) if a.dtype == jnp.bfloat16 else a,
+        cache)
+    ys = []
+    for t in range(6):
+        y_t, cache = L.apply_mamba_step(vals, x[:, t : t + 1], cfg, cache)
+        ys.append(y_t)
+    y_step = jnp.concatenate(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_step), np.asarray(y_full),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(cache["ssm"]),
+                               np.asarray(state_full["ssm"]),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_rwkv6_step_equals_scan():
+    cfg = dataclasses.replace(get_config("rwkv6-3b").reduced(),
+                              dtype="float32")
+    vals, _ = split_tree(L.init_rwkv6(cfg, KEY))
+    x = jax.random.normal(KEY, (2, 5, cfg.d_model), jnp.float32)
+    y_full, state_full = L.apply_rwkv6(vals, x, cfg)
+    cache = L.init_rwkv6_cache(cfg, 2)
+    cache = {"shift": cache["shift"].astype(jnp.float32),
+             "wkv": cache["wkv"]}
+    ys = []
+    for t in range(5):
+        y_t, cache = L.apply_rwkv6_step(vals, x[:, t : t + 1], cfg, cache)
+        ys.append(y_t)
+    y_step = jnp.concatenate(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_step), np.asarray(y_full),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(cache["wkv"]),
+                               np.asarray(state_full["wkv"]),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_gqa_repeats_kv_heads():
+    # H=4, K=1 (MQA): every query head must attend identically to K=4 copy
+    B, S, D = 1, 8, 16
+    q = jnp.tile(jax.random.normal(KEY, (B, S, 1, D)), (1, 1, 4, 1))
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, S, 1, D))
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, S, 1, D))
+    out = ref.attention(q, k, v, causal=True)
+    for h in range(1, 4):
+        np.testing.assert_allclose(out[:, :, 0], out[:, :, h], rtol=1e-6)

@@ -1,0 +1,99 @@
+"""Optimizer unit + property tests (both LARS variants, Adam, SGD-M)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.optim import adam, constant, cosine_warmup, lars, sgd_momentum
+from repro.optim.schedules import polynomial_warmup, transformer_schedule
+
+PARAMS = {"w": jnp.ones((8, 4)) * 0.5, "b": jnp.zeros((4,))}
+GRADS = {"w": jnp.ones((8, 4)) * 0.1, "b": jnp.ones((4,)) * 0.2}
+
+
+def test_sgd_momentum_two_steps():
+    opt = sgd_momentum(constant(0.1), momentum=0.9)
+    st_ = opt.init(PARAMS)
+    p1, st_ = opt.update(GRADS, st_, PARAMS)
+    p2, st_ = opt.update(GRADS, st_, p1)
+    # after 2 steps with constant grad g: w -= lr*(g) then lr*(0.9g+g)
+    want = 0.5 - 0.1 * 0.1 - 0.1 * (0.19)
+    np.testing.assert_allclose(p2["w"], want, rtol=1e-6)
+
+
+def test_adam_first_step_is_lr_sized():
+    opt = adam(constant(1e-3), b1=0.9, b2=0.999, eps=1e-12)
+    st_ = opt.init(PARAMS)
+    p1, _ = opt.update(GRADS, st_, PARAMS)
+    # bias-corrected first step = lr * sign(g)
+    np.testing.assert_allclose(
+        np.asarray(PARAMS["w"] - p1["w"]), 1e-3, rtol=1e-4)
+
+
+@pytest.mark.parametrize("scaled", [True, False])
+def test_lars_variants_match_paper_equations(scaled):
+    """Fig. 5 vs Fig. 6 update rules, checked against hand-rolled math."""
+    w = jnp.full((4, 4), 2.0)
+    g = jnp.full((4, 4), 0.5)
+    m = jnp.full((4, 4), 0.1)
+    lr, wd, mom, eta = 0.2, 1e-4, 0.9, 0.001
+    w_norm = float(jnp.linalg.norm(w))
+    g_norm = float(jnp.linalg.norm(g))
+    trust = eta * w_norm / (g_norm + wd * w_norm + 1e-9)
+    upd = 0.5 + wd * 2.0
+    if scaled:
+        m_want = mom * 0.1 + upd
+        w_want = 2.0 - lr * trust * m_want
+    else:
+        m_want = mom * 0.1 + lr * trust * upd
+        w_want = 2.0 - m_want
+    w2, m2 = ref.lars_update(w, g, m, lr=lr, weight_decay=wd, momentum=mom,
+                             eta=eta, scaled_momentum=scaled)
+    np.testing.assert_allclose(w2, w_want, rtol=1e-5)
+    np.testing.assert_allclose(m2, m_want, rtol=1e-5)
+
+
+def test_lars_1d_params_skip_adaptation():
+    opt = lars(constant(0.1), momentum=0.9)
+    st_ = opt.init(PARAMS)
+    p1, _ = opt.update(GRADS, st_, PARAMS)
+    # bias uses plain momentum: b - lr*g
+    np.testing.assert_allclose(p1["b"], -0.1 * 0.2, rtol=1e-6)
+
+
+@given(st.floats(0.1, 10.0))
+@settings(max_examples=20, deadline=None)
+def test_adam_gradient_scale_invariance(scale):
+    """Adam's update is invariant to gradient rescaling (eps -> 0)."""
+    opt = adam(constant(1e-2), eps=1e-30)
+    st1 = opt.init(PARAMS)
+    p_a, _ = opt.update(GRADS, st1, PARAMS)
+    g2 = jax.tree_util.tree_map(lambda g: g * scale, GRADS)
+    st2 = opt.init(PARAMS)
+    p_b, _ = opt.update(g2, st2, PARAMS)
+    np.testing.assert_allclose(
+        np.asarray(p_a["w"]), np.asarray(p_b["w"]), rtol=1e-4)
+
+
+def test_schedules_shapes_and_warmup():
+    for sched in [
+        polynomial_warmup(10.0, 5, 100),
+        cosine_warmup(1.0, 5, 100),
+        transformer_schedule(512, 5),
+    ]:
+        v0 = float(sched(0))
+        v_mid = float(sched(50))
+        v_end = float(sched(99))
+        assert v0 > 0  # warmup starts non-zero (first step must move)
+        assert v_end <= v_mid or v_mid <= v0
+
+
+def test_moment_dtype_bf16():
+    opt = adam(constant(1e-3), moment_dtype="bfloat16")
+    st_ = opt.init(PARAMS)
+    assert st_["m"]["w"].dtype == jnp.bfloat16
+    p1, st2 = opt.update(GRADS, st_, PARAMS)
+    assert st2["v"]["w"].dtype == jnp.bfloat16
+    assert p1["w"].dtype == PARAMS["w"].dtype

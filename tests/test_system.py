@@ -1,0 +1,63 @@
+"""End-to-end behaviour tests for the whole system (public entry points)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def test_launcher_end_to_end():
+    """python -m repro.launch.train runs a reduced arch to completion."""
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.train", "--arch", "mixtral-8x7b",
+         "--steps", "6", "--batch", "4", "--seq", "32"],
+        capture_output=True, text=True, timeout=420,
+        env={**os.environ, "PYTHONPATH": os.path.join(ROOT, "src")},
+    )
+    sys.stderr.write(proc.stderr[-2000:])
+    assert proc.returncode == 0
+    assert "done" in proc.stdout
+
+
+def test_dryrun_results_cover_all_combinations():
+    """The recorded dry-run sweeps prove every (arch x shape x mesh)
+    lowers+compiles (deliverable e). Regenerate via
+    ``python -m repro.launch.dryrun --all [--multi-pod]``."""
+    from repro.configs import INPUT_SHAPES, list_archs
+
+    for name in ("dryrun_1pod.json", "dryrun_2pod.json"):
+        path = os.path.join(ROOT, "results", name)
+        if not os.path.exists(path):
+            pytest.skip(f"{name} not generated yet")
+        rs = json.load(open(path))
+        seen = {(r["arch"], r["shape"]) for r in rs}
+        want = {(a, s) for a in list_archs() for s in INPUT_SHAPES}
+        assert seen == want, want - seen
+        errors = [r for r in rs if "error" in r]
+        assert not errors, errors
+        # exactly the one documented skip (whisper long_500k)
+        skips = {(r["arch"], r["shape"]) for r in rs if "skipped" in r}
+        assert skips == {("whisper-medium", "long_500k")}
+        for r in rs:
+            if "skipped" in r or "error" in r:
+                continue
+            assert r["flops_per_device"] > 0, r["arch"]
+            assert r["peak_bytes_per_device"] > 0
+
+
+def test_public_api_importable():
+    import repro.configs
+    import repro.core.distributed_eval
+    import repro.core.gradient_summation
+    import repro.core.spatial_partitioning
+    import repro.core.weight_update_sharding
+    import repro.data
+    import repro.kernels.ops
+    import repro.models.lm
+    import repro.optim
+    import repro.train
+
+    assert len(repro.configs.list_archs()) == 10
