@@ -1,0 +1,11 @@
+#!/usr/bin/env bash
+# Tier-1 verify: full CPU test suite + the sharding suite explicitly.
+# Usage: scripts/verify.sh  (from the repo root; used by CI)
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
+
+python -m pytest -x -q
+python -m pytest tests/test_sharding.py -q

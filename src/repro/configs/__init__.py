@@ -37,7 +37,18 @@ def list_archs() -> List[str]:
     return list(_ARCH_MODULES)
 
 
+def _normalize_arch(arch: str) -> str:
+    """Accept module-style ids too (``gemma_7b`` -> ``gemma-7b``)."""
+    if arch in _ARCH_MODULES:
+        return arch
+    for arch_id, module in _ARCH_MODULES.items():
+        if arch == module:
+            return arch_id
+    return arch
+
+
 def get_config(arch: str) -> ModelConfig:
+    arch = _normalize_arch(arch)
     if arch not in _ARCH_MODULES:
         raise KeyError(f"unknown arch {arch!r}; known: {list_archs()}")
     mod = importlib.import_module(f"repro.configs.{_ARCH_MODULES[arch]}")

@@ -18,7 +18,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
-from jax import shard_map
+from repro.dist.compat import axis_size, shard_map
 
 
 def batch_norm(x, scale, bias, *, eps: float = 1e-5):
@@ -32,7 +32,7 @@ def batch_norm(x, scale, bias, *, eps: float = 1e-5):
 
 
 def _group_psum(x, axis_name: str, group_size: int):
-    n = jax.lax.axis_size(axis_name)
+    n = axis_size(axis_name)
     if group_size >= n:
         return jax.lax.psum(x, axis_name), n
     groups = [

@@ -30,7 +30,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-from jax import shard_map
+from repro.dist.compat import shard_map
 
 
 # --------------------------------------------------------------------------- #

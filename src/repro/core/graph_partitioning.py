@@ -18,7 +18,7 @@ from typing import Callable, List, Sequence
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
-from jax import shard_map
+from repro.dist.compat import shard_map
 
 
 def run_partitioned(branches: Sequence[Callable], *, mesh: Mesh,

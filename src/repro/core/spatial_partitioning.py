@@ -20,7 +20,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
-from jax import shard_map
+from repro.dist.compat import axis_size, shard_map
 
 from repro.kernels import ops as kops
 
@@ -34,7 +34,7 @@ def halo_exchange(x, axis_name: str, *, lo: int, hi: int, axis: int):
 
     Returns x extended to size + lo + hi along ``axis``.
     """
-    n = jax.lax.axis_size(axis_name)
+    n = axis_size(axis_name)
     idx = jax.lax.axis_index(axis_name)
     parts = []
     if lo:

@@ -19,6 +19,13 @@ Two implementations, tested equivalent to the unsharded update:
    moments, and XLA inserts the same reduce-scatter + all-gather. (See
    ``repro.train.steps``.)
 
+Both paths derive their axes from the same ``repro.dist.Rules`` table:
+``wus_axes_from_rules`` reads ``rules.table["batch"]`` — the innermost
+batch mesh axis becomes the scatter axis (reduce-scatter) and any outer
+axes (multipod 'pod') become the plain-psum reduce axis, which is exactly
+the C2 2-D gradient-summation factorization. ``sharded_update_from_rules``
+is the Rules-driven constructor for path 1.
+
 Limitation of the explicit path: per-tensor norms (LARS) need the whole
 tensor, so ``sharded_update`` applies to element-wise optimizers (SGD-M,
 Adam); for LARS it shards at tensor granularity instead (each core updates
@@ -34,10 +41,35 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
-from jax import shard_map
+from repro.dist.compat import shard_map
 
 from repro.core.gradient_summation import flatten_tree, unflatten_tree
 from repro.optim.base import Optimizer
+
+
+# --------------------------------------------------------------------------- #
+# Rules-driven axis derivation (shared policy with the GSPMD path).
+# --------------------------------------------------------------------------- #
+def wus_axes_from_rules(rules) -> Tuple[str, Optional[str]]:
+    """(scatter_axis, reduce_axis) from a ``repro.dist.Rules`` instance.
+
+    The batch row of the rules table lists the data-parallel mesh axes
+    outermost-first (('pod', 'data') on multipod meshes): the innermost is
+    reduce-scattered, the rest are all-reduced (C2).
+    """
+    batch = rules.table.get("batch", ())
+    scatter = batch[-1] if batch else "data"
+    reduce_ = batch[0] if len(batch) > 1 else None
+    return scatter, reduce_
+
+
+def sharded_update_from_rules(optimizer: Optimizer, lr_schedule, rules):
+    """``sharded_update`` with scatter/reduce axes derived from ``rules``."""
+    scatter, reduce_ = wus_axes_from_rules(rules)
+    return sharded_update(
+        optimizer, lr_schedule, rules.mesh,
+        scatter_axis=scatter, reduce_axis=reduce_,
+    )
 
 
 # --------------------------------------------------------------------------- #

@@ -1,0 +1,115 @@
+"""JAX version-compat shims used across the repo.
+
+The repo targets the modern public API (``jax.shard_map`` with
+``check_vma``, ``jax.make_mesh(..., axis_types=...)``,
+``jax.sharding.AxisType``); this container ships an older JAX where those
+live under ``jax.experimental.shard_map`` / don't exist yet. Every module
+that needs one of these imports it from here instead of from jax, so the
+fallback logic exists in exactly one place.
+"""
+from __future__ import annotations
+
+import enum
+import inspect
+
+import jax
+
+# --------------------------------------------------------------------------- #
+# shard_map: jax.shard_map (new) -> jax.experimental.shard_map (old).
+# --------------------------------------------------------------------------- #
+try:  # jax >= 0.6: public top-level function
+    from jax import shard_map as _shard_map_impl
+
+    if not callable(_shard_map_impl):  # pragma: no cover - module, not fn
+        raise ImportError
+except ImportError:  # jax <= 0.5: experimental namespace
+    from jax.experimental.shard_map import shard_map as _shard_map_impl
+
+_SHARD_MAP_PARAMS = frozenset(inspect.signature(_shard_map_impl).parameters)
+
+
+def shard_map(f=None, *, mesh, in_specs, out_specs, check_vma=None,
+              check_rep=None, auto=None):
+    """``jax.shard_map`` with the ``check_vma`` spelling on every version.
+
+    Newer JAX renamed ``check_rep`` to ``check_vma``; accept either and
+    forward whichever name the installed implementation understands.
+    Usable directly, via ``functools.partial``, or as a decorator
+    (``f=None`` returns a decorator).
+    """
+    if f is None:
+        return lambda fn: shard_map(
+            fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=check_vma, check_rep=check_rep, auto=auto,
+        )
+    kw = {"mesh": mesh, "in_specs": in_specs, "out_specs": out_specs}
+    flag = check_vma if check_vma is not None else check_rep
+    if flag is not None:
+        if "check_vma" in _SHARD_MAP_PARAMS:
+            kw["check_vma"] = flag
+        elif "check_rep" in _SHARD_MAP_PARAMS:
+            kw["check_rep"] = flag
+    if auto is not None and "auto" in _SHARD_MAP_PARAMS:
+        kw["auto"] = auto
+    return _shard_map_impl(f, **kw)
+
+
+def axis_size(axis_name):
+    """``jax.lax.axis_size`` with the pre-0.5 ``psum(1, axis)`` fallback.
+
+    Both forms return the static mesh-axis size inside ``shard_map``.
+    """
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return jax.lax.psum(1, axis_name)
+
+
+# --------------------------------------------------------------------------- #
+# AxisType / make_mesh(axis_types=...): absent before jax 0.5.x.
+# --------------------------------------------------------------------------- #
+try:
+    from jax.sharding import AxisType  # noqa: F401
+except ImportError:  # pragma: no cover - exercised on old jax only
+
+    class AxisType(enum.Enum):
+        """Stand-in for ``jax.sharding.AxisType`` on older JAX.
+
+        Old JAX has no explicit-sharding mode, so every mesh axis behaves
+        as Auto; the enum exists purely so call sites can pass
+        ``axis_types=(AxisType.Auto,) * n`` unconditionally.
+        """
+
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+
+_MAKE_MESH_PARAMS = (
+    frozenset(inspect.signature(jax.make_mesh).parameters)
+    if hasattr(jax, "make_mesh") else frozenset()
+)
+
+
+def make_mesh(axis_shapes, axis_names, *, axis_types=None, devices=None):
+    """``jax.make_mesh`` that drops ``axis_types`` where unsupported.
+
+    Falls back to ``mesh_utils.create_device_mesh`` + ``Mesh`` on JAX
+    versions predating ``jax.make_mesh`` itself.
+    """
+    axis_shapes, axis_names = tuple(axis_shapes), tuple(axis_names)
+    if not hasattr(jax, "make_mesh"):  # pragma: no cover - very old jax
+        from jax.experimental import mesh_utils
+        from jax.sharding import Mesh
+
+        if devices is None:
+            devices = jax.devices()
+        return Mesh(
+            mesh_utils.create_device_mesh(axis_shapes, devices=devices),
+            axis_names,
+        )
+    kw = {}
+    if devices is not None:
+        kw["devices"] = devices
+    if axis_types is not None and "axis_types" in _MAKE_MESH_PARAMS:
+        kw["axis_types"] = axis_types
+    return jax.make_mesh(axis_shapes, axis_names, **kw)

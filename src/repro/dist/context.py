@@ -1,0 +1,53 @@
+"""Mesh-context scoping for activation sharding constraints.
+
+``use_rules(rules)`` installs a ``Rules`` instance for the dynamic extent
+of a block; ``constrain(x, *names)`` inside that scope derives the spec
+from the active rules and applies ``with_sharding_constraint``. Outside
+any scope (or under ``use_rules(None)``) it is the identity, so model code
+is annotation-complete yet runs unmodified in plain unit tests.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Optional
+
+import jax
+from jax.sharding import NamedSharding
+
+from repro.dist.sharding import Rules
+
+_ACTIVE_RULES: contextvars.ContextVar[Optional[Rules]] = contextvars.ContextVar(
+    "repro_dist_active_rules", default=None
+)
+
+
+def current_rules() -> Optional[Rules]:
+    """The ``Rules`` installed by the innermost ``use_rules``, or None."""
+    return _ACTIVE_RULES.get()
+
+
+@contextlib.contextmanager
+def use_rules(rules: Optional[Rules]):
+    """Scope ``constrain`` to ``rules`` (None -> constraints are no-ops)."""
+    token = _ACTIVE_RULES.set(rules)
+    try:
+        yield rules
+    finally:
+        _ACTIVE_RULES.reset(token)
+
+
+def constrain(x, *names):
+    """Sharding-constrain ``x`` per the active rules; identity outside them.
+
+    The spec derivation applies the usual divisibility fallback, so the
+    same model code runs on a 1x1 CPU mesh and a 2x16x16 pod mesh.
+    """
+    rules = _ACTIVE_RULES.get()
+    if rules is None:
+        return x
+    mesh = rules.mesh
+    if getattr(mesh, "devices", None) is None:
+        return x  # shape-only mesh stand-in: nothing to constrain
+    spec = rules.spec_for(names, x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

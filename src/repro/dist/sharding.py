@@ -1,0 +1,155 @@
+"""Sharding-spec derivation: logical axis names -> ``PartitionSpec``.
+
+``Rules`` binds a mesh to the policy tables in ``repro.dist.rules`` and
+derives every ``PartitionSpec`` in the system from them, with two
+invariants enforced mechanically:
+
+  * divisibility fallback — a dimension whose size does not divide the
+    product of its candidate mesh axes is replicated instead (e.g. 8 KV
+    heads on a 16-way model axis);
+  * each mesh axis is used at most once per spec — when two dimensions of
+    one tensor map to the same mesh axis, the leftmost wins.
+
+``param_specs`` / ``opt_state_specs`` lift the per-tensor derivation to
+(axes, shapes) pytrees and implement the C1 weight-update-sharding split:
+in ``mode="wus"`` parameters stay replicated across ``data`` while the
+optimizer moments take it — including tensors with no ``fsdp`` annotation,
+whose largest divisible dimension is sharded so *every* weight's update is
+distributed (paper §2, Fig. 4).
+"""
+from __future__ import annotations
+
+from typing import Any, Iterable, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.dist.rules import MODES, build_table, lookup  # noqa: F401
+from repro.dist.tagging import LAYER_AXIS, Axes, _is_tagged  # noqa: F401
+
+
+class Rules:
+    """Mesh-bound sharding rules: ``spec_for(names, shape) -> PartitionSpec``.
+
+    ``mesh`` needs only ``.shape`` (axis name -> size mapping) and
+    ``.axis_names`` — a real ``jax.sharding.Mesh`` or any shape-only
+    stand-in works, so spec logic is testable without devices.
+    """
+
+    def __init__(self, mesh, mode: str = "fsdp",
+                 seq_parallel: bool = False):
+        self.mesh = mesh
+        self.mode = mode
+        self.seq_parallel = bool(seq_parallel)
+        self.mesh_axes: Tuple[str, ...] = tuple(mesh.axis_names)
+        self._sizes = dict(mesh.shape)
+        self.table = build_table(self.mesh_axes, mode, self.seq_parallel)
+
+    # ------------------------------------------------------------------ #
+    def axis_size(self, axes: Union[str, Iterable[str]]) -> int:
+        """Product of mesh-axis sizes (1 for unknown axes / empty tuple)."""
+        if isinstance(axes, str):
+            axes = (axes,)
+        n = 1
+        for a in axes:
+            n *= self._sizes.get(a, 1)
+        return n
+
+    # ------------------------------------------------------------------ #
+    def spec_for(self, names: Sequence[Optional[str]],
+                 shape: Sequence[int]) -> P:
+        """Derive the PartitionSpec for one tensor.
+
+        ``names`` may be shorter than ``shape`` (trailing dims replicated).
+        """
+        used = set()
+        entries = []
+        padded = tuple(names) + (None,) * (len(shape) - len(names))
+        for name, dim in zip(padded, shape):
+            entries.append(self._assign(name, dim, used))
+        return P(*entries)
+
+    def _assign(self, name: Optional[str], dim: int, used: set):
+        axes = tuple(
+            a for a in lookup(self.table, name)
+            if a not in used and a in self._sizes
+        )
+        if not axes:
+            return None
+        if dim % self.axis_size(axes) != 0:
+            return None  # divisibility fallback: replicate this dim
+        used.update(axes)
+        return axes[0] if len(axes) == 1 else axes
+
+    # ------------------------------------------------------------------ #
+    def param_spec(self, names: Sequence[Optional[str]],
+                   shape: Sequence[int]) -> P:
+        """Spec for a master-weight tensor under this mode."""
+        if self.mode == "replicated":
+            return P(*([None] * len(shape)))
+        if self.mode == "wus":
+            # C1: weights replicated across the data axis; the all-gather
+            # after the sharded update rebuilds them (Fig. 4).
+            names = tuple(None if n == "fsdp" else n for n in names)
+        return self.spec_for(names, shape)
+
+    def opt_spec(self, names: Sequence[Optional[str]],
+                 shape: Sequence[int]) -> P:
+        """Spec for an optimizer-moment tensor under this mode."""
+        if self.mode == "replicated":
+            return P(*([None] * len(shape)))
+        spec = self.spec_for(names, shape)
+        if self.mode == "wus":
+            spec = self._wus_upgrade(spec, names, shape)
+        return spec
+
+    def _wus_upgrade(self, spec: P, names: Sequence[Optional[str]],
+                     shape: Sequence[int]) -> P:
+        """C1: ensure the moment carries the ``data`` axis.
+
+        Tensors without a (divisible) ``fsdp`` dim get their largest
+        divisible unsharded dim put on ``data`` so every weight's update
+        is distributed across the data-parallel cores. The structural
+        ``layer`` dim (scan stacking) is never eligible.
+        """
+        n_data = self._sizes.get("data", 1)
+        if n_data <= 1:
+            return spec
+        flat = []
+        for e in spec:
+            flat.extend(e if isinstance(e, tuple) else (e,))
+        if "data" in flat:
+            return spec
+        padded = tuple(names) + (None,) * (len(shape) - len(names))
+        best = None
+        for i, (e, name, dim) in enumerate(zip(spec, padded, shape)):
+            if e is None and name != LAYER_AXIS and dim % n_data == 0:
+                if best is None or dim > shape[best]:
+                    best = i
+        if best is None:
+            return spec
+        entries = list(spec)
+        entries[best] = "data"
+        return P(*entries)
+
+
+# --------------------------------------------------------------------------- #
+# Tree-level derivation.
+# --------------------------------------------------------------------------- #
+def _tree_specs(fn, axes: Any, shapes: Any) -> Any:
+    return jax.tree_util.tree_map(
+        lambda a, s: fn(a.names, s.shape),
+        axes,
+        shapes,
+        is_leaf=lambda x: isinstance(x, Axes),
+    )
+
+
+def param_specs(axes: Any, shapes: Any, rules: Rules) -> Any:
+    """PartitionSpec tree for master weights (single Axes or full trees)."""
+    return _tree_specs(rules.param_spec, axes, shapes)
+
+
+def opt_state_specs(axes: Any, shapes: Any, rules: Rules) -> Any:
+    """PartitionSpec tree for optimizer moments (C1 upgrade in wus mode)."""
+    return _tree_specs(rules.opt_spec, axes, shapes)

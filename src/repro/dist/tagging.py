@@ -1,0 +1,100 @@
+"""Named-axis parameter tagging (the levanter/haliax idiom, GSPMD-style).
+
+Models annotate every parameter at creation time with *logical* axis names
+(``p(w, "fsdp", "mlp")``); the mapping from logical names to physical mesh
+axes lives entirely in ``repro.dist.sharding.Rules``. A tagged leaf is the
+pair ``(array, Axes)`` — a plain tuple so it traces through ``jax.jit`` /
+``jax.eval_shape`` untouched — and ``split_tree`` separates a tagged pytree
+into a values tree (what jitted code consumes) and an axes tree (static
+metadata the sharding layer consumes).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+
+LAYER_AXIS = "layer"  # leading axis of scan-stacked per-layer parameters
+
+
+@dataclasses.dataclass(frozen=True)
+class Axes:
+    """Logical axis names for one tensor, one entry per dimension.
+
+    ``None`` marks a dimension with no sharding preference (replicated
+    unless the optimizer-state C1 upgrade picks it). ``Axes`` is not a
+    pytree container, so it survives ``tree_map`` as a static leaf.
+    """
+
+    names: Tuple[Optional[str], ...]
+
+    def __post_init__(self):
+        object.__setattr__(self, "names", tuple(self.names))
+
+    def __iter__(self):
+        return iter(self.names)
+
+    def __len__(self) -> int:
+        return len(self.names)
+
+    def with_prefix(self, name: str) -> "Axes":
+        return Axes((name,) + self.names)
+
+
+def p(array: Any, *names: Optional[str]) -> Tuple[Any, Axes]:
+    """Tag ``array`` with one logical axis name per dimension.
+
+    ``p(w, "fsdp", "mlp")`` -> ``(w, Axes(("fsdp", "mlp")))``. The names
+    tuple may be shorter than ``array.ndim``; missing trailing dims are
+    treated as unsharded by the spec derivation.
+    """
+    return (array, Axes(tuple(names)))
+
+
+def _is_tagged(leaf: Any) -> bool:
+    return (
+        isinstance(leaf, tuple)
+        and len(leaf) == 2
+        and isinstance(leaf[1], Axes)
+    )
+
+
+def _leaf_axes(leaf: Any) -> Axes:
+    if _is_tagged(leaf):
+        return leaf[1]
+    ndim = getattr(leaf, "ndim", None)
+    return Axes((None,) * ndim if ndim is not None else ())
+
+
+def split_tree(tree: Any) -> Tuple[Any, Any]:
+    """Split a tagged pytree into ``(values, axes)`` trees.
+
+    Untagged leaves pass through with all-``None`` axes, so the function is
+    safe on mixed trees and idempotent on already-split values trees.
+    """
+    vals = jax.tree_util.tree_map(
+        lambda l: l[0] if _is_tagged(l) else l, tree, is_leaf=_is_tagged
+    )
+    axes = jax.tree_util.tree_map(_leaf_axes, tree, is_leaf=_is_tagged)
+    return vals, axes
+
+
+def retag_tree(vals: Any, axes: Any) -> Any:
+    """Inverse of ``split_tree``: zip values and axes back into tagged leaves."""
+    return jax.tree_util.tree_map(lambda v, a: (v, a), vals, axes)
+
+
+def stack_axes(axes: Any, name: str = LAYER_AXIS) -> Any:
+    """Prefix every ``Axes`` in the tree with a stacking axis.
+
+    Used for scan-stacked layers: ``vmap`` over per-layer init adds a
+    leading layer dimension to every value, and ``stack_axes`` adds the
+    matching ``"layer"`` logical axis (never mapped to a mesh axis) so
+    ``retag_tree(stacked_vals, stack_axes(proto_axes))`` stays consistent.
+    """
+    return jax.tree_util.tree_map(
+        lambda a: a.with_prefix(name),
+        axes,
+        is_leaf=lambda x: isinstance(x, Axes),
+    )

@@ -83,6 +83,57 @@ def collective_bytes(hlo_text: str):
 
 
 # --------------------------------------------------------------------------- #
+# Derived sharding-spec table (--specs): every parameter's logical axes and
+# the PartitionSpecs Rules derives for master weights vs optimizer moments.
+# --------------------------------------------------------------------------- #
+def spec_table(arch: str, *, multi_pod: bool = False, mode: str = None):
+    """Rows of (param, shape, logical axes, param spec, opt spec)."""
+    from repro.dist.tagging import Axes
+
+    cfg = get_config(arch)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mode = mode or cfg.param_sharding
+    rules = Rules(mesh, mode, seq_parallel=cfg.seq_parallel)
+    params, axes = T.init_params_and_axes(cfg, jax.random.PRNGKey(0))
+
+    is_axes = lambda x: isinstance(x, Axes)
+    ax_leaves, _ = jax.tree_util.tree_flatten_with_path(axes, is_leaf=is_axes)
+    shp_leaves = jax.tree_util.tree_leaves(params)
+    rows = []
+    for (path, a), s in zip(ax_leaves, shp_leaves):
+        rows.append({
+            "param": jax.tree_util.keystr(path).lstrip("."),
+            "shape": tuple(s.shape),
+            "axes": tuple(a.names),
+            "param_spec": str(rules.param_spec(a.names, s.shape)),
+            "opt_spec": str(rules.opt_spec(a.names, s.shape)),
+        })
+    meta = {
+        "arch": arch,
+        "mode": mode,
+        "seq_parallel": cfg.seq_parallel,
+        "mesh": {a: int(mesh.shape[a]) for a in mesh.axis_names},
+    }
+    return meta, rows
+
+
+def print_spec_table(arch: str, *, multi_pod: bool = False,
+                     mode: str = None):
+    meta, rows = spec_table(arch, multi_pod=multi_pod, mode=mode)
+    mesh_desc = ",".join(f"{a}={n}" for a, n in meta["mesh"].items())
+    print(f"== spec table: {arch} (mode={meta['mode']}, "
+          f"seq_parallel={meta['seq_parallel']}, mesh {mesh_desc}) ==")
+    hdr = f"{'param':44s} {'shape':22s} {'axes':28s} {'param_spec':26s} opt_spec"
+    print(hdr)
+    print("-" * len(hdr))
+    for r in rows:
+        print(f"{r['param']:44s} {str(r['shape']):22s} "
+              f"{str(r['axes']):28s} {r['param_spec']:26s} {r['opt_spec']}")
+    sys.stdout.flush()
+    return meta, rows
+
+
+# --------------------------------------------------------------------------- #
 # Per-(arch, shape, mesh) dry run.
 # --------------------------------------------------------------------------- #
 def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
@@ -247,7 +298,28 @@ def main():
     ap.add_argument("--all", action="store_true",
                     help="all (arch x shape) on the single-pod mesh")
     ap.add_argument("--json", default=None)
+    ap.add_argument("--specs", action="store_true",
+                    help="print the Rules-derived sharding-spec table "
+                         "per arch instead of lowering/compiling")
     args = ap.parse_args()
+
+    if args.specs:
+        tables = []
+        for arch in (list_archs() if args.all or not args.arch
+                     else [args.arch]):
+            meta, rows = print_spec_table(
+                arch, multi_pod=args.multi_pod,
+                mode=os.environ.get("REPRO_SERVE_MODE"),
+            )
+            tables.append({**meta, "rows": [
+                {**r, "shape": list(r["shape"]), "axes": list(r["axes"])}
+                for r in rows
+            ]})
+            print()
+        if args.json:
+            with open(args.json, "w") as f:
+                json.dump(tables, f, indent=1)
+        return 0
 
     results = []
     if args.all:

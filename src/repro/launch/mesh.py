@@ -7,33 +7,32 @@ initialization and only then builds the mesh.
 """
 from __future__ import annotations
 
-import jax
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
+
+from repro.dist.compat import AxisType, make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     """16x16 single pod (256 chips) or 2x16x16 two-pod (512 chips)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(AxisType.Auto,) * len(axes)
-    )
+    return make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
 
 
 def make_test_mesh(data: int = 2, model: int = 2, pod: int = 0) -> Mesh:
     """Small mesh for CPU tests (requires host-device-count >= product)."""
     if pod:
-        return jax.make_mesh(
+        return make_mesh(
             (pod, data, model), ("pod", "data", "model"),
             axis_types=(AxisType.Auto,) * 3,
         )
-    return jax.make_mesh(
+    return make_mesh(
         (data, model), ("data", "model"), axis_types=(AxisType.Auto,) * 2
     )
 
 
 def single_device_mesh() -> Mesh:
     """1x1 mesh: lets the same pjit code paths run on one CPU device."""
-    return jax.make_mesh(
+    return make_mesh(
         (1, 1), ("data", "model"), axis_types=(AxisType.Auto,) * 2
     )

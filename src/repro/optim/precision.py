@@ -37,8 +37,11 @@ def compute_cast(params, axes, rules, dtype="bfloat16"):
         if rules is not None:
             from jax.sharding import NamedSharding
 
+            # param_spec, not spec_for: the compute copy mirrors the
+            # master-weight layout (in wus mode params stay replicated
+            # across data; only the moments take the data axis).
             c = jax.lax.with_sharding_constraint(
-                c, NamedSharding(rules.mesh, rules.spec_for(a.names, w.shape))
+                c, NamedSharding(rules.mesh, rules.param_spec(a.names, w.shape))
             )
         return c
 

