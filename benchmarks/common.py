@@ -1,23 +1,20 @@
-"""Shared benchmark utilities: timing + CSV row emission."""
-import sys
-import time
-
-import jax
+"""Back-compat shims over ``repro.bench`` (the timing/record logic moved
+there). New code should take a ``repro.bench.Context`` — see any module in
+this directory — and use ``ctx.timeit`` / ``ctx.record``.
+"""
+from repro.bench.registry import Context, timeit as _timeit
 
 
 def timeit(fn, *args, warmup=2, iters=5):
     """Median wall time per call in microseconds (blocks on device)."""
-    for _ in range(warmup):
-        jax.block_until_ready(fn(*args))
-    times = []
-    for _ in range(iters):
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn(*args))
-        times.append(time.perf_counter() - t0)
-    times.sort()
-    return times[len(times) // 2] * 1e6
+    return _timeit(fn, *args, warmup=warmup, iters=iters).median_us
 
 
 def emit(name, us, derived=""):
-    print(f"{name},{us if us is not None else ''},{derived}")
-    sys.stdout.flush()
+    print(f"{name},{us if us is not None else ''},{derived}", flush=True)
+
+
+def standalone_context(**kw) -> Context:
+    """Context for direct single-module runs: from the repo root,
+    ``PYTHONPATH=src python -m benchmarks.<module>``."""
+    return Context(**kw)

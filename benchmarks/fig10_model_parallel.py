@@ -10,17 +10,12 @@ structural quantities the paper attributes the <4x scaling to):
 with T1 = conv FLOPs / peak, halo_comm from the exchanged rows per conv
 layer over ICI, and the non-partitioned ops (paper: "some TF ops ... are
 executed on spatial worker 0") as the serial fraction. The correctness of
-the partitioned conv itself is covered by tests/dist_checks.py.
+the partitioned conv itself is covered by tests/dist_checks.py. Analytic:
+identical in smoke and full profiles.
 """
-import dataclasses
-
-import jax
-import numpy as np
-
-from benchmarks.common import emit
+from benchmarks.common import standalone_context
 from repro.analysis import HW
-from repro.models import resnet as R
-from repro.models import ssd as S
+from repro.bench import benchmark
 
 
 def _conv_layers(image, widths):
@@ -55,17 +50,18 @@ def predicted_speedup(n, image=300, serial_frac=0.05, batch=4):
     return t1 / tn
 
 
-def run():
-    rows = []
-    for model, image, serial in (("ssd", 300, 0.06), ("maskrcnn_stage1",
-                                                      800, 0.10)):
+@benchmark("fig10_model_parallel",
+           paper_ref="Fig. 10 (spatial-partitioning speedup)",
+           units="analytic", derived_keys=("predicted_speedup",))
+def run(ctx):
+    for model, image, serial in (("ssd", 300, 0.06),
+                                 ("maskrcnn_stage1", 800, 0.10)):
         for n in (1, 2, 4):
             s = predicted_speedup(n, image=image, serial_frac=serial)
-            rows.append((f"fig10/{model}_cores{n}", None,
-                         f"predicted_speedup={s:.2f}"))
-            emit(*rows[-1])
-    return rows
+            ctx.record(f"fig10/{model}_cores{n}",
+                       predicted_speedup=round(s, 2), cores=n)
+    return ctx.records
 
 
 if __name__ == "__main__":
-    run()
+    run(standalone_context())

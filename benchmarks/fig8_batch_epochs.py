@@ -5,13 +5,15 @@ Paper: epochs-to-target grows with batch (e.g. SSD +22% at 1024 vs 256,
 +27% more at 2048). CPU-scale reproduction: tiny LM on a fixed synthetic
 corpus; we report steps-to-target-NLL, normalized to EPOCHS (passes over
 the same corpus), for batch in {8, 16, 32}. The reproduced claim is the
-monotone epoch growth with batch size at fixed tuning.
+monotone epoch growth with batch size at fixed tuning. Smoke profile:
+two batch sizes, tiny epoch budget (path coverage only).
 """
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import standalone_context
+from repro.bench import benchmark
 from repro.configs import get_config
 from repro.dist import split_tree
 from repro.models import lm
@@ -20,10 +22,9 @@ from repro.optim import adam, constant
 CORPUS = 256  # examples
 SEQ = 32
 TARGET = 2.6
-MAX_EPOCHS = 60
 
 
-def epochs_to_target(batch, seed=0):
+def epochs_to_target(batch, seed=0, max_epochs=60):
     cfg = get_config("yi-9b").reduced()
     vals, _ = split_tree(lm.init_lm(cfg, jax.random.PRNGKey(seed)))
     rng = np.random.default_rng(7)
@@ -42,24 +43,27 @@ def epochs_to_target(batch, seed=0):
         return vals, st, m["nll"]
 
     steps_per_epoch = CORPUS // batch
-    for epoch in range(MAX_EPOCHS):
+    for epoch in range(max_epochs):
         for i in range(steps_per_epoch):
             b = corpus[i * batch:(i + 1) * batch]
             vals, st, nll = step(vals, st, b)
         if float(nll) <= TARGET:
             return epoch + 1, float(nll)
-    return MAX_EPOCHS, float(nll)
+    return max_epochs, float(nll)
 
 
-def run():
-    rows = []
-    for batch in (8, 16, 32):
-        ep, nll = epochs_to_target(batch)
-        rows.append((f"fig8/batch{batch}", None,
-                     f"epochs_to_nll{TARGET}={ep};final={nll:.3f}"))
-        emit(*rows[-1])
-    return rows
+@benchmark("fig8_batch_epochs",
+           paper_ref="Fig. 8 (epochs-to-converge vs batch size)",
+           units="epochs", derived_keys=("epochs_to_target", "final_nll"))
+def run(ctx):
+    batches = (8,) if ctx.smoke else (8, 16, 32)
+    max_epochs = 2 if ctx.smoke else 60
+    for batch in batches:
+        ep, nll = epochs_to_target(batch, max_epochs=max_epochs)
+        ctx.record(f"fig8/batch{batch}", epochs_to_target=ep,
+                   final_nll=round(nll, 3), target_nll=TARGET)
+    return ctx.records
 
 
 if __name__ == "__main__":
-    run()
+    run(standalone_context())

@@ -4,12 +4,14 @@ The paper reports end-to-end seconds for its five MLPerf models at pod
 scale; the CPU analogue is the per-train-step wall time of each model's
 reduced config, which feeds the derived steps/s column. Includes the
 Transformer max-seq-97 trick (paper §3): step time with seq 256 vs 97.
+Smoke profile: ResNet only (one jit compile).
 """
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit, timeit
+from benchmarks.common import standalone_context
+from repro.bench import benchmark
 from repro.dist import split_tree
 from repro.models import gnmt as G
 from repro.models import resnet as R
@@ -30,10 +32,14 @@ def _train_step(loss_fn, vals, batch, opt):
     return lambda: step(vals, st, batch)[2]
 
 
-def run():
+@benchmark("fig9_step_times", paper_ref="Fig. 9 (per-model step time)",
+           units="us", derived_keys=("steps_per_s",))
+def run(ctx):
     rng = np.random.default_rng(0)
     opt = adam(constant(1e-3))
-    rows = []
+
+    def rec(name, t):
+        ctx.record(name, t, steps_per_s=round(1e6 / t.median_us, 2))
 
     # ResNet-50 (tiny)
     cfg = R.RESNET_TINY
@@ -41,9 +47,23 @@ def run():
     batch = {"images": jnp.asarray(rng.standard_normal((8, 16, 16, 3)),
                                    jnp.float32),
              "labels": jnp.asarray(rng.integers(0, 10, 8))}
-    us = timeit(_train_step(lambda p, b: R.loss_fn(p, cfg, b), vals, batch,
-                            opt))
-    rows.append(("fig9/resnet50_tiny_step", us, f"steps_per_s={1e6/us:.2f}"))
+    rec("fig9/resnet50_tiny_step",
+        ctx.timeit(_train_step(lambda p, b: R.loss_fn(p, cfg, b), vals,
+                               batch, opt)))
+
+    if ctx.smoke:
+        # each model is a separate jit compile; smoke covers one
+        return ctx.records
+
+    # Transformer (tiny) — seq 256 vs the paper's eval-truncated 97
+    tcfg = TM.TRANSFORMER_TINY
+    tvals, _ = split_tree(TM.init_transformer(tcfg, jax.random.PRNGKey(0)))
+    for seq in (256, 97):
+        tb = {"src": jnp.asarray(rng.integers(1, tcfg.vocab, (2, seq))),
+              "tgt": jnp.asarray(rng.integers(1, tcfg.vocab, (2, seq)))}
+        rec(f"fig9/transformer_tiny_seq{seq}",
+            ctx.timeit(_train_step(lambda p, b: TM.loss_fn(p, tcfg, b),
+                                   tvals, tb, opt)))
 
     # SSD (tiny)
     scfg = S.SSD_TINY
@@ -56,34 +76,20 @@ def run():
         "box_targets": jnp.asarray(rng.standard_normal((4, A, 4)),
                                    jnp.float32),
     }
-    us = timeit(_train_step(lambda p, b: S.loss_fn(p, scfg, b), svals,
-                            sbatch, opt))
-    rows.append(("fig9/ssd_tiny_step", us, f"steps_per_s={1e6/us:.2f}"))
-
-    # Transformer (tiny) — seq 256 vs the paper's eval-truncated 97
-    tcfg = TM.TRANSFORMER_TINY
-    tvals, _ = split_tree(TM.init_transformer(tcfg, jax.random.PRNGKey(0)))
-    for seq in (256, 97):
-        tb = {"src": jnp.asarray(rng.integers(1, tcfg.vocab, (2, seq))),
-              "tgt": jnp.asarray(rng.integers(1, tcfg.vocab, (2, seq)))}
-        us = timeit(_train_step(lambda p, b: TM.loss_fn(p, tcfg, b), tvals,
-                                tb, opt))
-        rows.append((f"fig9/transformer_tiny_seq{seq}", us,
-                     f"steps_per_s={1e6/us:.2f}"))
+    rec("fig9/ssd_tiny_step",
+        ctx.timeit(_train_step(lambda p, b: S.loss_fn(p, scfg, b), svals,
+                               sbatch, opt)))
 
     # GNMT (tiny)
     gcfg = G.GNMT_TINY
     gvals, _ = split_tree(G.init_gnmt(gcfg, jax.random.PRNGKey(0)))
     gb = {"src": jnp.asarray(rng.integers(1, gcfg.vocab, (4, 24))),
           "tgt": jnp.asarray(rng.integers(1, gcfg.vocab, (4, 24)))}
-    us = timeit(_train_step(lambda p, b: G.loss_fn(p, gcfg, b), gvals, gb,
-                            opt))
-    rows.append(("fig9/gnmt_tiny_step", us, f"steps_per_s={1e6/us:.2f}"))
-
-    for r in rows:
-        emit(*r)
-    return rows
+    rec("fig9/gnmt_tiny_step",
+        ctx.timeit(_train_step(lambda p, b: G.loss_fn(p, gcfg, b), gvals,
+                               gb, opt)))
+    return ctx.records
 
 
 if __name__ == "__main__":
-    run()
+    run(standalone_context())

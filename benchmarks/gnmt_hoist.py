@@ -11,7 +11,7 @@ variant is SLOWER (0.5-0.8x) — the win is TPU-specific (a (B*S,4F) matmul
 keeps the MXU fed where per-step (B,4F) matmuls starve it; CPU has no such
 penalty and pays the extra (B,S,4F) buffer instead). The mathematical
 equivalence of the restructuring is what the tests verify; the speedup
-claim is hardware-conditional.
+claim is hardware-conditional. Smoke profile: batch 2 only.
 """
 import dataclasses
 
@@ -19,32 +19,33 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit, timeit
+from benchmarks.common import standalone_context
+from repro.bench import benchmark
 from repro.dist import split_tree
 from repro.models import gnmt as G
 
 
-def run():
-    rows = []
+@benchmark("gnmt_hoist",
+           paper_ref="§3 GNMT (RNN input-projection hoisting, C9)",
+           units="us", derived_keys=("speedup_vs_inloop",))
+def run(ctx):
     base = dataclasses.replace(G.GNMT_TINY, d_model=128, n_enc_layers=2)
     vals, _ = split_tree(G.init_gnmt(base, jax.random.PRNGKey(0)))
     rng = np.random.default_rng(0)
-    for batch in (2, 16):
+    for batch in ((2,) if ctx.smoke else (2, 16)):
         src = jnp.asarray(rng.integers(1, base.vocab, (batch, 48)))
         times = {}
         for hoist in (True, False):
             cfg = dataclasses.replace(base, hoist_input_projection=hoist)
             fn = jax.jit(lambda v, s: G.encode(v, cfg, s))
-            times[hoist] = timeit(fn, vals, src, warmup=2, iters=5)
+            times[hoist] = ctx.timeit(fn, vals, src)
         name = f"gnmt_hoist/batch{batch}"
-        speed = times[False] / times[True]
-        rows.append((name + "_hoisted", times[True],
-                     f"speedup_vs_inloop={speed:.2f}x"))
-        rows.append((name + "_inloop", times[False], ""))
-    for r in rows:
-        emit(*r)
-    return rows
+        speed = times[False].median_us / times[True].median_us
+        ctx.record(name + "_hoisted", times[True],
+                   speedup_vs_inloop=round(speed, 2))
+        ctx.record(name + "_inloop", times[False])
+    return ctx.records
 
 
 if __name__ == "__main__":
-    run()
+    run(standalone_context())

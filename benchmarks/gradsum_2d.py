@@ -10,12 +10,12 @@ collectives, fp32 grads per C7):
   2-D: reduce-scatter over the fast axis (16), all-reduce over the slow
        axis with 1/16 of the buffer, all-gather back: slow-axis links
        carry 2*(P-1)/P * G/16 — a 16x reduction where it matters.
-Plus a CPU wall-time measurement of the two schedules on an 8-device
-host mesh (structural check; absolute times are CPU artifacts).
+Analytic: identical in smoke and full profiles. (The wall-time
+measurement of the two schedules on a multi-device host mesh lives in
+tests/test_core_distributed.py.)
 """
-import numpy as np
-
-from benchmarks.common import emit
+from benchmarks.common import standalone_context
+from repro.bench import benchmark
 
 RESNET_PARAMS = 25.6e6
 TRANSFORMER_PARAMS = 210e6
@@ -32,23 +32,24 @@ def link_bytes(total_bytes, mesh="2x16x16"):
     return one_d, fast, slow
 
 
-def run():
-    rows = []
+@benchmark("gradsum_2d",
+           paper_ref="§2 Optimize gradient summation (2-D schedule, C2)",
+           units="analytic",
+           derived_keys=("slowlink_MiB", "slowlink_reduction"))
+def run(ctx):
     for name, n in (("resnet50", RESNET_PARAMS),
                     ("transformer", TRANSFORMER_PARAMS)):
         g = n * 4  # fp32 gradient summation (C7)
         one_d, fast, slow = link_bytes(g)
         ratio = one_d / max(slow, 1)
-        rows.append((f"gradsum/{name}_1d_slowlink_MiB", None,
-                     f"{one_d/2**20:.1f}"))
-        rows.append((f"gradsum/{name}_2d_slowlink_MiB", None,
-                     f"{slow/2**20:.1f}"))
-        rows.append((f"gradsum/{name}_slowlink_reduction", None,
-                     f"{ratio:.1f}x (paper: >1.5x throughput)"))
-    for r in rows:
-        emit(*r)
-    return rows
+        ctx.record(f"gradsum/{name}_1d", slowlink_MiB=round(one_d / 2**20, 1))
+        ctx.record(f"gradsum/{name}_2d", slowlink_MiB=round(slow / 2**20, 1),
+                   fastlink_MiB=round(fast / 2**20, 1))
+        ctx.record(f"gradsum/{name}_reduction",
+                   slowlink_reduction=round(ratio, 1),
+                   paper_claim=">1.5x throughput")
+    return ctx.records
 
 
 if __name__ == "__main__":
-    run()
+    run(standalone_context())

@@ -1,12 +1,19 @@
 """§Roofline — three-term roofline per (arch x shape x mesh) from the
-dry-run artifacts (results/dryrun_{1pod,2pod}.json) + the analytic models
-in repro.analysis (see DESIGN.md §6.5 for why both exist).
+analytic models in repro.analysis, merged with the dry-run artifacts
+(results/dryrun_{1pod,2pod}.json) when present (see DESIGN.md §6.5 for
+why both exist).
+
+Without dry-run artifacts the collective term is analytic-unknown (0) and
+each record carries ``source=analytic``; regenerate the measured variant
+with ``python -m repro.launch.dryrun --all --json results/dryrun_1pod.json``
+(or ``--bench-out`` to get the dry-run numbers directly in BENCH schema).
 """
 import json
 import os
 
-from benchmarks.common import emit
+from benchmarks.common import standalone_context
 from repro.analysis import roofline
+from repro.bench import benchmark
 from repro.configs import INPUT_SHAPES, get_config, get_shape, list_archs
 
 ROOT = os.path.join(os.path.dirname(__file__), "..")
@@ -24,34 +31,47 @@ def load_dryruns():
     return out
 
 
-def full_table(multi_pod=False):
+def full_table(multi_pod=False, archs=None):
     dr = load_dryruns()
     rows = []
-    for arch in list_archs():
+    for arch in (archs or list_archs()):
         cfg = get_config(arch)
         for shape_name in INPUT_SHAPES:
             shape = get_shape(shape_name)
+            if (shape.kind == "decode" and shape_name == "long_500k"
+                    and not cfg.supports_long_context()):
+                continue  # same applicability rule as the dry-run
             rec = dr.get((arch, shape_name, multi_pod))
-            if rec is None or "skipped" in rec:
+            if rec is not None and ("skipped" in rec or "error" in rec):
                 continue
-            rows.append(roofline(cfg, shape, rec, multi_pod))
+            row = roofline(cfg, shape, rec, multi_pod)
+            row["source"] = "analytic" if rec is None else "dryrun+analytic"
+            rows.append(row)
     return rows
 
 
-def run():
-    rows = []
-    for r in full_table(multi_pod=False):
-        total = r["compute_s"] + r["memory_s"] + r["collective_s"]
-        derived = (
-            f"compute={r['compute_s']:.3e}s;memory={r['memory_s']:.3e}s;"
-            f"collective={r['collective_s']:.3e}s;dominant={r['dominant']};"
-            f"useful_ratio={r['useful_ratio']:.2f};"
-            f"mem={r['mem_budget_GiB']:.1f}GiB;fits={r['fits_16GiB']}"
+@benchmark("roofline",
+           paper_ref="§Roofline (compute/memory/collective decomposition)",
+           units="analytic",
+           derived_keys=("compute_s", "memory_s", "collective_s",
+                         "dominant", "useful_ratio", "mem_budget_GiB",
+                         "fits_16GiB", "source"))
+def run(ctx):
+    archs = list_archs()[:3] if ctx.smoke else None
+    for r in full_table(multi_pod=False, archs=archs):
+        ctx.record(
+            f"roofline/{r['arch']}/{r['shape']}",
+            compute_s=float(f"{r['compute_s']:.3e}"),
+            memory_s=float(f"{r['memory_s']:.3e}"),
+            collective_s=float(f"{r['collective_s']:.3e}"),
+            dominant=r["dominant"],
+            useful_ratio=round(r["useful_ratio"], 2),
+            mem_budget_GiB=round(r["mem_budget_GiB"], 1),
+            fits_16GiB=r["fits_16GiB"],
+            source=r["source"],
         )
-        rows.append((f"roofline/{r['arch']}/{r['shape']}", None, derived))
-        emit(*rows[-1])
-    return rows
+    return ctx.records
 
 
 if __name__ == "__main__":
-    run()
+    run(standalone_context())

@@ -1,40 +1,15 @@
-"""Benchmark driver — one module per paper table/figure.
+"""Thin alias for ``repro.bench.run`` (the single benchmark driver).
 
-Prints ``name,us_per_call,derived`` CSV rows (see each module's docstring
-for the paper claim it reproduces). Roofline rows read
-results/dryrun_*.json (regenerate with ``python -m repro.launch.dryrun
---all [--multi-pod]``).
+Kept so ``python benchmarks/run.py`` and ``python -m benchmarks.run``
+keep working; all logic — registry, smoke profile, BENCH_*.json artifact
+output — lives in ``repro.bench`` (see docs/benchmarks.md).
 """
+import os
 import sys
-import traceback
 
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-def main() -> None:
-    from benchmarks import (
-        fig8_batch_epochs,
-        fig9_step_times,
-        fig10_model_parallel,
-        gnmt_hoist,
-        gradsum_2d,
-        roofline,
-        table1_lars,
-        wus_overhead,
-    )
+from repro.bench.run import main  # noqa: E402
 
-    print("name,us_per_call,derived")
-    failures = 0
-    for mod in (table1_lars, fig8_batch_epochs, fig9_step_times,
-                fig10_model_parallel, gnmt_hoist, gradsum_2d, wus_overhead,
-                roofline):
-        try:
-            mod.run()
-        except Exception:  # noqa: BLE001
-            failures += 1
-            print(f"{mod.__name__},,FAILED", file=sys.stderr)
-            traceback.print_exc()
-    if failures:
-        raise SystemExit(1)
-
-
-if __name__ == '__main__':
-    main()
+if __name__ == "__main__":
+    sys.exit(main())

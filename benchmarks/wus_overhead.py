@@ -6,46 +6,47 @@ time and ~45% of Transformer/ADAM step time; WUS distributes it 1/N.
 CPU measurement: wall time of the full optimizer update at the real MLPerf
 parameter counts (ResNet-50 25.6M, Transformer-big ~210M) vs the update on
 a 1/256 shard — the same computation each core runs under WUS. Derived
-column: the update-time reduction and the paper-style step-time fractions
-using the paper's measured step times (ResNet 67.1s/1176 steps ≈ 57ms;
-Transformer ≈ 51ms at batch 2048).
+column: the update-time reduction. Smoke profile: 1M-parameter stand-ins
+(the ratio is what smoke checks, not the absolute numbers).
 """
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import emit, timeit
+from benchmarks.common import standalone_context
+from repro.bench import benchmark
 from repro.optim import adam, constant, lars
 
 SHARDS = 256
 PAPER_STEP_MS = {"resnet50_lars": 57.0, "transformer_adam": 51.0}
 
 
-def _update_time(opt, n_params):
+def _update_time(ctx, opt, n_params):
     w = {"w": jnp.ones((n_params,), jnp.float32)}
     g = {"w": jnp.full((n_params,), 1e-3, jnp.float32)}
     st = opt.init(w)
     step = jax.jit(lambda g, s, w: opt.update(g, s, w))
-    return timeit(step, g, st, w, warmup=2, iters=5)
+    return ctx.timeit(step, g, st, w)
 
 
-def run():
-    rows = []
+@benchmark("wus_overhead",
+           paper_ref="§2 Weight update sharding (Fig. 4, C1)",
+           units="us", derived_keys=("params", "reduction_vs_replicated"))
+def run(ctx):
+    scale = 1 / 32 if ctx.smoke else 1.0
     cases = [
-        ("resnet50_lars", lars(constant(0.1)), int(25.6e6)),
-        ("transformer_adam", adam(constant(1e-3)), int(210e6)),
+        ("resnet50_lars", lars(constant(0.1)), int(25.6e6 * scale)),
+        ("transformer_adam", adam(constant(1e-3)), int(210e6 * scale)),
     ]
     for name, opt, n in cases:
-        full_us = _update_time(opt, n)
-        shard_us = _update_time(opt, max(n // SHARDS, 1024))
-        reduction = full_us / shard_us
-        rows.append((f"wus/{name}_full_update", full_us,
-                     f"params={n}"))
-        rows.append((f"wus/{name}_sharded_update", shard_us,
-                     f"reduction={reduction:.0f}x_vs_replicated"))
-    for r in rows:
-        emit(*r)
-    return rows
+        full = _update_time(ctx, opt, n)
+        shard = _update_time(ctx, opt, max(n // SHARDS, 1024))
+        reduction = full.median_us / shard.median_us
+        ctx.record(f"wus/{name}_full_update", full, params=n)
+        ctx.record(f"wus/{name}_sharded_update", shard,
+                   params=max(n // SHARDS, 1024),
+                   reduction_vs_replicated=round(reduction, 1))
+    return ctx.records
 
 
 if __name__ == "__main__":
-    run()
+    run(standalone_context())

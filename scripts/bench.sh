@@ -1,0 +1,20 @@
+#!/usr/bin/env bash
+# Run the benchmark suite and diff against the committed baseline.
+# Usage: scripts/bench.sh [--smoke] [extra repro.bench.run args...]
+# Writes BENCH_local.json at the repo root (gitignored) and, when the
+# committed baseline BENCH_pr2.json exists, prints the comparison
+# (informational: --no-wall unless BENCH_BASELINE_SAME_MACHINE=1).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
+
+python -m repro.bench.run --tag local --out BENCH_local.json "$@"
+
+if [[ -f BENCH_pr2.json ]]; then
+  wall_flag="--no-wall"
+  [[ "${BENCH_BASELINE_SAME_MACHINE:-0}" == "1" ]] && wall_flag=""
+  python -m repro.bench.compare BENCH_pr2.json BENCH_local.json \
+    ${wall_flag} --allow-missing || true
+fi

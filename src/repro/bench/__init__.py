@@ -1,0 +1,54 @@
+"""``repro.bench`` — the measurement spine of the repo.
+
+The paper's claims are quantitative; this package makes the repo's
+reproduction of them *longitudinally* measurable:
+
+  * ``registry`` — ``@benchmark(name, paper_ref, units, derived_keys)``
+    decorator + ``REGISTRY``; ``Context`` (median/IQR ``timeit``,
+    structured ``record``) handed to every ``benchmarks/*`` module;
+  * ``schema`` — the versioned ``BENCH_*.json`` artifact format,
+    ``validate``/``load``/``dump``, environment metadata, and the
+    dry-run/roofline fold (``records_from_dryrun``);
+  * ``run`` — ``python -m repro.bench.run [--smoke] [--only ...]
+    [--out BENCH_<tag>.json]``;
+  * ``compare`` — ``python -m repro.bench.compare old.json new.json
+    --threshold 1.15`` (nonzero exit on regression; CI gate).
+
+See docs/benchmarks.md for the workflow and BENCH_pr2.json for the
+committed baseline.
+"""
+from repro.bench.registry import (
+    BENCHMARK_MODULES,
+    REGISTRY,
+    BenchmarkDef,
+    Context,
+    Timing,
+    benchmark,
+    load_all,
+    timeit,
+)
+from repro.bench.schema import (
+    SCHEMA_VERSION,
+    dryrun_artifact,
+    environment_metadata,
+    make_artifact,
+    records_from_dryrun,
+    validate,
+)
+
+__all__ = [
+    "BENCHMARK_MODULES",
+    "BenchmarkDef",
+    "Context",
+    "REGISTRY",
+    "SCHEMA_VERSION",
+    "Timing",
+    "benchmark",
+    "dryrun_artifact",
+    "environment_metadata",
+    "load_all",
+    "make_artifact",
+    "records_from_dryrun",
+    "timeit",
+    "validate",
+]

@@ -1,0 +1,137 @@
+"""Diff two ``BENCH_*.json`` artifacts; exit nonzero on regression.
+
+Usage::
+
+    PYTHONPATH=src python -m repro.bench.compare old.json new.json
+        [--threshold 1.15] [--no-wall] [--allow-missing]
+
+Regressions (any one exits 1):
+
+  * a record present in ``old`` is missing from ``new``, or was timed
+    in ``old`` but lost its ``wall_us`` in ``new`` (coverage
+    regressions; suppress with ``--allow-missing``);
+  * a timed record got slower than ``threshold`` x the old median
+    (skipped under ``--no-wall`` — the cross-machine profile CI uses
+    when comparing a runner's artifact against the committed baseline);
+  * a benchmark that was ``ok`` in ``old`` is ``failed`` in ``new``.
+
+Sub-``--min-us`` medians are never compared: at CPU-noise timescales a
+ratio is meaningless.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import Dict, Tuple
+
+from repro.bench import schema
+
+
+def _records(artifact) -> Dict[Tuple[str, str], dict]:
+    out = {}
+    for bname, entry in artifact["benchmarks"].items():
+        for rec in entry["records"]:
+            out[(bname, rec["name"])] = rec
+    return out
+
+
+def compare(old, new, *, threshold: float = 1.15, check_wall: bool = True,
+            allow_missing: bool = False, min_us: float = 50.0):
+    """Return (report_lines, regressions)."""
+    lines, regressions = [], []
+    old_recs, new_recs = _records(old), _records(new)
+
+    for bname, entry in old["benchmarks"].items():
+        new_entry = new["benchmarks"].get(bname)
+        if new_entry is None:
+            if not allow_missing:
+                regressions.append(f"benchmark {bname!r} disappeared")
+            continue
+        if entry["status"] == "ok" and new_entry["status"] != "ok":
+            regressions.append(f"benchmark {bname!r} now failing: "
+                               f"{(new_entry.get('error') or '')[:200]}")
+
+    for key, old_rec in sorted(old_recs.items()):
+        bname, rname = key
+        new_rec = new_recs.get(key)
+        if new_rec is None:
+            if not allow_missing:
+                regressions.append(f"record {bname}:{rname} disappeared")
+            continue
+        ow, nw = old_rec.get("wall_us"), new_rec.get("wall_us")
+        if ow is not None and nw is None:
+            # a record that used to carry a timing lost it — that's a
+            # measurement-coverage regression, wall flags notwithstanding
+            if not allow_missing:
+                regressions.append(
+                    f"record {bname}:{rname} lost its wall_us timing"
+                )
+            continue
+        if ow is None:
+            lines.append(f"  {bname}:{rname}  (derived-only)")
+            continue
+        o, n = ow["median_us"], nw["median_us"]
+        if not check_wall:
+            lines.append(f"  {bname}:{rname}  {o:.1f}us -> {n:.1f}us "
+                         f"(wall not compared)")
+            continue
+        if o < min_us and n < min_us:
+            lines.append(f"  {bname}:{rname}  {o:.1f}us -> {n:.1f}us "
+                         f"(below {min_us}us noise floor)")
+            continue
+        ratio = n / max(o, 1e-9)
+        mark = ""
+        if ratio > threshold:
+            mark = f"  REGRESSION (> {threshold:.2f}x)"
+            regressions.append(
+                f"{bname}:{rname} slowed {ratio:.2f}x "
+                f"({o:.1f}us -> {n:.1f}us)"
+            )
+        elif ratio < 1.0 / threshold:
+            mark = "  improved"
+        lines.append(f"  {bname}:{rname}  {o:.1f}us -> {n:.1f}us "
+                     f"({ratio:.2f}x){mark}")
+
+    new_only = sorted(set(new_recs) - set(old_recs))
+    for bname, rname in new_only:
+        lines.append(f"  {bname}:{rname}  (new)")
+    return lines, regressions
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="repro.bench.compare",
+                                 description=__doc__.splitlines()[0])
+    ap.add_argument("old")
+    ap.add_argument("new")
+    ap.add_argument("--threshold", type=float, default=1.15,
+                    help="slowdown ratio that counts as regression")
+    ap.add_argument("--no-wall", action="store_true",
+                    help="skip wall-time ratios (cross-machine compare); "
+                         "coverage and status are still enforced")
+    ap.add_argument("--allow-missing", action="store_true",
+                    help="missing records are not regressions")
+    ap.add_argument("--min-us", type=float, default=50.0,
+                    help="noise floor below which medians are not compared")
+    args = ap.parse_args(argv)
+
+    old = schema.load(args.old)
+    new = schema.load(args.new)
+    lines, regressions = compare(
+        old, new, threshold=args.threshold, check_wall=not args.no_wall,
+        allow_missing=args.allow_missing, min_us=args.min_us,
+    )
+    print(f"compare {args.old} ({old['tag']}) -> {args.new} "
+          f"({new['tag']}):")
+    for ln in lines:
+        print(ln)
+    if regressions:
+        print(f"\n{len(regressions)} regression(s):", file=sys.stderr)
+        for r in regressions:
+            print(f"  {r}", file=sys.stderr)
+        return 1
+    print("\nno regressions")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

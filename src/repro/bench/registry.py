@@ -1,0 +1,172 @@
+"""Benchmark registry + run context.
+
+Every module under ``benchmarks/`` declares exactly what it measures with
+
+    @benchmark("fig9_step_times", paper_ref="Fig. 9", units="us",
+               derived_keys=("steps_per_s",))
+    def run(ctx): ...
+
+and the decorated function receives a :class:`Context` that owns all
+timing policy (warmup/iters, smoke scaling) and collects structured
+records — the modules never print or format results themselves. The
+registry is what makes the suite *enumerable*: the runner, the CI smoke
+job, and the registry-completeness test all iterate ``REGISTRY``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+import time
+from typing import Any, Callable, Dict, Optional, Tuple
+
+# Modules expected to register benchmarks (the paper-figure reproductions).
+# ``benchmarks.common`` and ``benchmarks.run`` are infrastructure, not
+# benchmarks, so they are deliberately absent.
+BENCHMARK_MODULES = (
+    "benchmarks.table1_lars",
+    "benchmarks.fig8_batch_epochs",
+    "benchmarks.fig9_step_times",
+    "benchmarks.fig10_model_parallel",
+    "benchmarks.gnmt_hoist",
+    "benchmarks.gradsum_2d",
+    "benchmarks.wus_overhead",
+    "benchmarks.roofline",
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class BenchmarkDef:
+    """One registered benchmark: metadata + the callable that runs it."""
+
+    name: str
+    paper_ref: str      # the paper figure/table/section this reproduces
+    units: str          # units of the wall_us column ("us", "analytic", ...)
+    derived_keys: Tuple[str, ...]  # keys records may carry in "derived"
+    fn: Callable[["Context"], Any]
+    module: str
+
+
+REGISTRY: Dict[str, BenchmarkDef] = {}
+
+
+def benchmark(name: str, *, paper_ref: str, units: str = "us",
+              derived_keys: Tuple[str, ...] = ()):
+    """Register ``fn(ctx)`` as benchmark ``name``. Re-registration by the
+    same module is idempotent (repeated imports under different sys.path
+    entries must not duplicate or error)."""
+    def deco(fn):
+        existing = REGISTRY.get(name)
+        if existing is not None and existing.module != fn.__module__:
+            raise ValueError(
+                f"benchmark {name!r} registered twice: "
+                f"{existing.module} and {fn.__module__}"
+            )
+        REGISTRY[name] = BenchmarkDef(
+            name=name, paper_ref=paper_ref, units=units,
+            derived_keys=tuple(derived_keys), fn=fn, module=fn.__module__,
+        )
+        return fn
+    return deco
+
+
+def load_all() -> Dict[str, BenchmarkDef]:
+    """Import every benchmark module so its ``@benchmark`` runs.
+
+    ``benchmarks`` lives at the repo root (not under ``src``); when the
+    caller's sys.path misses it (e.g. ``python -m repro.bench.run`` from
+    elsewhere), fall back to the root inferred from this file's location.
+    """
+    import os
+    import sys
+    try:
+        importlib.import_module("benchmarks.common")
+    except ImportError:
+        root = os.path.abspath(
+            os.path.join(os.path.dirname(__file__), "..", "..", "..")
+        )
+        if root not in sys.path:
+            sys.path.insert(0, root)
+    for mod in BENCHMARK_MODULES:
+        importlib.import_module(mod)
+    return REGISTRY
+
+
+# --------------------------------------------------------------------------- #
+# Timing.
+# --------------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class Timing:
+    """Median + IQR wall time per call, in microseconds."""
+
+    median_us: float
+    iqr_us: float
+    iters: int
+    warmup: int
+
+    def as_dict(self) -> Dict[str, Any]:
+        return {"median_us": self.median_us, "iqr_us": self.iqr_us,
+                "iters": self.iters, "warmup": self.warmup}
+
+
+def timeit(fn, *args, warmup: int = 2, iters: int = 5) -> Timing:
+    """Time ``fn(*args)`` (blocking on device) over ``iters`` calls."""
+    import jax
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(max(iters, 1)):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    n = len(times)
+    median = times[n // 2]
+    q1, q3 = times[n // 4], times[(3 * n) // 4]
+    return Timing(median_us=median * 1e6, iqr_us=(q3 - q1) * 1e6,
+                  iters=n, warmup=warmup)
+
+
+# --------------------------------------------------------------------------- #
+# Run context.
+# --------------------------------------------------------------------------- #
+class Context:
+    """Per-run knobs + record sink handed to every benchmark.
+
+    Smoke mode shrinks everything (1 warmup / 2 iters, and each module's
+    own problem sizes via ``ctx.smoke``) so the full suite finishes in
+    well under a minute on CPU — the CI profile.
+    """
+
+    def __init__(self, *, smoke: bool = False, warmup: Optional[int] = None,
+                 iters: Optional[int] = None, verbose: bool = True):
+        self.smoke = smoke
+        self.warmup = warmup if warmup is not None else (1 if smoke else 2)
+        self.iters = iters if iters is not None else (2 if smoke else 5)
+        self.verbose = verbose
+        self.records = []
+
+    def timeit(self, fn, *args, warmup: Optional[int] = None,
+               iters: Optional[int] = None) -> Timing:
+        return timeit(fn, *args,
+                      warmup=self.warmup if warmup is None else warmup,
+                      iters=self.iters if iters is None else iters)
+
+    def record(self, name: str, timing: Optional[Timing] = None,
+               **derived) -> Dict[str, Any]:
+        """Append one structured record (and echo it when verbose)."""
+        rec = {
+            "name": name,
+            "wall_us": timing.as_dict() if timing is not None else None,
+            "derived": derived,
+        }
+        self.records.append(rec)
+        if self.verbose:
+            us = f"{timing.median_us:.1f}" if timing is not None else ""
+            extra = ";".join(f"{k}={v}" for k, v in derived.items())
+            print(f"{name},{us},{extra}", flush=True)
+        return rec
+
+    def drain(self):
+        """Return and clear the accumulated records."""
+        out, self.records = self.records, []
+        return out

@@ -1,0 +1,107 @@
+"""Benchmark suite runner.
+
+Usage::
+
+    PYTHONPATH=src python -m repro.bench.run [--smoke] [--only a,b]
+        [--out BENCH_<tag>.json] [--tag TAG] [--warmup N] [--iters N]
+
+Runs every registered benchmark (see ``repro.bench.registry``), captures
+median + IQR wall times and derived quantities, and writes a versioned
+``BENCH_*.json`` artifact (schema in ``repro.bench.schema``). ``--smoke``
+is the CI profile: reduced warmup/iters and each module's reduced problem
+sizes, so the full suite finishes in under a minute on CPU. A benchmark
+that raises is recorded as ``status: failed`` (the artifact is still
+written) and the process exits nonzero.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+from repro.bench import schema
+from repro.bench.registry import REGISTRY, Context, load_all
+
+
+def run_suite(*, smoke: bool = False, only=None, warmup=None, iters=None,
+              verbose: bool = True):
+    """Run the (filtered) suite; return (entries, failures)."""
+    load_all()
+    names = list(REGISTRY)
+    if only:
+        unknown = [n for n in only if n not in REGISTRY]
+        if unknown:
+            raise SystemExit(
+                f"unknown benchmark(s) {unknown}; known: {names}"
+            )
+        names = [n for n in names if n in set(only)]
+
+    entries = {}
+    failures = 0
+    for name in names:
+        bd = REGISTRY[name]
+        ctx = Context(smoke=smoke, warmup=warmup, iters=iters,
+                      verbose=verbose)
+        if verbose:
+            print(f"== {name} ({bd.paper_ref}) ==", flush=True)
+        t0 = time.perf_counter()
+        try:
+            bd.fn(ctx)
+            status, error = "ok", None
+        except Exception:  # noqa: BLE001 — record + continue
+            status, error = "failed", traceback.format_exc(limit=10)
+            failures += 1
+            if verbose:
+                print(f"FAILED {name}", file=sys.stderr)
+                traceback.print_exc()
+        entries[name] = schema.bench_entry(
+            paper_ref=bd.paper_ref, units=bd.units,
+            derived_keys=bd.derived_keys, records=ctx.drain(),
+            status=status, error=error,
+            elapsed_s=time.perf_counter() - t0,
+        )
+    return entries, failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="repro.bench.run",
+                                 description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced sizes/iters; the CI profile (<60s)")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated benchmark names")
+    ap.add_argument("--out", default=None,
+                    help="artifact path (default BENCH_<tag>.json)")
+    ap.add_argument("--tag", default="local",
+                    help="artifact tag (default: local)")
+    ap.add_argument("--warmup", type=int, default=None)
+    ap.add_argument("--iters", type=int, default=None)
+    ap.add_argument("--quiet", action="store_true")
+    args = ap.parse_args(argv)
+
+    only = [s.strip() for s in args.only.split(",")] if args.only else None
+    t0 = time.perf_counter()
+    entries, failures = run_suite(
+        smoke=args.smoke, only=only, warmup=args.warmup, iters=args.iters,
+        verbose=not args.quiet,
+    )
+    elapsed = time.perf_counter() - t0
+
+    probe = Context(smoke=args.smoke, warmup=args.warmup, iters=args.iters,
+                    verbose=False)
+    artifact = schema.make_artifact(
+        entries, tag=args.tag, smoke=args.smoke,
+        warmup=probe.warmup, iters=probe.iters,
+    )
+    out = args.out or f"BENCH_{args.tag}.json"
+    schema.dump(artifact, out)
+
+    n_rec = sum(len(e["records"]) for e in entries.values())
+    print(f"\n{len(entries) - failures}/{len(entries)} benchmarks ok, "
+          f"{n_rec} records, {elapsed:.1f}s -> {out}", flush=True)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

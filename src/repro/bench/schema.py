@@ -1,0 +1,240 @@
+"""The ``BENCH_*.json`` artifact schema (version 1).
+
+One artifact is the complete measurement state of the repo at one commit
+on one machine — measured wall times (median + IQR), derived quantities,
+and the analytic dry-run/roofline numbers folded into the same record
+shape, so the perf trajectory across PRs is a diff of these files
+(``python -m repro.bench.compare old.json new.json``).
+
+Top level::
+
+    {
+      "schema_version": 1,
+      "kind": "repro.bench",
+      "tag": "pr2",                 # artifact label (BENCH_<tag>.json)
+      "smoke": true,                # smoke profile (reduced sizes/iters)?
+      "created_unix": 1753.0,       # time.time() at write
+      "environment": {...},         # jax/python/device metadata
+      "config": {"warmup": 1, "iters": 2},
+      "benchmarks": {<name>: <entry>, ...}
+    }
+
+Per-benchmark entry::
+
+    {
+      "paper_ref": "Fig. 9", "units": "us", "derived_keys": [...],
+      "status": "ok" | "failed", "error": null | "...",
+      "elapsed_s": 1.23,
+      "records": [{"name": "fig9/resnet50_tiny_step",
+                   "wall_us": {"median_us":..., "iqr_us":...,
+                               "iters":..., "warmup":...} | null,
+                   "derived": {...}}, ...]
+    }
+
+``wall_us: null`` marks analytic/derived-only records (fig10, gradsum,
+roofline, dry-run folds) — ``compare`` checks their presence but never
+their timing.
+"""
+from __future__ import annotations
+
+import json
+import platform
+import sys
+import time
+from typing import Any, Dict, List, Optional
+
+SCHEMA_VERSION = 1
+KIND = "repro.bench"
+
+
+def environment_metadata() -> Dict[str, Any]:
+    """Machine/runtime metadata stamped into every artifact."""
+    import jax
+    try:
+        devices = jax.devices()
+        device_kind = devices[0].device_kind
+        device_count = len(devices)
+        backend = jax.default_backend()
+    except Exception:  # noqa: BLE001 — no backend (unusual but possible)
+        device_kind, device_count, backend = "unknown", 0, "unknown"
+    return {
+        "jax_version": jax.__version__,
+        "backend": backend,
+        "device_kind": device_kind,
+        "device_count": device_count,
+        "python": sys.version.split()[0],
+        "platform": platform.platform(),
+        "machine": platform.machine(),
+    }
+
+
+def make_artifact(entries: Dict[str, Dict[str, Any]], *, tag: str,
+                  smoke: bool, warmup: int, iters: int,
+                  environment: Optional[Dict[str, Any]] = None) -> Dict:
+    return {
+        "schema_version": SCHEMA_VERSION,
+        "kind": KIND,
+        "tag": tag,
+        "smoke": bool(smoke),
+        "created_unix": time.time(),
+        "environment": environment if environment is not None
+        else environment_metadata(),
+        "config": {"warmup": warmup, "iters": iters},
+        "benchmarks": entries,
+    }
+
+
+def bench_entry(*, paper_ref: str, units: str, derived_keys, records,
+                status: str = "ok", error: Optional[str] = None,
+                elapsed_s: float = 0.0) -> Dict[str, Any]:
+    return {
+        "paper_ref": paper_ref,
+        "units": units,
+        "derived_keys": list(derived_keys),
+        "status": status,
+        "error": error,
+        "elapsed_s": round(float(elapsed_s), 3),
+        "records": list(records),
+    }
+
+
+# --------------------------------------------------------------------------- #
+# Validation (schema errors as strings, not exceptions, so callers can
+# report them all at once).
+# --------------------------------------------------------------------------- #
+_TOP_KEYS = ("schema_version", "kind", "tag", "smoke", "created_unix",
+             "environment", "config", "benchmarks")
+_ENTRY_KEYS = ("paper_ref", "units", "derived_keys", "status", "error",
+               "elapsed_s", "records")
+_TIMING_KEYS = ("median_us", "iqr_us", "iters", "warmup")
+
+
+def validate(artifact: Any) -> List[str]:
+    """Return a list of schema violations ([] means valid)."""
+    errs: List[str] = []
+    if not isinstance(artifact, dict):
+        return ["artifact is not a JSON object"]
+    for k in _TOP_KEYS:
+        if k not in artifact:
+            errs.append(f"missing top-level key {k!r}")
+    if artifact.get("kind") not in (None, KIND):
+        errs.append(f"kind is {artifact.get('kind')!r}, expected {KIND!r}")
+    if artifact.get("schema_version") not in (None, SCHEMA_VERSION):
+        errs.append(
+            f"schema_version {artifact.get('schema_version')!r} != "
+            f"{SCHEMA_VERSION}"
+        )
+    benches = artifact.get("benchmarks")
+    if not isinstance(benches, dict):
+        errs.append("benchmarks is not an object")
+        return errs
+    for name, entry in benches.items():
+        if not isinstance(entry, dict):
+            errs.append(f"benchmarks[{name!r}] is not an object")
+            continue
+        for k in _ENTRY_KEYS:
+            if k not in entry:
+                errs.append(f"benchmarks[{name!r}] missing key {k!r}")
+        if entry.get("status") not in ("ok", "failed", None):
+            errs.append(f"benchmarks[{name!r}].status "
+                        f"{entry.get('status')!r} invalid")
+        for i, rec in enumerate(entry.get("records", [])):
+            where = f"benchmarks[{name!r}].records[{i}]"
+            if not isinstance(rec, dict) or "name" not in rec:
+                errs.append(f"{where} has no name")
+                continue
+            if "derived" in rec and not isinstance(rec["derived"], dict):
+                errs.append(f"{where}.derived is not an object")
+            w = rec.get("wall_us")
+            if w is not None:
+                if not isinstance(w, dict):
+                    errs.append(f"{where}.wall_us is neither null nor object")
+                else:
+                    for k in _TIMING_KEYS:
+                        if k not in w:
+                            errs.append(f"{where}.wall_us missing {k!r}")
+    return errs
+
+
+def load(path: str) -> Dict:
+    """Load + validate an artifact; raise ValueError on schema errors."""
+    with open(path) as f:
+        artifact = json.load(f)
+    errs = validate(artifact)
+    if errs:
+        raise ValueError(
+            f"{path}: invalid BENCH artifact:\n  " + "\n  ".join(errs)
+        )
+    return artifact
+
+
+def dump(artifact: Dict, path: str) -> None:
+    errs = validate(artifact)
+    if errs:
+        raise ValueError("refusing to write invalid artifact:\n  "
+                         + "\n  ".join(errs))
+    with open(path, "w") as f:
+        json.dump(artifact, f, indent=1, sort_keys=False)
+        f.write("\n")
+
+
+# --------------------------------------------------------------------------- #
+# Dry-run fold: wrap ``repro.launch.dryrun`` results (measured compile
+# stats + collective bytes) and their three-term rooflines as bench
+# records, so analytic and measured numbers live in one artifact.
+# --------------------------------------------------------------------------- #
+def records_from_dryrun(results, *, multi_pod: bool = False):
+    """Bench records for a list of dryrun_one() result dicts."""
+    from repro.analysis import roofline as _roofline
+    from repro.configs import get_config, get_shape
+
+    records = []
+    for rec in results:
+        name = "dryrun/{arch}/{shape}/{mesh}".format(
+            arch=rec.get("arch"), shape=rec.get("shape"),
+            mesh="2pod" if rec.get("multi_pod", multi_pod) else "1pod",
+        )
+        if "error" in rec or "skipped" in rec:
+            records.append({"name": name, "wall_us": None, "derived": {
+                "status": "skipped" if "skipped" in rec else "error",
+                "detail": rec.get("skipped", rec.get("error", "")),
+            }})
+            continue
+        derived = {k: rec[k] for k in (
+            "devices", "flops_per_device", "hbm_bytes_accessed_per_device",
+            "peak_bytes_per_device", "lower_s", "compile_s",
+        ) if k in rec}
+        coll = rec.get("collective_bytes_per_device", {})
+        derived["collective_bytes_per_device_total"] = float(
+            sum(coll.values())
+        )
+        rl = _roofline(get_config(rec["arch"]), get_shape(rec["shape"]),
+                       rec, rec.get("multi_pod", multi_pod))
+        derived.update({
+            "compute_s": rl["compute_s"],
+            "memory_s": rl["memory_s"],
+            "collective_s": rl["collective_s"],
+            "dominant": rl["dominant"],
+            "useful_ratio": rl["useful_ratio"],
+            "mem_budget_GiB": rl["mem_budget_GiB"],
+            "fits_16GiB": rl["fits_16GiB"],
+        })
+        records.append({"name": name, "wall_us": None, "derived": derived})
+    return records
+
+
+def dryrun_artifact(results, *, tag: str = "dryrun",
+                    multi_pod: bool = False) -> Dict:
+    """A full BENCH artifact holding one ``dryrun`` pseudo-benchmark."""
+    records = records_from_dryrun(results, multi_pod=multi_pod)
+    entry = bench_entry(
+        paper_ref="§Roofline (dry-run measured collectives + analytic "
+                  "terms)",
+        units="analytic",
+        derived_keys=("compute_s", "memory_s", "collective_s", "dominant",
+                      "useful_ratio", "mem_budget_GiB", "fits_16GiB"),
+        records=records,
+        status="ok" if all("error" not in r for r in results) else "failed",
+    )
+    return make_artifact({"dryrun": entry}, tag=tag, smoke=False,
+                         warmup=0, iters=0)

@@ -298,6 +298,12 @@ def main():
     ap.add_argument("--all", action="store_true",
                     help="all (arch x shape) on the single-pod mesh")
     ap.add_argument("--json", default=None)
+    ap.add_argument("--bench-out", default=None,
+                    help="also write the results as a BENCH_*.json artifact "
+                         "(repro.bench schema: dry-run numbers + three-term "
+                         "rooflines as one 'dryrun' pseudo-benchmark)")
+    ap.add_argument("--bench-tag", default="dryrun",
+                    help="artifact tag for --bench-out")
     ap.add_argument("--specs", action="store_true",
                     help="print the Rules-derived sharding-spec table "
                          "per arch instead of lowering/compiling")
@@ -341,6 +347,15 @@ def main():
     if args.json:
         with open(args.json, "w") as f:
             json.dump(results, f, indent=1)
+    if args.bench_out:
+        from repro.bench import schema as bench_schema
+        bench_schema.dump(
+            bench_schema.dryrun_artifact(
+                results, tag=args.bench_tag, multi_pod=args.multi_pod
+            ),
+            args.bench_out,
+        )
+        print(f"bench artifact -> {args.bench_out}")
     ok = sum(1 for r in results if "error" not in r)
     print(f"\n{ok}/{len(results)} dry-runs succeeded")
     return 0 if ok == len(results) else 1

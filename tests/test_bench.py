@@ -1,0 +1,248 @@
+"""repro.bench: registry completeness, schema round-trip, smoke-suite
+runtime budget, and compare regression detection."""
+import copy
+import json
+import os
+import sys
+import time
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from repro.bench import (  # noqa: E402
+    BENCHMARK_MODULES,
+    REGISTRY,
+    Context,
+    load_all,
+    make_artifact,
+    records_from_dryrun,
+    validate,
+)
+from repro.bench import schema as bench_schema  # noqa: E402
+from repro.bench.compare import compare, main as compare_main  # noqa: E402
+from repro.bench.run import run_suite  # noqa: E402
+
+
+# --------------------------------------------------------------------------- #
+# Registry.
+# --------------------------------------------------------------------------- #
+def test_registry_completeness():
+    """Every benchmarks/* module registers exactly its benchmark."""
+    load_all()
+    registered_modules = {bd.module for bd in REGISTRY.values()}
+    for mod in BENCHMARK_MODULES:
+        assert mod in registered_modules, f"{mod} registered no benchmark"
+    expected = {"table1_lars", "fig8_batch_epochs", "fig9_step_times",
+                "fig10_model_parallel", "gnmt_hoist", "gradsum_2d",
+                "wus_overhead", "roofline"}
+    assert expected <= set(REGISTRY)
+    for bd in REGISTRY.values():
+        assert bd.paper_ref, f"{bd.name} has no paper_ref"
+        assert callable(bd.fn)
+
+
+def test_registry_reimport_idempotent():
+    load_all()
+    n = len(REGISTRY)
+    load_all()
+    assert len(REGISTRY) == n
+
+
+def test_duplicate_name_across_modules_rejected():
+    from repro.bench.registry import benchmark
+    load_all()
+
+    with pytest.raises(ValueError, match="registered twice"):
+        @benchmark("roofline", paper_ref="x")
+        def run(ctx):  # pragma: no cover
+            pass
+
+
+# --------------------------------------------------------------------------- #
+# Schema.
+# --------------------------------------------------------------------------- #
+def _tiny_artifact():
+    entry = bench_schema.bench_entry(
+        paper_ref="Fig. 9", units="us", derived_keys=("steps_per_s",),
+        records=[
+            {"name": "x/timed",
+             "wall_us": {"median_us": 100.0, "iqr_us": 5.0, "iters": 5,
+                         "warmup": 2},
+             "derived": {"steps_per_s": 1e4}},
+            {"name": "x/analytic", "wall_us": None, "derived": {"v": 1}},
+        ],
+    )
+    return make_artifact({"x": entry}, tag="t", smoke=True, warmup=2,
+                         iters=5)
+
+
+def test_schema_roundtrip(tmp_path):
+    art = _tiny_artifact()
+    assert validate(art) == []
+    path = tmp_path / "BENCH_t.json"
+    bench_schema.dump(art, str(path))
+    loaded = bench_schema.load(str(path))
+    assert loaded == json.loads(json.dumps(art))  # identical through JSON
+
+
+def test_schema_validate_catches_violations(tmp_path):
+    art = _tiny_artifact()
+    bad = copy.deepcopy(art)
+    del bad["benchmarks"]["x"]["records"][0]["wall_us"]["median_us"]
+    assert any("median_us" in e for e in validate(bad))
+
+    bad2 = copy.deepcopy(art)
+    bad2["benchmarks"]["x"]["status"] = "weird"
+    assert any("status" in e for e in validate(bad2))
+
+    bad3 = copy.deepcopy(art)
+    del bad3["environment"]
+    assert any("environment" in e for e in validate(bad3))
+
+    with pytest.raises(ValueError, match="invalid"):
+        p = tmp_path / "bad.json"
+        p.write_text(json.dumps(bad))
+        bench_schema.load(str(p))
+
+
+def test_dryrun_fold_records():
+    results = [
+        {"arch": "gemma-7b", "shape": "train_4k", "multi_pod": False,
+         "devices": 256, "flops_per_device": 1e13,
+         "hbm_bytes_accessed_per_device": 2e11,
+         "collective_bytes_per_device": {"all-reduce": 1e9},
+         "collective_counts": {"all-reduce": 3},
+         "peak_bytes_per_device": 2e30, "lower_s": 1.0, "compile_s": 2.0},
+        {"arch": "yi-9b", "shape": "long_500k", "multi_pod": False,
+         "skipped": "no long-context path"},
+    ]
+    recs = records_from_dryrun(results)
+    assert [r["name"] for r in recs] == [
+        "dryrun/gemma-7b/train_4k/1pod", "dryrun/yi-9b/long_500k/1pod",
+    ]
+    d = recs[0]["derived"]
+    assert d["collective_bytes_per_device_total"] == 1e9
+    assert d["dominant"] in ("compute", "memory", "collective")
+    assert recs[1]["derived"]["status"] == "skipped"
+    art = bench_schema.dryrun_artifact(results, tag="x")
+    assert validate(art) == []
+
+
+# --------------------------------------------------------------------------- #
+# The smoke suite itself (the CI profile): all benchmarks, < 60 s.
+# --------------------------------------------------------------------------- #
+@pytest.fixture(scope="module")
+def smoke_artifact():
+    t0 = time.perf_counter()
+    entries, failures = run_suite(smoke=True, verbose=False)
+    elapsed = time.perf_counter() - t0
+    art = make_artifact(entries, tag="test", smoke=True, warmup=1, iters=2)
+    return art, failures, elapsed
+
+
+def test_smoke_suite_runs_all_and_under_60s(smoke_artifact):
+    art, failures, elapsed = smoke_artifact
+    assert failures == 0, [
+        (k, e["error"]) for k, e in art["benchmarks"].items()
+        if e["status"] != "ok"
+    ]
+    assert set(art["benchmarks"]) == set(REGISTRY)
+    assert elapsed < 60.0, f"smoke suite took {elapsed:.1f}s (budget 60s)"
+    assert validate(art) == []
+    # every benchmark produced at least one record, and timed benchmarks
+    # carry median + IQR
+    for name, entry in art["benchmarks"].items():
+        assert entry["records"], f"{name} produced no records"
+    timed = [r for e in art["benchmarks"].values() for r in e["records"]
+             if r["wall_us"] is not None]
+    assert timed, "no timed records in the smoke suite"
+    for r in timed:
+        assert r["wall_us"]["median_us"] > 0
+        assert r["wall_us"]["iqr_us"] >= 0
+
+
+def test_smoke_artifact_writable(smoke_artifact, tmp_path):
+    art, _, _ = smoke_artifact
+    path = tmp_path / "BENCH_test.json"
+    bench_schema.dump(art, str(path))
+    assert validate(bench_schema.load(str(path))) == []
+
+
+# --------------------------------------------------------------------------- #
+# compare.
+# --------------------------------------------------------------------------- #
+def test_compare_self_is_clean(smoke_artifact):
+    art, _, _ = smoke_artifact
+    _, regressions = compare(art, art, threshold=1.15)
+    assert regressions == []
+
+
+def test_compare_flags_2x_regression(smoke_artifact, tmp_path):
+    art, _, _ = smoke_artifact
+    doctored = copy.deepcopy(art)
+    n_doctored = 0
+    for entry in doctored["benchmarks"].values():
+        for rec in entry["records"]:
+            if rec["wall_us"] is not None:
+                rec["wall_us"]["median_us"] *= 2.0
+                n_doctored += 1
+    assert n_doctored > 0
+    _, regressions = compare(art, doctored, threshold=1.15)
+    assert regressions, "2x slowdown not flagged at threshold 1.15"
+    # ... and the CLI exits nonzero on it
+    old_p, new_p = tmp_path / "old.json", tmp_path / "new.json"
+    bench_schema.dump(art, str(old_p))
+    bench_schema.dump(doctored, str(new_p))
+    assert compare_main([str(old_p), str(new_p), "--threshold", "1.15"]) == 1
+    assert compare_main([str(old_p), str(old_p)]) == 0
+
+
+def test_compare_flags_missing_record(smoke_artifact):
+    art, _, _ = smoke_artifact
+    shrunk = copy.deepcopy(art)
+    name = next(iter(shrunk["benchmarks"]))
+    shrunk["benchmarks"][name]["records"] = []
+    _, regressions = compare(art, shrunk)
+    assert any("disappeared" in r for r in regressions)
+    _, regressions = compare(art, shrunk, allow_missing=True)
+    assert regressions == []
+
+
+def test_compare_flags_lost_timing(smoke_artifact):
+    """A record that used to carry wall_us but comes back derived-only
+    is a coverage regression, even under --no-wall."""
+    art, _, _ = smoke_artifact
+    untimed = copy.deepcopy(art)
+    n = 0
+    for entry in untimed["benchmarks"].values():
+        for rec in entry["records"]:
+            if rec["wall_us"] is not None:
+                rec["wall_us"] = None
+                n += 1
+    assert n > 0
+    _, regressions = compare(art, untimed, check_wall=False)
+    assert any("lost its wall_us" in r for r in regressions)
+    _, regressions = compare(art, untimed, allow_missing=True)
+    assert regressions == []
+
+
+def test_compare_no_wall_ignores_slowdown(smoke_artifact):
+    art, _, _ = smoke_artifact
+    doctored = copy.deepcopy(art)
+    for entry in doctored["benchmarks"].values():
+        for rec in entry["records"]:
+            if rec["wall_us"] is not None:
+                rec["wall_us"]["median_us"] *= 10.0
+    _, regressions = compare(art, doctored, check_wall=False)
+    assert regressions == []
+
+
+def test_compare_flags_newly_failing_benchmark(smoke_artifact):
+    art, _, _ = smoke_artifact
+    broken = copy.deepcopy(art)
+    name = next(iter(broken["benchmarks"]))
+    broken["benchmarks"][name]["status"] = "failed"
+    broken["benchmarks"][name]["error"] = "boom"
+    _, regressions = compare(art, broken, allow_missing=True)
+    assert any("now failing" in r for r in regressions)
