@@ -1,0 +1,90 @@
+"""Continuous-batching serving benchmark (``repro.serve``).
+
+Measures the decode step of the serving engine in the two MLPerf
+Inference scenarios (Reddi et al., 2019, arXiv:1911.02549): *offline*
+(whole workload available up front — throughput) and *server* (staggered
+arrivals — latency tail under admission/eviction churn). The timed
+record is the per-decode-step wall time; derived keys carry tokens/sec,
+p50/p99 per-token latency and mean batch occupancy from the engine's
+own step trace.
+
+    PYTHONPATH=src python -m repro.bench.run --only serve_decode [--smoke]
+"""
+import jax
+
+from repro.bench.registry import benchmark, timing_from_samples
+from repro.configs import get_config
+from repro.dist import Rules, split_tree, use_rules
+from repro.launch.mesh import single_device_mesh
+from repro.launch.serve import build_requests
+from repro.serve import Engine, ServeConfig, run_offline, run_server
+from repro.train.steps import ModelAPI
+
+DERIVED = ("tokens_per_s", "p50_token_ms", "p99_token_ms", "ttft_p50_ms",
+           "mean_batch_occupancy", "requests")
+
+
+def _decode_timing(report):
+    """Median/IQR per-decode-step wall time, or None (derived-only
+    record) when the workload produced no decode steps. The first decode
+    step (in trace order) may be compile-inflated and is dropped as
+    warmup when there is more than one."""
+    decode = [s.wall_s * 1e6 for s in report.steps if s.kind == "decode"]
+    if not decode:
+        return None
+    warmup = 1 if len(decode) > 1 else 0
+    return timing_from_samples(decode[warmup:], warmup=warmup)
+
+
+@benchmark("serve_decode",
+           paper_ref="MLPerf Inference (arXiv:1911.02549) offline/server",
+           units="us", derived_keys=DERIVED)
+def run(ctx):
+    cfg = get_config("gemma-7b").reduced()
+    n_req = 4 if ctx.smoke else 8
+    tokens = 8 if ctx.smoke else 32
+    prompt_len = 12 if ctx.smoke else 24
+
+    api = ModelAPI(cfg)
+    params, _ = split_tree(api.init(cfg, jax.random.PRNGKey(0)))
+    mesh = single_device_mesh()
+    rules = Rules(mesh, "tp2d")
+    scfg = ServeConfig(max_batch=min(4, n_req),
+                       max_len=prompt_len + tokens,
+                       prefill_len=prompt_len)
+
+    with mesh, use_rules(rules):
+        engine = Engine(cfg, params, rules, scfg)
+        # throwaway workload compiles the prefill/decode programs so the
+        # recorded scenarios measure serving, not XLA compile time; two
+        # requests, because prefill specializes separately for the
+        # fresh-slab and slab-from-jit-output argument layouts
+        run_offline(engine, build_requests(
+            cfg, n=2, tokens=2, prompt_len=prompt_len,
+            scenario="offline", seed=1))
+    for scenario, driver in (("offline", run_offline),
+                             ("server", run_server)):
+        reqs = build_requests(cfg, n=n_req, tokens=tokens,
+                              prompt_len=prompt_len, scenario=scenario,
+                              seed=0)
+        with mesh, use_rules(rules):
+            # engine reuse keeps the compiled programs across scenarios
+            # (run() resets the workload state itself)
+            report = driver(engine, reqs)
+        s = report.summary()
+        ctx.record(
+            f"serve/{cfg.name}_{scenario}",
+            _decode_timing(report),
+            tokens_per_s=s["tokens_per_s"],
+            p50_token_ms=s["p50_token_ms"],
+            p99_token_ms=s["p99_token_ms"],
+            ttft_p50_ms=s["ttft_p50_ms"],
+            mean_batch_occupancy=s["mean_batch_occupancy"],
+            requests=s["requests"],
+        )
+
+
+if __name__ == "__main__":
+    from benchmarks.common import standalone_context
+
+    run(standalone_context())

@@ -1,7 +1,12 @@
-"""Serving example: prefill a batch of prompts, then decode tokens with
-the ring-buffer KV cache (greedy), for any assigned architecture.
+"""Serving example: continuous batching with mixed arrivals.
 
-    PYTHONPATH=src python examples/serve.py [--arch gemma-7b] [--tokens 12]
+Six requests with different prompt lengths and generation budgets join a
+3-slot engine at different steps — later requests are prefilled into
+slots freed by earlier retirements while the surviving sequences keep
+decoding. Greedy outputs are token-identical to running each request
+alone (tests/test_serve.py asserts this).
+
+    PYTHONPATH=src python examples/serve.py [--arch gemma-7b]
 """
 import argparse
 import sys
@@ -9,54 +14,46 @@ import sys
 sys.path.insert(0, "src")
 
 import jax
-import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import get_config, list_archs
-from repro.dist import split_tree
+from repro.dist import Rules, split_tree, use_rules
+from repro.launch.mesh import single_device_mesh
+from repro.launch.serve import build_requests
+from repro.serve import Engine, ServeConfig, run_server
 from repro.train.steps import ModelAPI
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="gemma-7b", choices=list_archs())
-    ap.add_argument("--tokens", type=int, default=12)
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     cfg = get_config(args.arch).reduced()
     api = ModelAPI(cfg)
-    key = jax.random.PRNGKey(0)
-    params, _ = split_tree(api.init(cfg, key))
+    params, _ = split_tree(api.init(cfg, jax.random.PRNGKey(args.seed)))
+    mesh = single_device_mesh()
+    rules = Rules(mesh, "tp2d")  # serving mode; 1x1 mesh on CPU
 
-    B, P = args.batch, args.prompt_len
-    max_len = P + args.tokens
-    batch = {"tokens": jax.random.randint(key, (B, P), 0, cfg.vocab)}
-    if cfg.is_encdec:
-        batch["media"] = jax.random.normal(
-            key, (B, cfg.enc_source_len, cfg.d_model))
-    elif cfg.frontend == "vision_patches":
-        batch["media"] = jax.random.normal(
-            key, (B, cfg.n_media_tokens, cfg.d_model))
+    # same synthetic workload builder as the CLI (media handled per arch),
+    # with fully randomized arrivals and generation budgets on top
+    rng = np.random.RandomState(args.seed)
+    requests = build_requests(cfg, n=6, tokens=4, prompt_len=15,
+                              scenario="server", seed=args.seed)
+    for req in requests:
+        req.arrival_step = int(rng.randint(0, 10))
+        req.max_new_tokens = int(rng.randint(2, 8))
 
-    n_media = 0
-    if not cfg.is_encdec and "media" in batch:
-        n_media = batch["media"].shape[1]
-    logits, cache = api.prefill(params, batch, cache_len=max_len + n_media)
-    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
-    print(f"{args.arch}: prefilled {P} tokens; decoding {args.tokens}...")
+    with mesh, use_rules(rules):
+        engine = Engine(cfg, params, rules,
+                        ServeConfig(max_batch=3, max_len=64, prefill_len=16))
+        report = run_server(engine, requests)
 
-    decode = jax.jit(
-        lambda p, t, c, pos: api.decode(p, t, c, pos)
-    )
-    out = [tok]
-    for i in range(args.tokens - 1):
-        pos = jnp.int32(n_media + P + i)
-        logits, cache = decode(params, tok, cache, pos)
-        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
-        out.append(tok)
-    gen = jnp.concatenate(out, axis=1)
-    print("generated token ids:\n", gen)
+    print(report.format())
+    for req in sorted(report.requests, key=lambda r: r.id):
+        print(f"req {req.id}: arrived step {req.arrival_step}, "
+              f"prompt {req.prompt_len} -> {req.tokens}")
 
 
 if __name__ == "__main__":

@@ -15,8 +15,6 @@ Hardware target (TPU v5e-like, per brief):
 """
 from __future__ import annotations
 
-import dataclasses
-import math
 from typing import Dict, Optional
 
 from repro.configs.base import InputShape, ModelConfig

@@ -31,6 +31,7 @@ BENCHMARK_MODULES = (
     "benchmarks.gradsum_2d",
     "benchmarks.wus_overhead",
     "benchmarks.roofline",
+    "benchmarks.serve_decode",
 )
 
 
@@ -108,6 +109,18 @@ class Timing:
                 "iters": self.iters, "warmup": self.warmup}
 
 
+def timing_from_samples(samples_us, *, warmup: int = 0) -> Timing:
+    """Median/IQR Timing from raw per-call wall samples (microseconds) —
+    the one place the quantile math lives (used by ``timeit`` and by
+    benchmarks that collect their own samples, e.g. serve_decode)."""
+    s = sorted(samples_us)
+    n = len(s)
+    if n == 0:
+        raise ValueError("timing_from_samples: no samples")
+    return Timing(median_us=s[n // 2], iqr_us=s[(3 * n) // 4] - s[n // 4],
+                  iters=n, warmup=warmup)
+
+
 def timeit(fn, *args, warmup: int = 2, iters: int = 5) -> Timing:
     """Time ``fn(*args)`` (blocking on device) over ``iters`` calls."""
     import jax
@@ -118,12 +131,7 @@ def timeit(fn, *args, warmup: int = 2, iters: int = 5) -> Timing:
         t0 = time.perf_counter()
         jax.block_until_ready(fn(*args))
         times.append(time.perf_counter() - t0)
-    times.sort()
-    n = len(times)
-    median = times[n // 2]
-    q1, q3 = times[n // 4], times[(3 * n) // 4]
-    return Timing(median_us=median * 1e6, iqr_us=(q3 - q1) * 1e6,
-                  iters=n, warmup=warmup)
+    return timing_from_samples([t * 1e6 for t in times], warmup=warmup)
 
 
 # --------------------------------------------------------------------------- #

@@ -12,7 +12,6 @@ interconnect and change the regularization).
 from __future__ import annotations
 
 import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

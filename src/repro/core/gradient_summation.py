@@ -24,12 +24,12 @@ steps GSPMD emits the same schedule from the sharding annotations.
 from __future__ import annotations
 
 import functools
-from typing import Any, Optional, Sequence, Tuple
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 from repro.dist.compat import shard_map
 
 

@@ -13,7 +13,7 @@ the speedup claim at pod scale is Fig. 10's.
 from __future__ import annotations
 
 import functools
-from typing import Callable, List, Sequence
+from typing import Callable, Sequence
 
 import jax
 import jax.numpy as jnp

@@ -14,7 +14,6 @@ shard's last ``window`` keys/values — Fig. 3 with rows -> tokens.
 from __future__ import annotations
 
 import functools
-from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp

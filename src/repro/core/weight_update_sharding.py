@@ -35,7 +35,7 @@ paper describes for non-elementwise updates).
 from __future__ import annotations
 
 import functools
-from typing import Any, Callable, Optional, Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp

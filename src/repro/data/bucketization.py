@@ -14,7 +14,7 @@ Properties tested (tests/test_data.py):
 """
 from __future__ import annotations
 
-from typing import Dict, Iterator, List, Sequence, Tuple
+from typing import Iterator, List, Sequence, Tuple
 
 import numpy as np
 

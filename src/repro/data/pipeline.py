@@ -5,9 +5,8 @@ from __future__ import annotations
 
 import queue
 import threading
-from typing import Callable, Dict, Iterable, Iterator, List, Optional
+from typing import Dict, Iterable, Iterator, List, Optional
 
-import jax
 import numpy as np
 
 from repro.configs.base import ModelConfig

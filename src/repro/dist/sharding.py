@@ -24,7 +24,7 @@ from typing import Any, Iterable, Optional, Sequence, Tuple, Union
 import jax
 from jax.sharding import PartitionSpec as P
 
-from repro.dist.rules import MODES, build_table, lookup  # noqa: F401
+from repro.dist.rules import build_table, lookup  # noqa: F401
 from repro.dist.tagging import LAYER_AXIS, Axes, _is_tagged  # noqa: F401
 
 

@@ -14,7 +14,6 @@ interpret mode on CPU (tests/test_kernels.py).
 from __future__ import annotations
 
 import functools
-import math
 
 import jax
 import jax.numpy as jnp

@@ -9,7 +9,6 @@ HBM. Grid tiles the batch; weights stay resident across the grid.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -11,7 +11,6 @@ Pallas kernels in interpret mode (slow; used by kernel integration tests).
 """
 from __future__ import annotations
 
-import functools
 import math
 import os
 from typing import Optional
@@ -161,6 +160,9 @@ def decode_attention(q, k_cache, v_cache, slot_pos, *, pos, window=None,
     q: (B, 1, H, D). k_cache/v_cache: (B, L, K, D) in bf16 or int8.
     slot_pos: (B, L) int32 — absolute position stored in each slot (-1 empty).
     k_scale/v_scale: (B, L, K) dequant scales when the cache is int8.
+    pos: scalar int32, or (B,) int32 when each batch row decodes at its own
+    position (continuous-batching serving: every slot holds an independent
+    sequence at an independent offset).
     """
     B, _, H, D = q.shape
     _, L, K, _ = k_cache.shape
@@ -174,9 +176,11 @@ def decode_attention(q, k_cache, v_cache, slot_pos, *, pos, window=None,
         vf = vf * v_scale[..., None].astype(jnp.float32)
     qf = (q.astype(jnp.float32) * scale).reshape(B, K, G, D)
     logits = jnp.einsum("bkgd,blkd->bkgl", qf, kf)  # (B,K,G,L)
-    valid = (slot_pos >= 0) & (slot_pos <= pos)
+    # (1,1) for scalar pos, (B,1) for per-row pos; both broadcast over (B,L)
+    posb = jnp.asarray(pos, jnp.int32).reshape(-1, 1)
+    valid = (slot_pos >= 0) & (slot_pos <= posb)
     if window is not None:
-        valid &= slot_pos > pos - window
+        valid &= slot_pos > posb - window
     logits = jnp.where(valid[:, None, None, :], logits, -1e30)
     probs = jax.nn.softmax(logits, axis=-1)
     out = jnp.einsum("bkgl,blkd->bkgd", probs, vf)

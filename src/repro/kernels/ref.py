@@ -49,7 +49,6 @@ def lstm_cell(x_proj, h_prev, c_prev, w_h, b):
     h_prev, c_prev: (B, F). w_h: (F, 4F). b: (4F,).
     Gate order: i, f, g, o.
     """
-    F = h_prev.shape[-1]
     gates = (
         x_proj.astype(jnp.float32)
         + h_prev.astype(jnp.float32) @ w_h.astype(jnp.float32)

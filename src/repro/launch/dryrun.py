@@ -68,7 +68,6 @@ def collective_bytes(hlo_text: str):
             pass  # async pairs: count the start (has the shape)
         if f"{kind}-done" in line:
             continue  # avoid double counting async done
-        lhs = line.split("=")[0] if "=" in line else ""
         shapes = _SHAPE_RE.findall(line.split("=", 1)[1].split(kind)[0]) if "=" in line else []
         nbytes = 0
         for dt, dims in shapes:

@@ -1,36 +1,76 @@
-"""Serving launcher: prefill + decode loop for any assigned architecture.
+"""Serving launcher: thin CLI over the ``repro.serve`` continuous-batching
+engine.
 
     PYTHONPATH=src python -m repro.launch.serve --arch gemma-7b \
-        [--tokens 16] [--batch 4] [--window 64] [--serve-mode tp2d]
+        [--tokens 16] [--batch 4] [--max-batch 4] \
+        [--scenario offline|server] [--serve-mode tp2d] \
+        [--temperature 0.8] [--seed 0]
 
-Reduced configs run end-to-end on CPU; on a pod the same entry point uses
-the production mesh (the tp2d mode is §Perf hillclimb B's
-weight-stationary 2-D tensor parallelism).
+Builds ``--batch`` synthetic requests (random prompts of mixed lengths),
+drives them through ``serve.Engine`` in the chosen MLPerf-Inference-style
+scenario, and prints throughput + p50/p99 per-token latency. Reduced
+configs run end-to-end on CPU; on a pod the same entry point uses the
+production mesh (tp2d is §Perf hillclimb B's weight-stationary 2-D
+tensor parallelism).
 """
 from __future__ import annotations
 
 import argparse
 import sys
-import time
 
 import jax
-import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import get_config, list_archs
 from repro.dist import Rules, split_tree, use_rules
 from repro.launch.mesh import single_device_mesh
+from repro.serve import Engine, Request, ServeConfig, run_offline, run_server
 from repro.train.steps import ModelAPI
+
+
+def build_requests(cfg, *, n: int, tokens: int, prompt_len: int,
+                   scenario: str, seed: int):
+    """Synthetic workload: mixed prompt lengths; server scenario staggers
+    arrivals so admissions interleave with in-flight decodes."""
+    rng = np.random.RandomState(seed)
+    reqs = []
+    for i in range(n):
+        lo = max(1, min(prompt_len // 2, prompt_len))
+        p_len = int(rng.randint(lo, max(lo + 1, prompt_len + 1)))
+        req = Request(
+            prompt=rng.randint(0, cfg.vocab, size=p_len).tolist(),
+            max_new_tokens=tokens,
+            arrival_step=0 if scenario == "offline" else int(i * 2),
+        )
+        if cfg.is_encdec:
+            req.media = np.asarray(jax.random.normal(
+                jax.random.PRNGKey(seed + i),
+                (cfg.enc_source_len, cfg.d_model)))
+        elif cfg.frontend == "vision_patches":
+            req.media = np.asarray(jax.random.normal(
+                jax.random.PRNGKey(seed + i),
+                (cfg.n_media_tokens, cfg.d_model)))
+        reqs.append(req)
+    return reqs
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True, choices=list_archs())
-    ap.add_argument("--tokens", type=int, default=16)
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--tokens", type=int, default=16,
+                    help="tokens to generate per request")
+    ap.add_argument("--batch", type=int, default=4,
+                    help="number of requests in the workload")
+    ap.add_argument("--max-batch", type=int, default=None,
+                    help="concurrent KV-cache slots (default: --batch)")
     ap.add_argument("--prompt-len", type=int, default=16)
-    ap.add_argument("--window", type=int, default=None,
-                    help="sliding-window decode (ring-buffer cache)")
+    ap.add_argument("--scenario", default="offline",
+                    choices=["offline", "server"])
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--no-warmup", action="store_true",
+                    help="skip the compile warmup; reported throughput/"
+                         "latency then include XLA compile time")
     ap.add_argument("--serve-mode", default=None,
                     choices=[None, "tp2d", "fsdp", "wus", "replicated"])
     args = ap.parse_args(argv)
@@ -39,50 +79,38 @@ def main(argv=None):
     mesh = single_device_mesh()
     rules = Rules(mesh, args.serve_mode or cfg.param_sharding)
     api = ModelAPI(cfg)
-    key = jax.random.PRNGKey(0)
-    params, _ = split_tree(api.init(cfg, key))
+    params, _ = split_tree(api.init(cfg, jax.random.PRNGKey(args.seed)))
 
-    B, P = args.batch, args.prompt_len
-    batch = {"tokens": jax.random.randint(key, (B, P), 0, cfg.vocab)}
-    n_media = 0
-    if cfg.is_encdec:
-        batch["media"] = jax.random.normal(
-            key, (B, cfg.enc_source_len, cfg.d_model))
-    elif cfg.frontend == "vision_patches":
-        batch["media"] = jax.random.normal(
-            key, (B, cfg.n_media_tokens, cfg.d_model))
-        n_media = cfg.n_media_tokens
-    max_len = n_media + P + args.tokens
+    n_media = cfg.n_media_tokens if cfg.frontend == "vision_patches" else 0
+    scfg = ServeConfig(
+        max_batch=args.batch if args.max_batch is None else args.max_batch,
+        max_len=n_media + args.prompt_len + args.tokens,
+        prefill_len=args.prompt_len,
+        temperature=args.temperature,
+        seed=args.seed,
+    )
+    reqs = build_requests(
+        cfg, n=args.batch, tokens=args.tokens, prompt_len=args.prompt_len,
+        scenario=args.scenario, seed=args.seed)
 
     with mesh, use_rules(rules):
-        t0 = time.time()
-        logits, cache = jax.jit(
-            lambda p, b: api.prefill(p, b, cache_len=max_len,
-                                     window=args.window)
-        )(params, batch)
-        print(f"prefill {P} tokens x{B}: {time.time()-t0:.2f}s")
+        engine = Engine(cfg, params, rules, scfg)
+        if not args.no_warmup:
+            # compile the prefill/decode programs (both prefill argument
+            # layouts) so the reported metrics measure serving, not XLA
+            run_offline(engine, build_requests(
+                cfg, n=min(2, scfg.max_batch), tokens=2,
+                prompt_len=args.prompt_len, scenario="offline",
+                seed=args.seed + 1))
+        driver = run_offline if args.scenario == "offline" else run_server
+        report = driver(engine, reqs)
 
-        decode = jax.jit(
-            lambda p, t, c, pos: api.decode(p, t, c, pos,
-                                            window=args.window))
-        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
-        out = [tok]
-        t0 = time.time()
-        for i in range(args.tokens - 1):
-            pos = jnp.int32(n_media + P + i)
-            logits, cache = decode(params, tok, cache, pos)
-            if args.temperature > 0:
-                key, sub = jax.random.split(key)
-                tok = jax.random.categorical(
-                    sub, logits / args.temperature)[:, None].astype(jnp.int32)
-            else:
-                tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
-            out.append(tok)
-        dt = time.time() - t0
-        gen = jnp.concatenate(out, axis=1)
-        print(f"decoded {args.tokens} tokens x{B} in {dt:.2f}s "
-              f"({args.tokens*B/max(dt,1e-9):.1f} tok/s)")
-        print(gen)
+    print(f"{args.arch} [{args.scenario}, mode="
+          f"{args.serve_mode or cfg.param_sharding}, "
+          f"slots={scfg.max_batch}]: {report.format()}")
+    for req in sorted(report.requests, key=lambda r: r.id):
+        print(f"  req {req.id}: prompt {req.prompt_len} -> "
+              f"{len(req.tokens)} tokens {req.tokens}")
     return 0
 
 

@@ -6,7 +6,7 @@ tests with real arrays of the reduced configs.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

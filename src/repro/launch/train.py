@@ -8,16 +8,10 @@ from __future__ import annotations
 import argparse
 import sys
 
-import jax
-import numpy as np
 
-from repro.configs import get_config, get_shape
+from repro.configs import get_config
 from repro.data.pipeline import synthetic_lm_batches, synthetic_eval_set
-from repro.launch.mesh import (
-    make_production_mesh,
-    make_test_mesh,
-    single_device_mesh,
-)
+from repro.launch.mesh import make_production_mesh, single_device_mesh
 from repro.train import Trainer, TrainerConfig
 
 

@@ -7,7 +7,7 @@ precomputed frame embeddings (B, T, d_model). Positions are sinusoidal
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -189,8 +189,12 @@ def init_cache(cfg: ModelConfig, B: int, seq_len: int, window=None):
 
 
 def prefill(params, cfg: ModelConfig, frames, tokens, *, cache_len=None,
-            window=None):
-    """Encode + teacher-force the prompt, building decode caches."""
+            window=None, last_pos=None):
+    """Encode + teacher-force the prompt, building decode caches.
+
+    ``last_pos`` (scalar or (B,) int32): per-example position whose logits
+    to return (serving pads prompts to one compile shape; see lm.prefill).
+    """
     vals = split_tree(params)[0] if _is_tagged_tree(params) else params
     enc_out = encode(vals, cfg, frames)
     dt = jnp.dtype(cfg.dtype)
@@ -212,19 +216,23 @@ def prefill(params, cfg: ModelConfig, frames, tokens, *, cache_len=None,
 
     x, (self_c, cross_c) = jax.lax.scan(block_fn, x, vals["dec_blocks"])
     x = L.apply_norm(vals["dec_norm"], x, cfg)
-    logits = _head(vals, cfg, x[:, -1:, :])
+    logits = _head(vals, cfg, L.gather_last(x, last_pos))
     return logits[:, 0], {"self": self_c, "cross": cross_c}
 
 
 def decode_step(params, cfg: ModelConfig, token, cache, pos, *, window=None):
     vals = split_tree(params)[0] if _is_tagged_tree(params) else params
     dt = jnp.dtype(cfg.dtype)
-    B = token.shape[0]
     x = jnp.take(vals["embed"], token, axis=0).astype(dt)
-    # position embedding for the current step (dynamic index):
-    x = x + jax.lax.dynamic_slice_in_dim(
-        sinusoid_table(cfg, dt), jnp.asarray(pos, jnp.int32), 1, axis=0
-    )[None]
+    # position embedding for the current step (dynamic index); pos may be a
+    # (B,) vector (continuous batching: one offset per row)
+    posv = jnp.asarray(pos, jnp.int32)
+    if posv.ndim:
+        x = x + jnp.take(sinusoid_table(cfg, dt), posv, axis=0)[:, None]
+    else:
+        x = x + jax.lax.dynamic_slice_in_dim(
+            sinusoid_table(cfg, dt), posv, 1, axis=0
+        )[None]
 
     def block_fn(x, binp):
         bp, cs, cc = binp

@@ -8,12 +8,12 @@ softmax and the SSM recurrences run in fp32 (paper C7 mixed precision).
 from __future__ import annotations
 
 import math
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import LayerSpec, MambaConfig, ModelConfig, RWKV6Config
+from repro.configs.base import MambaConfig, ModelConfig, RWKV6Config
 from repro.dist import constrain, p
 from repro.kernels import ops
 
@@ -152,17 +152,39 @@ def attention_full(params, x, cfg: ModelConfig, *, positions, window=None,
     return y, (k, v)
 
 
+def _decode_positions(pos, B: int) -> jnp.ndarray:
+    """(B,1) int32 rope positions from a scalar or per-row (B,) ``pos``."""
+    return jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1, 1), (B, 1))
+
+
+def gather_last(x, last_pos):
+    """Per-example final-position slice of x (B,S,d) -> (B,1,d).
+
+    last_pos None -> position S-1 for every row (ordinary prefill);
+    scalar or (B,) -> that absolute position per row (serving pads
+    prompts to one compile shape and reads each prompt's true end).
+    """
+    if last_pos is None:
+        return x[:, -1:, :]
+    lp = jnp.broadcast_to(
+        jnp.asarray(last_pos, jnp.int32).reshape(-1), (x.shape[0],)
+    )
+    return jnp.take_along_axis(x, lp[:, None, None], axis=1)
+
+
 def attention_decode(params, x, cfg: ModelConfig, cache: Dict[str, Any], *,
                      pos, window=None, cross=False):
     """One-token attention against the layer cache; returns (out, new_cache).
 
     cache keys: k, v, slot_pos (+ k_scale/v_scale when int8). For
     cross-attention the cache is static (precomputed encoder K/V).
+    ``pos`` is a scalar, or a (B,) vector when each row decodes at its own
+    offset (continuous batching).
     """
     B = x.shape[0]
     q = _qkv(params, x, cfg, "q")
     if cfg.rope != "none" and not cross:
-        posv = jnp.broadcast_to(jnp.asarray(pos, jnp.int32)[None, None], (B, 1))
+        posv = _decode_positions(pos, B)
         if cfg.rope == "mrope":
             posv = jnp.broadcast_to(posv[..., None], (B, 1, 3))
         q = apply_rope(q, posv, theta=cfg.rope_theta, mrope=cfg.rope == "mrope")
@@ -172,9 +194,7 @@ def attention_decode(params, x, cfg: ModelConfig, cache: Dict[str, Any], *,
         k_new = _qkv(params, x, cfg, "k")
         v_new = _qkv(params, x, cfg, "v")
         if cfg.rope != "none":
-            posv = jnp.broadcast_to(
-                jnp.asarray(pos, jnp.int32)[None, None], (B, 1)
-            )
+            posv = _decode_positions(pos, B)
             if cfg.rope == "mrope":
                 posv = jnp.broadcast_to(posv[..., None], (B, 1, 3))
             k_new = apply_rope(
@@ -221,9 +241,17 @@ def _quantize_kv(x):
 
 
 def cache_insert(cache, k_new, v_new, pos):
-    """Insert one token's K/V at ring slot pos % L. k_new/v_new: (B,K,hd)."""
+    """Insert one token's K/V at ring slot pos % L. k_new/v_new: (B,K,hd).
+
+    ``pos`` may be a (B,) vector (per-row positions, continuous batching):
+    each row then writes its own ring slot via a one-hot select instead of
+    a single dynamic_update_slice.
+    """
     L = cache["k"].shape[1]
-    slot = jnp.asarray(pos, jnp.int32) % L
+    posv = jnp.asarray(pos, jnp.int32)
+    if posv.ndim:
+        return _cache_insert_per_row(cache, k_new, v_new, posv)
+    slot = posv % L
     out = dict(cache)
     if "k_scale" in cache:
         kq, ks = _quantize_kv(k_new)
@@ -245,6 +273,28 @@ def cache_insert(cache, k_new, v_new, pos):
         cache["slot_pos"],
         jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (cache["k"].shape[0], 1)),
         slot, axis=1)
+    return out
+
+
+def _cache_insert_per_row(cache, k_new, v_new, posv):
+    """cache_insert with per-row positions posv: (B,) int32."""
+    L = cache["k"].shape[1]
+    hit = jnp.arange(L, dtype=jnp.int32)[None, :] == (posv % L)[:, None]  # B,L
+
+    def put(arr, new):  # arr (B,L,...), new (B,...)
+        m = hit.reshape(hit.shape + (1,) * (arr.ndim - 2))
+        return jnp.where(m, new[:, None].astype(arr.dtype), arr)
+
+    out = dict(cache)
+    if "k_scale" in cache:
+        kq, ks = _quantize_kv(k_new)
+        vq, vs = _quantize_kv(v_new)
+        out["k"], out["v"] = put(cache["k"], kq), put(cache["v"], vq)
+        out["k_scale"] = put(cache["k_scale"], ks)
+        out["v_scale"] = put(cache["v_scale"], vs)
+    else:
+        out["k"], out["v"] = put(cache["k"], k_new), put(cache["v"], v_new)
+    out["slot_pos"] = jnp.where(hit, posv[:, None], cache["slot_pos"])
     return out
 
 

@@ -10,8 +10,7 @@ Modality frontends are stubs per the brief: ``media`` embeddings of shape
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -318,10 +317,14 @@ def init_cache(cfg: ModelConfig, B: int, seq_len: int, window=None):
 
 
 def prefill(params, cfg: ModelConfig, tokens, *, media=None, cache_len=None,
-            window=None):
+            window=None, last_pos=None):
     """Forward over the prompt, building the decode cache.
 
-    Returns (last-position logits (B,vocab), cache).
+    Returns (last-position logits (B,vocab), cache). ``last_pos`` (scalar or
+    (B,) int32) selects which position's logits to return per example —
+    the serving path right-pads prompts to a fixed compile shape and reads
+    the logits of each prompt's true final token (causality makes the
+    positions up to it identical to an unpadded prefill).
     """
     vals = split_tree(params)[0] if _is_tagged_tree(params) else params
     x = _embed(vals, cfg, tokens)
@@ -349,7 +352,7 @@ def prefill(params, cfg: ModelConfig, tokens, *, media=None, cache_len=None,
 
     x, caches = jax.lax.scan(block_fn, x, vals["blocks"])
     x = L.apply_norm(vals["final_norm"], x, cfg)
-    logits = _head(vals, cfg, x[:, -1:, :])
+    logits = _head(vals, cfg, L.gather_last(x, last_pos))
     return logits[:, 0], caches
 
 
@@ -361,7 +364,9 @@ def _state_to_cache(cfg, spec, state, dtype):
 
 
 def decode_step(params, cfg: ModelConfig, token, cache, pos, *, window=None):
-    """One decode step. token: (B,1) int32; pos: scalar int32 (absolute).
+    """One decode step. token: (B,1) int32; pos: absolute position —
+    scalar int32, or (B,) int32 when each row is an independent sequence
+    at its own offset (continuous-batching serving).
 
     Returns (logits (B,vocab), new_cache).
     """

@@ -19,7 +19,7 @@ here.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
@@ -138,7 +138,6 @@ def roi_align(feat, rois, out_size: int):
     """Bilinear crop-resize (simplified RoIAlign). feat: (B,H,W,C);
     rois: (B,P,4) in [0,1] (y0,x0,y1,x1) -> (B,P,s,s,C)."""
     B, H, W, C = feat.shape
-    P = rois.shape[1]
 
     def one(fm, roi):  # fm (H,W,C), roi (4,)
         y0, x0, y1, x1 = roi

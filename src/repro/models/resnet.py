@@ -12,8 +12,7 @@ backbone (ResNet-34).
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Dict, Optional, Sequence, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -147,9 +146,8 @@ def forward(params, cfg: ResNetConfig, images, *, mesh=None):
         x = jax.lax.reduce_window(
             x, -jnp.inf, jax.lax.max, (1, 3, 3, 1), (1, 2, 2, 1), "SAME"
         )
-    cin = cfg.width
     for s, n_blocks in enumerate(cfg.stage_sizes):
-        mid, cout = _block_channels(cfg, s)
+        _, cout = _block_channels(cfg, s)
         for b in range(n_blocks):
             blk = params[f"s{s}b{b}"]
             stride = 2 if (b == 0 and s > 0) else 1
@@ -171,7 +169,6 @@ def forward(params, cfg: ResNetConfig, images, *, mesh=None):
                 y = _bn(_conv(y, _get(blk, "conv2"), 1, cfg, mesh),
                         blk["bn2"], cfg, mesh)
             x = jax.nn.relu(sc + y)
-            cin = cout
     x = x.mean(axis=(1, 2)).astype(jnp.float32)  # global average pool
     return x @ _get(params, "head") + _get(params, "head_bias")
 

@@ -11,7 +11,6 @@ from __future__ import annotations
 from typing import Callable
 
 import jax
-import jax.numpy as jnp
 
 
 def _largest_divisor_leq(n: int, k: int) -> int:

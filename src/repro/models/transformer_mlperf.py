@@ -12,7 +12,7 @@ Trained with Adam; the paper notes large-batch convergence needed tuned
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp

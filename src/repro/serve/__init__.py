@@ -1,0 +1,34 @@
+"""repro.serve — continuous-batching serving subsystem.
+
+Layering: ``launch/serve.py`` (CLI) -> ``serve.Engine`` ->
+``train.steps`` serve steps -> model zoo, all under ``dist.Rules``.
+See docs/serving.md for the request lifecycle, scheduler states and
+cache layout; ``benchmarks/serve_decode.py`` measures it.
+"""
+from repro.serve.cache import (
+    init_slab,
+    invalidate_beyond,
+    read_slot,
+    write_slot,
+)
+from repro.serve.engine import Engine, ServeConfig, run_offline, run_server
+from repro.serve.metrics import ServeReport, StepTrace, percentile
+from repro.serve.request import Request, RequestState
+from repro.serve.scheduler import Scheduler
+
+__all__ = [
+    "Engine",
+    "Request",
+    "RequestState",
+    "Scheduler",
+    "ServeConfig",
+    "ServeReport",
+    "StepTrace",
+    "init_slab",
+    "invalidate_beyond",
+    "percentile",
+    "read_slot",
+    "run_offline",
+    "run_server",
+    "write_slot",
+]

@@ -1,0 +1,77 @@
+"""Slot-slab KV cache for continuous batching.
+
+The slab is the model's ordinary decode cache (``ModelAPI.init_cache``)
+with batch = ``max_batch``: every leaf is ``(n_blocks, max_batch, ...)``
+with the batch dimension at axis 1 (attention ring buffers, mamba
+conv/ssm states, rwkv shift/wkv states, enc-dec self/cross caches alike).
+A *slot* is one index of that batch dimension; admission writes a freshly
+prefilled single-request cache into the slot, retirement simply abandons
+it — the next admission overwrites every leaf, so slots are reused
+without any reset pass (tested in tests/test_serve.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init_slab(api, max_batch: int, max_len: int, window=None):
+    """Batched decode cache with one slot per concurrent request."""
+    return api.init_cache(max_batch, max_len, window)
+
+
+def write_slot(slab, cache, slot):
+    """Write a prefilled single-request cache (batch dim 1) into ``slot``.
+
+    slot: traced int32 — one compiled program serves every slot index.
+    """
+    return jax.tree_util.tree_map(
+        lambda s, n: jax.lax.dynamic_update_slice_in_dim(
+            s, n.astype(s.dtype), slot, axis=1
+        ),
+        slab, cache,
+    )
+
+
+def read_slot(slab, slot: int):
+    """Single-request view of ``slot`` (batch dim kept, size 1)."""
+    return jax.tree_util.tree_map(
+        lambda s: jax.lax.dynamic_slice_in_dim(s, slot, 1, axis=1), slab
+    )
+
+
+def invalidate_beyond(cache, true_len):
+    """Mark ring slots at index >= per-example ``true_len`` as empty.
+
+    Serving right-pads prompts to one compile shape before prefill; the
+    padded positions' K/V land in ring slots ``true_len..pad_len-1`` with
+    valid ``slot_pos`` entries and would be attended to. Resetting their
+    ``slot_pos`` to -1 makes ``decode_attention`` mask them, which (with
+    causal prefill) makes the padded prefill exactly equivalent to an
+    unpadded one. Recurses over any cache structure, rewriting only
+    attention entries (dicts carrying k/v/slot_pos); enc-dec ``cross``
+    caches hold full encoder K/V and are left untouched.
+
+    true_len: (B,) int32 per-example true lengths (media included).
+    """
+    tl = jnp.asarray(true_len, jnp.int32).reshape(-1)
+
+    def fix(slot_pos):  # (n_blocks, B, L)
+        idx = jnp.arange(slot_pos.shape[-1], dtype=jnp.int32)
+        keep = idx[None, None, :] < tl[None, :, None]
+        return jnp.where(keep, slot_pos, jnp.int32(-1))
+
+    def rec(node):
+        if isinstance(node, dict):
+            if "slot_pos" in node and "k" in node:
+                out = dict(node)
+                out["slot_pos"] = fix(node["slot_pos"])
+                return out
+            return {
+                k: (v if k == "cross" else rec(v)) for k, v in node.items()
+            }
+        if isinstance(node, (tuple, list)):
+            return tuple(rec(x) for x in node)
+        return node
+
+    return rec(cache)

@@ -1,0 +1,278 @@
+"""Continuous-batching engine: the device side of the serving subsystem.
+
+Two compiled programs serve the whole run, regardless of how requests
+arrive:
+
+  * ``prefill``: one request's (padded) prompt -> its first-token logits
+    + its KV cache, fused with the write of that cache into the slot-slab
+    (``serve.cache.write_slot``) and the padding invalidation, all in one
+    jit so admission is a single device dispatch;
+  * ``decode``: one token for *every* slot, with a per-slot position
+    vector — in-flight sequences at different offsets advance together
+    (the continuous-batching step).
+
+Both are built from ``train.steps.make_serve_{prefill,decode}_step`` and
+run under ``dist.Rules`` (any serve mode incl. tp2d): the same code
+lowers on the 1x1 CPU mesh and on pod meshes.
+
+Exactness: with greedy sampling the engine's outputs are token-identical
+to a sequential single-request prefill+decode loop (asserted by
+tests/test_serve.py). Right-padding prompts to ``prefill_len`` keeps one
+compile shape for attention-only stacks; stacks with recurrent mixers
+(mamba/rwkv6) carry prompt state, so the engine prefills those at exact
+prompt length instead (one compile per distinct length). MoE capacity is
+a known batching asymmetry: at tight capacity factors routing depends on
+batch composition (reduced configs use no-drop capacity).
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+import time
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.dist import Rules
+from repro.serve import cache as slab_ops
+from repro.serve.metrics import ServeReport, StepTrace
+from repro.serve.request import Request
+from repro.serve.scheduler import Scheduler
+from repro.train.steps import (
+    ModelAPI,
+    make_serve_decode_step,
+    make_serve_prefill_step,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """Engine knobs. ``max_len`` is the per-slot KV ring length and must
+    hold media + prompt + generation; ``prefill_len`` is the padded
+    prompt compile shape (attention-only stacks)."""
+
+    max_batch: int = 4
+    max_len: int = 128
+    prefill_len: int = 32
+    temperature: float = 0.0
+    eos_id: Optional[int] = None
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.prefill_len > self.max_len:
+            raise ValueError("prefill_len exceeds max_len")
+
+
+class Engine:
+    def __init__(self, cfg: ModelConfig, params, rules: Optional[Rules] = None,
+                 serve: Optional[ServeConfig] = None):
+        self.cfg = cfg
+        self.params = params
+        self.rules = rules
+        self.scfg = serve or ServeConfig()
+        self.api = ModelAPI(cfg)
+        # Recurrent mixers carry prompt state -> exact-length prefill.
+        self._exact = any(s.mixer != "attn" for s in cfg.block_pattern)
+
+        prefill_step = make_serve_prefill_step(
+            cfg, rules, cache_len=self.scfg.max_len)
+        decode_step = make_serve_decode_step(cfg, rules)
+
+        def prefill_insert(params, batch, last_pos, true_len, slab, slot):
+            logits, c = prefill_step(params, batch, last_pos)
+            c = slab_ops.invalidate_beyond(c, true_len)
+            return logits, slab_ops.write_slot(slab, c, slot)
+
+        self._prefill_jit = jax.jit(prefill_insert)
+        self._decode_jit = jax.jit(decode_step)
+        self._key = jax.random.PRNGKey(self.scfg.seed)
+        self.reset()
+
+    def reset(self) -> None:
+        """Fresh scheduler/slab/trace state; compiled programs are kept,
+        so one engine can serve successive workloads without recompiling
+        (e.g. the offline and server scenarios of one benchmark)."""
+        self.sched = Scheduler(self.scfg.max_batch)
+        self._slab = slab_ops.init_slab(
+            self.api, self.scfg.max_batch, self.scfg.max_len)
+        self._tok = np.zeros((self.scfg.max_batch,), np.int32)
+        self._pos = np.zeros((self.scfg.max_batch,), np.int32)
+        self._rid = np.zeros((self.scfg.max_batch,), np.uint32)
+        self._arrivals: list = []
+        self._arrival_seq = itertools.count()
+        self._finished: List[Request] = []
+        self._trace: List[StepTrace] = []
+        self._step_idx = 0
+
+    # ------------------------------------------------------------------ #
+    def submit(self, req: Request) -> None:
+        """Register a request; it enters the queue at ``req.arrival_step``."""
+        if self.cfg.is_encdec and req.media is None:
+            raise ValueError(
+                f"request {req.id}: enc-dec arch {self.cfg.name} requires "
+                f"media (encoder frames of shape (enc_source_len, d_model))")
+        n_media = self._n_media(req)
+        if n_media + req.prompt_len + req.max_new_tokens > self.scfg.max_len:
+            raise ValueError(
+                f"request {req.id}: media+prompt+generation "
+                f"({n_media}+{req.prompt_len}+{req.max_new_tokens}) "
+                f"exceeds max_len={self.scfg.max_len}")
+        if not self._exact and req.prompt_len > self.scfg.prefill_len:
+            raise ValueError(
+                f"request {req.id}: prompt_len {req.prompt_len} exceeds "
+                f"prefill_len={self.scfg.prefill_len}")
+        # The padded prefill sequence must fit the cache whole — otherwise
+        # lm.prefill truncates to the trailing cache_len positions and the
+        # slot_pos labels would no longer match the kept K/V.
+        pad_to = req.prompt_len if self._exact else self.scfg.prefill_len
+        if n_media + pad_to > self.scfg.max_len:
+            raise ValueError(
+                f"request {req.id}: media+padded prompt ({n_media}+{pad_to}) "
+                f"exceeds max_len={self.scfg.max_len}")
+        heapq.heappush(
+            self._arrivals, (req.arrival_step, next(self._arrival_seq), req))
+
+    def run(self) -> ServeReport:
+        """Drive steps until every submitted request has finished.
+
+        The engine is reset on return (compiled programs kept), so a
+        reused engine reports each workload separately — metrics never
+        accumulate across runs."""
+        t0 = time.perf_counter()
+        while self._arrivals or self.sched.has_work:
+            self.step()
+        report = ServeReport(
+            requests=list(self._finished),
+            steps=list(self._trace),
+            elapsed_s=time.perf_counter() - t0,
+        )
+        self.reset()
+        return report
+
+    # ------------------------------------------------------------------ #
+    def step(self) -> None:
+        """One scheduling round: arrivals -> admissions -> batched decode."""
+        while self._arrivals and self._arrivals[0][0] <= self._step_idx:
+            _, _, req = heapq.heappop(self._arrivals)
+            req.t_arrival = time.perf_counter()
+            self.sched.submit(req)
+        for slot, req in self.sched.admit():
+            self._admit(slot, req)
+        if self.sched.n_active:
+            self._decode_once()
+        self._step_idx += 1
+
+    # ------------------------------------------------------------------ #
+    def _n_media(self, req: Request) -> int:
+        """Positions the media prefix occupies in the decoder stream."""
+        if req.media is None or self.cfg.is_encdec:
+            return 0  # enc-dec media feeds the encoder, not the decoder
+        return int(np.asarray(req.media).shape[0])
+
+    def _admit(self, slot: int, req: Request) -> None:
+        """Prefill ``req`` into ``slot``; samples its first token."""
+        P = req.prompt_len
+        n_media = self._n_media(req)
+        pad_to = P if self._exact else self.scfg.prefill_len
+        toks = np.zeros((1, pad_to), np.int32)
+        toks[0, :P] = req.prompt
+        batch = {"tokens": jnp.asarray(toks)}
+        if req.media is not None:
+            batch["media"] = jnp.asarray(req.media)[None]
+        last = jnp.full((1,), n_media + P - 1, jnp.int32)
+        true_len = jnp.full((1,), n_media + P, jnp.int32)
+
+        t0 = time.perf_counter()
+        logits, self._slab = self._prefill_jit(
+            self.params, batch, last, true_len, self._slab,
+            jnp.int32(slot))
+        tok = int(np.asarray(jax.block_until_ready(
+            self._sample(logits, req.id, n_media + P)))[0])
+        dt = time.perf_counter() - t0
+
+        req.tokens.append(tok)
+        req.t_first_token = time.perf_counter()
+        self._trace.append(StepTrace("prefill", dt, 1))
+        if req.done or tok == self.scfg.eos_id:
+            self._retire(slot, req)
+        else:
+            self._tok[slot] = tok
+            self._pos[slot] = n_media + P
+            self._rid[slot] = req.id
+
+    def _decode_once(self) -> None:
+        """Advance every occupied slot by one token (single dispatch)."""
+        t0 = time.perf_counter()
+        logits, self._slab = self._decode_jit(
+            self.params, jnp.asarray(self._tok[:, None]), self._slab,
+            jnp.asarray(self._pos))
+        # the fed token sits at _pos; the drawn token's position is +1
+        next_tok = np.asarray(jax.block_until_ready(
+            self._sample(logits, self._rid, self._pos + 1)))
+        dt = time.perf_counter() - t0
+
+        running = self.sched.running()
+        for slot, req in running:
+            tok = int(next_tok[slot])
+            req.tokens.append(tok)
+            self._tok[slot] = tok
+            self._pos[slot] += 1
+            if req.done or tok == self.scfg.eos_id:
+                self._retire(slot, req)
+        self._trace.append(StepTrace("decode", dt, len(running)))
+
+    def _retire(self, slot: int, req: Request) -> None:
+        self.sched.retire(slot)
+        req.t_done = time.perf_counter()
+        self._finished.append(req)
+
+    def _sample(self, logits, rid, pos):
+        """Greedy, or temperature sampling keyed by (seed, request id,
+        position).
+
+        Every token of a generation draws from its own key (prefill's
+        first token and the same round's decode draw can never share
+        one), and the key depends only on the request — not on which
+        slot the scheduler assigned or which other requests are in
+        flight, so sampled generations are as schedule-independent as
+        greedy ones. rid/pos broadcast from scalars (prefill, B=1) or
+        arrive as (B,) vectors (batched decode)."""
+        if self.scfg.temperature <= 0.0:
+            return jnp.argmax(logits, -1)
+        t = self.scfg.temperature
+        B = logits.shape[0]
+        rids = jnp.broadcast_to(
+            jnp.asarray(rid, jnp.uint32).reshape(-1), (B,))
+        posv = jnp.broadcast_to(
+            jnp.asarray(pos, jnp.int32).reshape(-1), (B,))
+        keys = jax.vmap(
+            lambda r, p: jax.random.fold_in(
+                jax.random.fold_in(self._key, r), p)
+        )(rids, posv)
+        return jax.vmap(
+            lambda k, l: jax.random.categorical(k, l / t))(keys, logits)
+
+
+# --------------------------------------------------------------------------- #
+# Scenario drivers (MLPerf-Inference-style).
+# --------------------------------------------------------------------------- #
+def run_offline(engine: Engine, requests: List[Request]) -> ServeReport:
+    """Offline scenario: the whole workload is available at step 0;
+    measures batched throughput."""
+    for r in requests:
+        r.arrival_step = 0
+        engine.submit(r)
+    return engine.run()
+
+
+def run_server(engine: Engine, requests: List[Request]) -> ServeReport:
+    """Server scenario: requests join at their own ``arrival_step`` while
+    earlier ones are mid-decode; measures the latency tail under
+    continuous batching."""
+    for r in requests:
+        engine.submit(r)
+    return engine.run()

@@ -1,0 +1,88 @@
+"""Serving metrics: throughput + latency percentiles.
+
+MLPerf-Inference-style reporting (Reddi et al., 2019): the offline
+scenario cares about total throughput (tokens/s), the server scenario
+about the per-token latency tail (p50/p99) and time-to-first-token.
+Every decode step contributes one latency sample per token it produced;
+prefill contributes the first token of its request.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Tuple
+
+
+def percentile(xs: List[float], q: float) -> float:
+    """Nearest-rank percentile (q in [0,100]); 0.0 on empty input."""
+    if not xs:
+        return 0.0
+    s = sorted(xs)
+    rank = max(1, -(-len(s) * q // 100))  # ceil(n*q/100), >= 1
+    return s[min(int(rank), len(s)) - 1]
+
+
+@dataclasses.dataclass
+class StepTrace:
+    """One engine step's device work: kind 'prefill' | 'decode'."""
+
+    kind: str
+    wall_s: float
+    n_tokens: int  # tokens produced by this step
+
+
+@dataclasses.dataclass
+class ServeReport:
+    """Aggregated outcome of one engine run."""
+
+    requests: List[Any]          # FINISHED Request objects
+    steps: List[StepTrace]
+    elapsed_s: float
+
+    # ------------------------------------------------------------------ #
+    @property
+    def tokens_generated(self) -> int:
+        return sum(len(r.tokens) for r in self.requests)
+
+    @property
+    def tokens_per_s(self) -> float:
+        return self.tokens_generated / max(self.elapsed_s, 1e-9)
+
+    def token_latencies_s(self) -> List[float]:
+        out = []
+        for st in self.steps:
+            out.extend([st.wall_s] * st.n_tokens)
+        return out
+
+    def percentiles_ms(self) -> Tuple[float, float]:
+        lats = self.token_latencies_s()
+        return (percentile(lats, 50) * 1e3, percentile(lats, 99) * 1e3)
+
+    # ------------------------------------------------------------------ #
+    def summary(self) -> Dict[str, Any]:
+        p50, p99 = self.percentiles_ms()
+        ttfts = [r.ttft_s for r in self.requests if r.ttft_s is not None]
+        decode_steps = [s for s in self.steps if s.kind == "decode"]
+        return {
+            "requests": len(self.requests),
+            "tokens": self.tokens_generated,
+            "elapsed_s": round(self.elapsed_s, 4),
+            "tokens_per_s": round(self.tokens_per_s, 2),
+            "p50_token_ms": round(p50, 3),
+            "p99_token_ms": round(p99, 3),
+            "ttft_p50_ms": round(percentile(ttfts, 50) * 1e3, 3),
+            "decode_steps": len(decode_steps),
+            "mean_batch_occupancy": round(
+                sum(s.n_tokens for s in decode_steps)
+                / max(len(decode_steps), 1), 2),
+        }
+
+    def format(self) -> str:
+        s = self.summary()
+        return (
+            f"{s['requests']} requests, {s['tokens']} tokens in "
+            f"{s['elapsed_s']:.2f}s ({s['tokens_per_s']:.1f} tok/s), "
+            f"per-token p50 {s['p50_token_ms']:.1f}ms / "
+            f"p99 {s['p99_token_ms']:.1f}ms, "
+            f"ttft p50 {s['ttft_p50_ms']:.1f}ms, "
+            f"mean occupancy {s['mean_batch_occupancy']:.1f}"
+        )

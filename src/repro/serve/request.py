@@ -1,0 +1,79 @@
+"""Request model for the continuous-batching serving subsystem.
+
+A request's lifecycle (see docs/serving.md):
+
+    WAITING --submit--> QUEUED --admit--> RUNNING --retire--> FINISHED
+
+WAITING requests sit in the engine's arrival buffer until their
+``arrival_step`` (server scenario: requests trickle in mid-run; offline
+scenario: everything arrives at step 0). QUEUED requests wait in the
+scheduler's FIFO for a free batch slot. RUNNING requests own exactly one
+slot of the batched KV cache until they hit ``max_new_tokens`` (or the
+EOS id) and are retired, freeing the slot for the next admission.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import itertools
+from typing import Any, List, Optional
+
+_ids = itertools.count()
+
+
+class RequestState(enum.Enum):
+    WAITING = "waiting"    # submitted to the engine, arrival_step not reached
+    QUEUED = "queued"      # in the scheduler FIFO, waiting for a slot
+    RUNNING = "running"    # owns a KV-cache slot, decoding
+    FINISHED = "finished"  # retired; ``tokens`` holds the full generation
+
+
+@dataclasses.dataclass(eq=False)  # identity semantics: media arrays make
+class Request:                    # field-wise __eq__ ill-defined
+    """One generation request.
+
+    prompt: token ids (list of ints). media: optional precomputed media
+    embeddings, (n_media, d_model) for VLM frontends or (enc_source_len,
+    d_model) encoder frames for enc-dec archs. arrival_step: engine step
+    at which the request becomes visible (0 = offline scenario).
+    """
+
+    prompt: List[int]
+    max_new_tokens: int = 16
+    media: Optional[Any] = None
+    arrival_step: int = 0
+    id: int = dataclasses.field(default_factory=lambda: next(_ids))
+
+    # -- runtime state (owned by scheduler/engine) ---------------------- #
+    state: RequestState = RequestState.WAITING
+    slot: Optional[int] = None
+    tokens: List[int] = dataclasses.field(default_factory=list)
+    t_arrival: Optional[float] = None      # wall clock at queue entry
+    t_first_token: Optional[float] = None  # wall clock after prefill
+    t_done: Optional[float] = None         # wall clock at retirement
+
+    def __post_init__(self):
+        if self.max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")
+        if not self.prompt:
+            raise ValueError("empty prompt")
+
+    @property
+    def prompt_len(self) -> int:
+        return len(self.prompt)
+
+    @property
+    def done(self) -> bool:
+        return len(self.tokens) >= self.max_new_tokens
+
+    @property
+    def ttft_s(self) -> Optional[float]:
+        if self.t_first_token is None or self.t_arrival is None:
+            return None
+        return self.t_first_token - self.t_arrival
+
+    @property
+    def latency_s(self) -> Optional[float]:
+        if self.t_done is None or self.t_arrival is None:
+            return None
+        return self.t_done - self.t_arrival

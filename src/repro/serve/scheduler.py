@@ -1,0 +1,86 @@
+"""Slot scheduler: admits queued requests into free KV-cache slots and
+retires finished ones, one decision round per decode step.
+
+Pure Python, no jax — the scheduler decides *which* request occupies
+*which* of the ``max_batch`` cache slots; the engine turns those decisions
+into device work. Invariants (enforced here, property-tested in
+tests/test_serve.py):
+
+  * a RUNNING request owns exactly one slot; a slot holds at most one
+    request;
+  * admission is FIFO in submission order (no request starves while a
+    later one runs);
+  * retirement frees the slot in the same round, so a waiting request can
+    be admitted into it on the next ``admit`` call (slot reuse).
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import List, Optional, Tuple
+
+from repro.serve.request import Request, RequestState
+
+
+class Scheduler:
+    def __init__(self, max_batch: int):
+        if max_batch < 1:
+            raise ValueError("max_batch must be >= 1")
+        self.max_batch = max_batch
+        self._slots: List[Optional[Request]] = [None] * max_batch
+        self._queue: deque = deque()
+
+    # ------------------------------------------------------------------ #
+    def submit(self, req: Request) -> None:
+        """Move a request into the FIFO (WAITING/QUEUED -> QUEUED)."""
+        if req.state not in (RequestState.WAITING, RequestState.QUEUED):
+            raise ValueError(f"cannot queue request in state {req.state}")
+        if any(r is req for r in self._queue):
+            raise ValueError(f"request {req.id} already queued")
+        req.state = RequestState.QUEUED
+        self._queue.append(req)
+
+    def admit(self) -> List[Tuple[int, Request]]:
+        """Fill free slots from the FIFO; returns [(slot, request), ...].
+
+        The engine must prefill each returned request into its slot before
+        the next decode step.
+        """
+        out = []
+        for i in range(self.max_batch):
+            if self._slots[i] is not None or not self._queue:
+                continue
+            req = self._queue.popleft()
+            req.state = RequestState.RUNNING
+            req.slot = i
+            self._slots[i] = req
+            out.append((i, req))
+        return out
+
+    def retire(self, slot: int) -> Request:
+        """Free ``slot`` (RUNNING -> FINISHED); returns the request."""
+        req = self._slots[slot]
+        if req is None:
+            raise ValueError(f"slot {slot} is already free")
+        self._slots[slot] = None
+        req.state = RequestState.FINISHED
+        req.slot = None
+        return req
+
+    # ------------------------------------------------------------------ #
+    def running(self) -> List[Tuple[int, Request]]:
+        return [(i, r) for i, r in enumerate(self._slots) if r is not None]
+
+    def slot_of(self, slot: int) -> Optional[Request]:
+        return self._slots[slot]
+
+    @property
+    def n_active(self) -> int:
+        return sum(r is not None for r in self._slots)
+
+    @property
+    def n_queued(self) -> int:
+        return len(self._queue)
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self._queue) or self.n_active > 0

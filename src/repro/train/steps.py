@@ -11,13 +11,11 @@ The GSPMD path of the paper's techniques lives here:
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import InputShape, ModelConfig
 from repro.dist import Axes, Rules, param_specs, opt_state_specs, split_tree, use_rules
@@ -44,15 +42,16 @@ class ModelAPI:
     def loss(self, params, batch):
         return self._m.loss_fn(params, self.cfg, batch)
 
-    def prefill(self, params, batch, *, cache_len=None, window=None):
+    def prefill(self, params, batch, *, cache_len=None, window=None,
+                last_pos=None):
         if self.cfg.is_encdec:
             return self._m.prefill(
                 params, self.cfg, batch["media"], batch["tokens"],
-                cache_len=cache_len, window=window,
+                cache_len=cache_len, window=window, last_pos=last_pos,
             )
         return self._m.prefill(
             params, self.cfg, batch["tokens"], media=batch.get("media"),
-            cache_len=cache_len, window=window,
+            cache_len=cache_len, window=window, last_pos=last_pos,
         )
 
     def decode(self, params, token, cache, pos, *, window=None):
@@ -274,6 +273,43 @@ def make_decode_step(cfg: ModelConfig, shape: InputShape,
                      rules: Optional[Rules] = None):
     api = ModelAPI(cfg)
     window = cfg.effective_window(shape)
+
+    def decode_step(params, token, cache, pos):
+        with use_rules(rules):
+            return api.decode(params, token, cache, pos, window=window)
+
+    return decode_step
+
+
+# ---- serving steps (continuous batching; repro.serve) ---------------------- #
+def make_serve_prefill_step(cfg: ModelConfig, rules: Optional[Rules] = None,
+                            *, cache_len: int, window=None):
+    """Prefill step for the serving path.
+
+    ``prefill_step(params, batch, last_pos)`` returns (logits of each
+    example's true final prompt position, decode cache sized
+    ``cache_len``). Prompts may be right-padded to one compile shape;
+    ``last_pos`` (B,) selects the real last position per example, and the
+    returned cache still contains the padded positions' K/V — the caller
+    (repro.serve.Engine) masks them via ``serve.cache.invalidate_beyond``
+    so padded prefill is exactly equivalent to unpadded prefill.
+    """
+    api = ModelAPI(cfg)
+
+    def prefill_step(params, batch, last_pos):
+        with use_rules(rules):
+            return api.prefill(params, batch, cache_len=cache_len,
+                               window=window, last_pos=last_pos)
+
+    return prefill_step
+
+
+def make_serve_decode_step(cfg: ModelConfig, rules: Optional[Rules] = None,
+                           *, window=None):
+    """Decode step for the serving path: ``pos`` is a (B,) vector, one
+    absolute offset per KV-cache slot, so a single compiled program
+    advances every in-flight sequence (continuous batching)."""
+    api = ModelAPI(cfg)
 
     def decode_step(params, token, cache, pos):
         with use_rules(rules):

@@ -9,14 +9,12 @@ from __future__ import annotations
 import dataclasses
 import os
 import time
-from typing import Any, Callable, Dict, Iterable, Optional
+from typing import Callable, Iterable, Optional
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.configs.base import InputShape, ModelConfig
+from repro.configs.base import ModelConfig
 from repro.dist import Rules
 from repro.train import checkpoint as ckpt
 from repro.train import steps as T

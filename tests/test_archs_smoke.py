@@ -7,8 +7,9 @@ import pytest
 
 from repro.configs import get_config, list_archs
 from repro.dist import split_tree
-from repro.launch.mesh import single_device_mesh
 from repro.train import steps as T
+
+pytestmark = pytest.mark.smoke
 
 ARCHS = list_archs()
 

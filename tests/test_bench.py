@@ -13,7 +13,6 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 from repro.bench import (  # noqa: E402
     BENCHMARK_MODULES,
     REGISTRY,
-    Context,
     load_all,
     make_artifact,
     records_from_dryrun,
@@ -141,6 +140,7 @@ def smoke_artifact():
     return art, failures, elapsed
 
 
+@pytest.mark.slow
 def test_smoke_suite_runs_all_and_under_60s(smoke_artifact):
     art, failures, elapsed = smoke_artifact
     assert failures == 0, [
@@ -162,6 +162,7 @@ def test_smoke_suite_runs_all_and_under_60s(smoke_artifact):
         assert r["wall_us"]["iqr_us"] >= 0
 
 
+@pytest.mark.slow
 def test_smoke_artifact_writable(smoke_artifact, tmp_path):
     art, _, _ = smoke_artifact
     path = tmp_path / "BENCH_test.json"
@@ -172,12 +173,14 @@ def test_smoke_artifact_writable(smoke_artifact, tmp_path):
 # --------------------------------------------------------------------------- #
 # compare.
 # --------------------------------------------------------------------------- #
+@pytest.mark.slow
 def test_compare_self_is_clean(smoke_artifact):
     art, _, _ = smoke_artifact
     _, regressions = compare(art, art, threshold=1.15)
     assert regressions == []
 
 
+@pytest.mark.slow
 def test_compare_flags_2x_regression(smoke_artifact, tmp_path):
     art, _, _ = smoke_artifact
     doctored = copy.deepcopy(art)
@@ -198,6 +201,7 @@ def test_compare_flags_2x_regression(smoke_artifact, tmp_path):
     assert compare_main([str(old_p), str(old_p)]) == 0
 
 
+@pytest.mark.slow
 def test_compare_flags_missing_record(smoke_artifact):
     art, _, _ = smoke_artifact
     shrunk = copy.deepcopy(art)
@@ -209,6 +213,7 @@ def test_compare_flags_missing_record(smoke_artifact):
     assert regressions == []
 
 
+@pytest.mark.slow
 def test_compare_flags_lost_timing(smoke_artifact):
     """A record that used to carry wall_us but comes back derived-only
     is a coverage regression, even under --no-wall."""
@@ -227,6 +232,7 @@ def test_compare_flags_lost_timing(smoke_artifact):
     assert regressions == []
 
 
+@pytest.mark.slow
 def test_compare_no_wall_ignores_slowdown(smoke_artifact):
     art, _, _ = smoke_artifact
     doctored = copy.deepcopy(art)
@@ -238,6 +244,7 @@ def test_compare_no_wall_ignores_slowdown(smoke_artifact):
     assert regressions == []
 
 
+@pytest.mark.slow
 def test_compare_flags_newly_failing_benchmark(smoke_artifact):
     art, _, _ = smoke_artifact
     broken = copy.deepcopy(art)

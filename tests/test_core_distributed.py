@@ -8,6 +8,7 @@ import sys
 import pytest
 
 
+@pytest.mark.slow
 @pytest.mark.timeout(600)
 def test_distributed_checks_subprocess():
     script = os.path.join(os.path.dirname(__file__), "dist_checks.py")

@@ -1,6 +1,7 @@
-"""Docs stay true: every ```python block in docs/dist.md executes
-(doctest-style, shared namespace, in order), and docs/paper_map.md
-covers every registered benchmark."""
+"""Docs stay true: every ```python block in docs/dist.md and
+docs/serving.md executes (doctest-style, shared namespace, in order),
+the serve CLI commands documented in serving.md run end-to-end, and
+docs/paper_map.md covers every registered benchmark."""
 import os
 import re
 import sys
@@ -21,7 +22,7 @@ def _blocks(doc):
 
 def test_docs_exist():
     for doc in ("architecture.md", "paper_map.md", "dist.md",
-                "benchmarks.md"):
+                "benchmarks.md", "serving.md"):
         path = os.path.join(DOCS, doc)
         assert os.path.exists(path), f"docs/{doc} missing"
         assert os.path.getsize(path) > 500, f"docs/{doc} is a stub"
@@ -39,6 +40,44 @@ def test_dist_md_snippets_execute():
         except Exception as e:  # noqa: BLE001
             pytest.fail(f"docs/dist.md block {i} failed: "
                         f"{type(e).__name__}: {e}\n---\n{src}")
+
+
+@pytest.mark.slow  # the engine block compiles and runs a real workload
+def test_serving_md_snippets_execute():
+    """The serving guide's python blocks run verbatim, sequentially
+    (scheduler demo, slab invalidation, a real mixed-arrival engine
+    run), asserts included."""
+    blocks = _blocks("serving.md")
+    assert len(blocks) >= 3, "serving.md lost its runnable snippets"
+    ns = {}
+    for i, src in enumerate(blocks):
+        try:
+            exec(compile(src, f"docs/serving.md[block {i}]", "exec"), ns)
+        except Exception as e:  # noqa: BLE001
+            pytest.fail(f"docs/serving.md block {i} failed: "
+                        f"{type(e).__name__}: {e}\n---\n{src}")
+
+
+_BASH_FENCE = re.compile(r"```bash\n(.*?)```", re.DOTALL)
+
+
+@pytest.mark.slow
+def test_serving_md_cli_commands_run():
+    """Every documented `python -m repro.launch.serve ...` line executes
+    (in-process, argv parsed straight out of the doc)."""
+    from repro.launch.serve import main as serve_main
+    with open(os.path.join(DOCS, "serving.md")) as f:
+        text = f.read()
+    cmds = [
+        line.strip()
+        for block in _BASH_FENCE.findall(text)
+        for line in block.splitlines()
+        if "repro.launch.serve" in line
+    ]
+    assert len(cmds) >= 2, "serving.md lost its CLI examples"
+    for cmd in cmds:
+        argv = cmd.split("repro.launch.serve", 1)[1].split()
+        assert serve_main(argv) == 0, f"documented CLI failed: {cmd}"
 
 
 def test_paper_map_covers_every_benchmark():

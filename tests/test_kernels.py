@@ -146,7 +146,6 @@ def test_moe_gating_properties():
     per_token = dispatch.sum(axis=(2, 3))
     assert (per_token <= k + 1e-6).all()
     # capacity respected
-    per_slot = dispatch.sum(axis=(0, 1)) if False else dispatch
     assert (dispatch.sum(axis=1) <= 1 + 1e-6).all()  # one token per (e,c) slot
     # combine weights only where dispatched, bounded by 1
     assert (combine <= dispatch + 1e-6).all()

@@ -4,12 +4,10 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import get_config
-from repro.configs.base import MambaConfig, RWKV6Config
 from repro.dist import split_tree
-from repro.kernels import ops, ref
+from repro.kernels import ref
 from repro.models import layers as L
 
 KEY = jax.random.PRNGKey(0)

@@ -9,6 +9,7 @@ import pytest
 ROOT = os.path.join(os.path.dirname(__file__), "..")
 
 
+@pytest.mark.slow
 def test_launcher_end_to_end():
     """python -m repro.launch.train runs a reduced arch to completion."""
     proc = subprocess.run(
@@ -58,6 +59,7 @@ def test_public_api_importable():
     import repro.kernels.ops
     import repro.models.lm
     import repro.optim
+    import repro.serve
     import repro.train
 
     assert len(repro.configs.list_archs()) == 10
