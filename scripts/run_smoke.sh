@@ -1,0 +1,40 @@
+#!/usr/bin/env bash
+# run-smoke: exercise `python -m repro run` once per mode
+# (train/eval/serve/bench/dryrun), on one arch per model family
+# (dense/audio/ssm/moe + the arch-independent bench suite), plus one
+# spec-file + --set invocation. Each mode is its own process — the
+# dry-run must own jax init (512 placeholder devices).
+# Usage: scripts/run_smoke.sh  (from the repo root; used by CI and
+# scripts/verify.sh ahead of the slow tier)
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
+
+echo "== run-smoke: train (gemma-7b, dense) =="
+python -m repro run --arch gemma-7b --mode train \
+    --set trainer.total_steps=3 --set trainer.batch=4 --set trainer.seq=32
+
+echo "== run-smoke: eval (whisper-medium, audio enc-dec) =="
+python -m repro run --arch whisper-medium --mode eval \
+    --set trainer.batch=2 --set trainer.seq=32
+
+echo "== run-smoke: serve (rwkv6-3b, ssm exact-length prefill) =="
+python -m repro run --arch rwkv6-3b --mode serve \
+    --set serve.tokens=4 --set serve.batch=2 --set serve.prompt_len=8
+
+echo "== run-smoke: bench (registry subset, schema-valid artifact) =="
+python -m repro run --mode bench --set bench.smoke=true \
+    --set bench.only=gradsum_2d --set bench.out=/tmp/BENCH_run_smoke.json
+python -m repro.bench.compare /tmp/BENCH_run_smoke.json \
+    /tmp/BENCH_run_smoke.json --threshold 1.15
+
+echo "== run-smoke: dryrun (mixtral-8x7b, moe, 16x16 mesh AOT) =="
+python -m repro run --arch mixtral-8x7b --mode dryrun \
+    --set dryrun.shape=decode_32k
+
+echo "== run-smoke: spec file + --set override =="
+python -m repro run --spec runs/gemma_7b_tp2d.json --set serve.tokens=4
+
+echo "run-smoke OK"

@@ -1,0 +1,8 @@
+"""``python -m repro <command>``. The only command today is ``run`` —
+the unified experiment dispatcher (see ``repro.run``)."""
+import sys
+
+from repro.run.cli import main
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

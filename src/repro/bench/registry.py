@@ -92,6 +92,32 @@ def load_all() -> Dict[str, BenchmarkDef]:
     return REGISTRY
 
 
+def select(only=None):
+    """Registered benchmark names, optionally filtered to ``only``.
+
+    Makes the suite spec-addressable (``--set bench.only=...``): unknown
+    names fail loudly with a did-you-mean suggestion instead of running
+    an accidentally-empty suite.
+    """
+    import difflib
+
+    load_all()
+    names = list(REGISTRY)
+    if not only:
+        return names
+    unknown = [n for n in only if n not in REGISTRY]
+    if unknown:
+        hints = []
+        for n in unknown:
+            close = difflib.get_close_matches(n, names, n=1)
+            hints.append(n + (f" (did you mean {close[0]!r}?)" if close
+                              else ""))
+        raise SystemExit(
+            f"unknown benchmark(s) {hints}; known: {names}"
+        )
+    return [n for n in names if n in set(only)]
+
+
 # --------------------------------------------------------------------------- #
 # Timing.
 # --------------------------------------------------------------------------- #

@@ -12,6 +12,10 @@ is the CI profile: reduced warmup/iters and each module's reduced problem
 sizes, so the full suite finishes in under a minute on CPU. A benchmark
 that raises is recorded as ``status: failed`` (the artifact is still
 written) and the process exits nonzero.
+
+The CLI is a shim over the unified run API: flags map onto a
+``RunSpec(mode="bench")`` and ``python -m repro run --mode bench`` is the
+same dispatcher (``run.dispatch._run_bench`` drives :func:`run_suite`).
 """
 from __future__ import annotations
 
@@ -21,21 +25,13 @@ import time
 import traceback
 
 from repro.bench import schema
-from repro.bench.registry import REGISTRY, Context, load_all
+from repro.bench.registry import REGISTRY, Context, select
 
 
 def run_suite(*, smoke: bool = False, only=None, warmup=None, iters=None,
               verbose: bool = True):
     """Run the (filtered) suite; return (entries, failures)."""
-    load_all()
-    names = list(REGISTRY)
-    if only:
-        unknown = [n for n in only if n not in REGISTRY]
-        if unknown:
-            raise SystemExit(
-                f"unknown benchmark(s) {unknown}; known: {names}"
-            )
-        names = [n for n in names if n in set(only)]
+    names = select(only)
 
     entries = {}
     failures = 0
@@ -80,27 +76,20 @@ def main(argv=None) -> int:
     ap.add_argument("--quiet", action="store_true")
     args = ap.parse_args(argv)
 
-    only = [s.strip() for s in args.only.split(",")] if args.only else None
-    t0 = time.perf_counter()
-    entries, failures = run_suite(
-        smoke=args.smoke, only=only, warmup=args.warmup, iters=args.iters,
-        verbose=not args.quiet,
-    )
-    elapsed = time.perf_counter() - t0
+    from repro.run import BenchSection, RunSpec
+    from repro.run.dispatch import run_spec
 
-    probe = Context(smoke=args.smoke, warmup=args.warmup, iters=args.iters,
-                    verbose=False)
-    artifact = schema.make_artifact(
-        entries, tag=args.tag, smoke=args.smoke,
-        warmup=probe.warmup, iters=probe.iters,
-    )
-    out = args.out or f"BENCH_{args.tag}.json"
-    schema.dump(artifact, out)
-
-    n_rec = sum(len(e["records"]) for e in entries.values())
-    print(f"\n{len(entries) - failures}/{len(entries)} benchmarks ok, "
-          f"{n_rec} records, {elapsed:.1f}s -> {out}", flush=True)
-    return 1 if failures else 0
+    spec = RunSpec(mode="bench", bench=BenchSection(
+        smoke=args.smoke,
+        only=tuple(s.strip() for s in args.only.split(","))
+        if args.only else (),
+        out=args.out or "",
+        tag=args.tag,
+        warmup=args.warmup,
+        iters=args.iters,
+        quiet=args.quiet,
+    ))
+    return run_spec(spec)["exit_code"]
 
 
 if __name__ == "__main__":

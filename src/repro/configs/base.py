@@ -8,8 +8,9 @@ variant (<=2 layers, d_model<=512, <=4 experts) of the same family.
 from __future__ import annotations
 
 import dataclasses
+import typing
 from dataclasses import dataclass
-from typing import Optional, Tuple
+from typing import Any, Dict, Mapping, Optional, Tuple
 
 
 @dataclass(frozen=True)
@@ -265,6 +266,97 @@ class ModelConfig:
         )
         total -= n_moe_layers * (m.n_experts - m.top_k) * dense_eq
         return int(total)
+
+
+# --------------------------------------------------------------------------- #
+# Override-field introspection (used by the repro.run --set grammar).
+#
+# The config layer is pure frozen dataclasses, so "which fields can a spec
+# override, and at what type" is answerable generically: resolve the
+# (stringified, because of `from __future__ import annotations`) field
+# annotations and flatten nested config dataclasses into dotted paths
+# (``moe.top_k``, ``mamba.d_state``). Container fields like
+# ``block_pattern`` carry structure, not scalars, and are deliberately
+# not overridable.
+# --------------------------------------------------------------------------- #
+def resolved_field_types(cls) -> Dict[str, Any]:
+    """Dataclass field name -> resolved type annotation."""
+    hints = typing.get_type_hints(cls)
+    return {f.name: hints[f.name] for f in dataclasses.fields(cls)}
+
+
+def _unwrap_optional(typ):
+    """Optional[T] -> T (identity otherwise)."""
+    if typing.get_origin(typ) is typing.Union:
+        args = [a for a in typing.get_args(typ) if a is not type(None)]
+        if len(args) == 1:
+            return args[0]
+    return typ
+
+
+def override_paths(cls, _prefix: str = "") -> Dict[str, Any]:
+    """Flattened dotted-path -> scalar type for every overridable field.
+
+    Nested config dataclasses (``moe``, ``mamba``, ``rwkv6``) contribute
+    their fields under a dotted prefix; fields whose type is a tuple of
+    dataclasses (``block_pattern``) are omitted.
+    """
+    out: Dict[str, Any] = {}
+    for name, typ in resolved_field_types(cls).items():
+        inner = _unwrap_optional(typ)
+        if dataclasses.is_dataclass(inner):
+            out.update(override_paths(inner, f"{_prefix}{name}."))
+        elif typing.get_origin(inner) in (tuple, Tuple) and any(
+            dataclasses.is_dataclass(_unwrap_optional(a))
+            for a in typing.get_args(inner) if a is not Ellipsis
+        ):
+            continue  # structured container (block_pattern): not overridable
+        else:
+            out[f"{_prefix}{name}"] = typ
+    return out
+
+
+def replace_path(obj, dotted: str, value):
+    """``dataclasses.replace`` through a dotted path of nested dataclasses.
+
+    Re-runs every ``__post_init__`` on the way out, so invariants
+    (divisibility checks, derived head_dim) hold on the overridden config.
+    """
+    head, _, rest = dotted.partition(".")
+    if not rest:
+        return dataclasses.replace(obj, **{head: value})
+    child = getattr(obj, head)
+    if child is None:
+        raise ValueError(
+            f"cannot set {dotted!r}: {head!r} is not enabled on this config"
+        )
+    return dataclasses.replace(obj, **{head: replace_path(child, rest, value)})
+
+
+def apply_overrides(cfg: "ModelConfig", overrides: Mapping[str, Any]):
+    """Apply dotted-path overrides ({'param_sharding': 'wus', ...})."""
+    known = override_paths(type(cfg))
+    for dotted in overrides:
+        if dotted not in known:
+            raise ValueError(
+                f"{type(cfg).__name__} has no overridable field {dotted!r}"
+            )
+    # __post_init__ materializes head_dim, so replace() would carry the
+    # stale derived value across a d_model/n_heads override. When the
+    # current head_dim is the derived one and the override doesn't pin
+    # it, reset it to 0 afterwards so it re-derives from the new dims
+    # (an explicitly non-derived head_dim, e.g. gemma's 256, is kept).
+    rederive_head_dim = (
+        getattr(cfg, "n_heads", 0)
+        and cfg.head_dim == cfg.d_model // cfg.n_heads
+        and ("d_model" in overrides or "n_heads" in overrides)
+        and "head_dim" not in overrides
+    )
+    for dotted, value in overrides.items():
+        cfg = replace_path(cfg, dotted, value)
+    if rederive_head_dim:
+        cfg = replace_path(cfg, "head_dim", 0)
+    return cfg
 
 
 @dataclass(frozen=True)

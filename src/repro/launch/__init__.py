@@ -2,3 +2,22 @@
 # (input_specs), dryrun.py (multi-pod AOT compile), train.py (trainer CLI).
 # NOTE: dryrun.py must be the process entry point (it sets XLA_FLAGS
 # before jax initializes) — do not import it from library code.
+#
+# This package __init__ MUST stay jax-free: dryrun.py and run/cli.py
+# import the dry-run device contract below before jax initializes.
+
+# The production meshes the dry-run compiles against (launch/mesh.py):
+# 16x16 single pod, 2x16x16 two-pod.
+POD_DEVICES = 256
+MULTIPOD_DEVICES = 512
+
+
+def dryrun_xla_flags() -> str:
+    """XLA_FLAGS value the dry-run needs set before jax's first init:
+    enough placeholder CPU devices for the largest (two-pod) mesh."""
+    import os
+
+    return (
+        f"--xla_force_host_platform_device_count={MULTIPOD_DEVICES} "
+        + os.environ.get("REPRO_EXTRA_XLA_FLAGS", "")
+    )

@@ -1,17 +1,17 @@
 import os
 
-os.environ["XLA_FLAGS"] = (
-    "--xla_force_host_platform_device_count=512 "
-    + os.environ.get("REPRO_EXTRA_XLA_FLAGS", "")
-)
+from repro.launch import dryrun_xla_flags  # jax-free import chain
+
+os.environ["XLA_FLAGS"] = dryrun_xla_flags()
 
 """Multi-pod dry-run: AOT lower + compile every (architecture x input
 shape) on the production meshes, proving the distribution config is
 coherent without hardware.
 
-The two lines above MUST stay the first statements in this file: jax locks
-the device count at first init, and the dry-run needs 512 placeholder CPU
-devices to build the 2x16x16 mesh.
+The statements above MUST stay first in this file (and their import
+chain jax-free): jax locks the device count at first init, and the
+dry-run needs 512 placeholder CPU devices to build the 2x16x16 mesh
+(the contract lives in ``repro.launch.dryrun_xla_flags``).
 
 Usage:
   PYTHONPATH=src python -m repro.launch.dryrun --arch gemma-7b \
@@ -19,7 +19,6 @@ Usage:
   PYTHONPATH=src python -m repro.launch.dryrun --all
 """
 import argparse  # noqa: E402
-import json  # noqa: E402
 import re  # noqa: E402
 import sys  # noqa: E402
 import time  # noqa: E402
@@ -27,10 +26,9 @@ from collections import defaultdict  # noqa: E402
 
 import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
-import numpy as np  # noqa: E402
 from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
-from repro.configs import INPUT_SHAPES, get_config, get_shape, list_archs  # noqa: E402
+from repro.configs import get_config, get_shape  # noqa: E402
 from repro.dist import Rules  # noqa: E402
 from repro.launch import specs as S  # noqa: E402
 from repro.launch.mesh import make_production_mesh  # noqa: E402
@@ -289,7 +287,12 @@ def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
     return result
 
 
-def main():
+def main(argv=None):
+    """Thin shim over the unified run API: flags map onto a
+    ``RunSpec(mode="dryrun")``; ``run.dispatch._run_dryrun`` drives
+    :func:`dryrun_one` / :func:`print_spec_table` and prints identically.
+    (The XLA device-count flag is already set by this module's import;
+    ``python -m repro run --mode dryrun`` sets the same flag itself.)"""
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None)
     ap.add_argument("--shape", default=None)
@@ -306,58 +309,31 @@ def main():
     ap.add_argument("--specs", action="store_true",
                     help="print the Rules-derived sharding-spec table "
                          "per arch instead of lowering/compiling")
-    args = ap.parse_args()
+    args = ap.parse_args(argv)
 
-    if args.specs:
-        tables = []
-        for arch in (list_archs() if args.all or not args.arch
-                     else [args.arch]):
-            meta, rows = print_spec_table(
-                arch, multi_pod=args.multi_pod,
-                mode=os.environ.get("REPRO_SERVE_MODE"),
-            )
-            tables.append({**meta, "rows": [
-                {**r, "shape": list(r["shape"]), "axes": list(r["axes"])}
-                for r in rows
-            ]})
-            print()
-        if args.json:
-            with open(args.json, "w") as f:
-                json.dump(tables, f, indent=1)
-        return 0
+    from repro.run import DryrunSection, RunSpec
+    from repro.run.dispatch import run_spec
 
-    results = []
-    if args.all:
-        for arch in list_archs():
-            for shape in INPUT_SHAPES:
-                try:
-                    results.append(
-                        dryrun_one(arch, shape, multi_pod=args.multi_pod)
-                    )
-                except Exception as e:  # noqa: BLE001 — report, keep going
-                    print(f"FAILED {arch} x {shape}: {type(e).__name__}: {e}")
-                    results.append({"arch": arch, "shape": shape,
-                                    "multi_pod": args.multi_pod,
-                                    "error": str(e)[:500]})
-    else:
-        results.append(
-            dryrun_one(args.arch, args.shape, multi_pod=args.multi_pod)
-        )
-    if args.json:
-        with open(args.json, "w") as f:
-            json.dump(results, f, indent=1)
-    if args.bench_out:
-        from repro.bench import schema as bench_schema
-        bench_schema.dump(
-            bench_schema.dryrun_artifact(
-                results, tag=args.bench_tag, multi_pod=args.multi_pod
-            ),
-            args.bench_out,
-        )
-        print(f"bench artifact -> {args.bench_out}")
-    ok = sum(1 for r in results if "error" not in r)
-    print(f"\n{ok}/{len(results)} dry-runs succeeded")
-    return 0 if ok == len(results) else 1
+    # --specs with no --arch historically meant every arch.
+    do_all = args.all or (args.specs and not args.arch)
+    if not do_all and not args.arch:
+        ap.error("--arch (with --shape) or --all is required")
+    if not do_all and not args.specs and not args.shape:
+        ap.error("--shape is required with --arch")
+    spec = RunSpec(
+        arch=args.arch or "gemma-7b",
+        mode="dryrun",
+        mesh="multipod" if args.multi_pod else "pod",
+        dryrun=DryrunSection(
+            shape=args.shape or "train_4k",
+            all=do_all,
+            specs=args.specs,
+            json_out=args.json or "",
+            bench_out=args.bench_out or "",
+            bench_tag=args.bench_tag,
+        ),
+    )
+    return run_spec(spec)["exit_code"]
 
 
 if __name__ == "__main__":

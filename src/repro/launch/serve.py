@@ -12,46 +12,27 @@ scenario, and prints throughput + p50/p99 per-token latency. Reduced
 configs run end-to-end on CPU; on a pod the same entry point uses the
 production mesh (tp2d is §Perf hillclimb B's weight-stationary 2-D
 tensor parallelism).
+
+The CLI is a shim over the unified run API: flags map onto a
+``RunSpec(mode="serve")`` and ``python -m repro run --mode serve`` is
+the same dispatcher. The workload builder lives in
+``serve.engine.synthetic_requests``; ``build_requests`` stays as an
+alias for existing imports (benchmarks, examples).
 """
 from __future__ import annotations
 
 import argparse
 import sys
 
-import jax
-import numpy as np
-
-from repro.configs import get_config, list_archs
-from repro.dist import Rules, split_tree, use_rules
-from repro.launch.mesh import single_device_mesh
-from repro.serve import Engine, Request, ServeConfig, run_offline, run_server
-from repro.train.steps import ModelAPI
+from repro.configs import list_archs
+from repro.serve.engine import synthetic_requests
 
 
 def build_requests(cfg, *, n: int, tokens: int, prompt_len: int,
                    scenario: str, seed: int):
-    """Synthetic workload: mixed prompt lengths; server scenario staggers
-    arrivals so admissions interleave with in-flight decodes."""
-    rng = np.random.RandomState(seed)
-    reqs = []
-    for i in range(n):
-        lo = max(1, min(prompt_len // 2, prompt_len))
-        p_len = int(rng.randint(lo, max(lo + 1, prompt_len + 1)))
-        req = Request(
-            prompt=rng.randint(0, cfg.vocab, size=p_len).tolist(),
-            max_new_tokens=tokens,
-            arrival_step=0 if scenario == "offline" else int(i * 2),
-        )
-        if cfg.is_encdec:
-            req.media = np.asarray(jax.random.normal(
-                jax.random.PRNGKey(seed + i),
-                (cfg.enc_source_len, cfg.d_model)))
-        elif cfg.frontend == "vision_patches":
-            req.media = np.asarray(jax.random.normal(
-                jax.random.PRNGKey(seed + i),
-                (cfg.n_media_tokens, cfg.d_model)))
-        reqs.append(req)
-    return reqs
+    return synthetic_requests(cfg, n=n, tokens=tokens,
+                              prompt_len=prompt_len, scenario=scenario,
+                              seed=seed)
 
 
 def main(argv=None):
@@ -75,43 +56,25 @@ def main(argv=None):
                     choices=[None, "tp2d", "fsdp", "wus", "replicated"])
     args = ap.parse_args(argv)
 
-    cfg = get_config(args.arch).reduced()
-    mesh = single_device_mesh()
-    rules = Rules(mesh, args.serve_mode or cfg.param_sharding)
-    api = ModelAPI(cfg)
-    params, _ = split_tree(api.init(cfg, jax.random.PRNGKey(args.seed)))
+    from repro.run import RunSpec, ServeSection
+    from repro.run.dispatch import run_spec
 
-    n_media = cfg.n_media_tokens if cfg.frontend == "vision_patches" else 0
-    scfg = ServeConfig(
-        max_batch=args.batch if args.max_batch is None else args.max_batch,
-        max_len=n_media + args.prompt_len + args.tokens,
-        prefill_len=args.prompt_len,
-        temperature=args.temperature,
+    spec = RunSpec(
+        arch=args.arch,
+        mode="serve",
+        scenario=args.scenario,
         seed=args.seed,
+        serve=ServeSection(
+            tokens=args.tokens,
+            batch=args.batch,
+            max_batch=args.max_batch,
+            prompt_len=args.prompt_len,
+            temperature=args.temperature,
+            serve_mode=args.serve_mode or "",
+            warmup=not args.no_warmup,
+        ),
     )
-    reqs = build_requests(
-        cfg, n=args.batch, tokens=args.tokens, prompt_len=args.prompt_len,
-        scenario=args.scenario, seed=args.seed)
-
-    with mesh, use_rules(rules):
-        engine = Engine(cfg, params, rules, scfg)
-        if not args.no_warmup:
-            # compile the prefill/decode programs (both prefill argument
-            # layouts) so the reported metrics measure serving, not XLA
-            run_offline(engine, build_requests(
-                cfg, n=min(2, scfg.max_batch), tokens=2,
-                prompt_len=args.prompt_len, scenario="offline",
-                seed=args.seed + 1))
-        driver = run_offline if args.scenario == "offline" else run_server
-        report = driver(engine, reqs)
-
-    print(f"{args.arch} [{args.scenario}, mode="
-          f"{args.serve_mode or cfg.param_sharding}, "
-          f"slots={scfg.max_batch}]: {report.format()}")
-    for req in sorted(report.requests, key=lambda r: r.id):
-        print(f"  req {req.id}: prompt {req.prompt_len} -> "
-              f"{len(req.tokens)} tokens {req.tokens}")
-    return 0
+    return run_spec(spec)["exit_code"]
 
 
 if __name__ == "__main__":

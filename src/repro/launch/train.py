@@ -2,17 +2,17 @@
 
 On this CPU container it runs reduced configs end-to-end; on a pod the same
 entry point takes ``--mesh pod|multipod`` and the full config.
+
+This CLI is a thin shim over the unified run API: the historical flags
+map onto a ``RunSpec(mode="train")`` and dispatch through the same
+``repro.run`` path as ``python -m repro run --mode train`` (the
+shim-equivalence tests in tests/test_run.py assert identical history and
+output for a fixed seed).
 """
 from __future__ import annotations
 
 import argparse
 import sys
-
-
-from repro.configs import get_config
-from repro.data.pipeline import synthetic_lm_batches, synthetic_eval_set
-from repro.launch.mesh import make_production_mesh, single_device_mesh
-from repro.train import Trainer, TrainerConfig
 
 
 def main(argv=None):
@@ -29,34 +29,32 @@ def main(argv=None):
     ap.add_argument("--eval-every", type=int, default=0)
     ap.add_argument("--checkpoint-every", type=int, default=0)
     ap.add_argument("--checkpoint-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--resume", default=None, metavar="CKPT_DIR",
+                    help="resume from a checkpoint dir (a run dir with "
+                         "step_<N> subdirs, or one step_<N> dir); --steps "
+                         "still means GLOBAL steps")
     args = ap.parse_args(argv)
 
-    cfg = get_config(args.arch)
-    if args.reduced:
-        cfg = cfg.reduced()
-    mesh = {
-        "single": single_device_mesh,
-        "pod": lambda: make_production_mesh(),
-        "multipod": lambda: make_production_mesh(multi_pod=True),
-    }[args.mesh]()
+    from repro.run import RunSpec, TrainerSection
+    from repro.run.dispatch import run_spec
 
-    tcfg = TrainerConfig(
-        total_steps=args.steps,
-        eval_every=args.eval_every,
-        checkpoint_every=args.checkpoint_every,
-        checkpoint_dir=args.checkpoint_dir,
-        log_every=max(1, args.steps // 10),
+    spec = RunSpec(
+        arch=args.arch,
+        mode="train",
+        mesh=args.mesh,
+        reduced=args.reduced,
+        trainer=TrainerSection(
+            total_steps=args.steps,
+            batch=args.batch,
+            seq=args.seq,
+            eval_every=args.eval_every,
+            checkpoint_every=args.checkpoint_every,
+            checkpoint_dir=args.checkpoint_dir,
+            log_every=max(1, args.steps // 10),
+            resume=args.resume or "",
+        ),
     )
-    trainer = Trainer(cfg, mesh, tcfg)
-    batches = synthetic_lm_batches(
-        cfg, batch=args.batch, seq=args.seq, steps=args.steps
-    )
-    eval_fn = None
-    if args.eval_every:
-        eval_fn = synthetic_eval_set(cfg, batch=args.batch, seq=args.seq)
-    history = trainer.fit(batches, eval_fn)
-    print("done", history[-1] if history else "")
-    return 0
+    return run_spec(spec)["exit_code"]
 
 
 if __name__ == "__main__":

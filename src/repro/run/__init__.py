@@ -1,0 +1,43 @@
+"""repro.run — the declarative experiment API.
+
+One :class:`RunSpec` describes a run (arch, mode, mesh, nested
+subsystem sections); ``run_spec`` resolves it to config -> mesh ->
+subsystem; ``python -m repro run`` is the CLI. The legacy entry points
+(``repro.launch.train|serve|dryrun``, ``repro.bench.run``) are shims
+over this package. See docs/run.md.
+"""
+from repro.run.dispatch import build_mesh, resolve_config, run_spec
+from repro.run.overrides import (
+    SpecError,
+    apply_assignments,
+    coerce_value,
+    parse_assignment,
+)
+from repro.run.spec import (
+    MESHES,
+    MODES,
+    BenchSection,
+    DryrunSection,
+    RunSpec,
+    ServeSection,
+    TrainerSection,
+)
+from repro.run.specfile import load_spec_file
+
+__all__ = [
+    "MESHES",
+    "MODES",
+    "BenchSection",
+    "DryrunSection",
+    "RunSpec",
+    "ServeSection",
+    "SpecError",
+    "TrainerSection",
+    "apply_assignments",
+    "build_mesh",
+    "coerce_value",
+    "load_spec_file",
+    "parse_assignment",
+    "resolve_config",
+    "run_spec",
+]

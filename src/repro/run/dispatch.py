@@ -1,0 +1,301 @@
+"""Spec dispatcher: resolve a :class:`RunSpec` to config, mesh and
+subsystem, and run it.
+
+    run_spec(spec) -> result dict (always carries "exit_code")
+
+One runner per mode:
+
+  * ``train`` — hook-based :class:`repro.train.Trainer` over synthetic
+    LM batches (optionally resuming from a checkpoint, optionally
+    emitting a ``BENCH_*.json`` of the run via ``BenchRecordHook``);
+  * ``eval``  — the distributed-eval loop (C4) alone, on fresh or
+    resumed parameters;
+  * ``serve`` — the continuous-batching ``serve.Engine`` in an MLPerf-
+    Inference-style scenario (offline | server);
+  * ``bench`` — the registered benchmark suite, spec-addressable via
+    ``bench.only``, artifact in the versioned BENCH schema;
+  * ``dryrun`` — AOT lower+compile on the production meshes (the
+    512-device XLA flag must be set before jax initializes — the CLI
+    does this; see ``run.cli``).
+
+Everything jax-touching is imported lazily inside the runners so spec
+construction and validation stay import-cheap (and jax-free).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+from repro.run.spec import RunSpec
+
+# Result of the most recent run_spec() in this process — lets in-process
+# callers of a CLI entry point (tests, notebooks) reach the structured
+# result (history, reports, artifacts) behind the printed output.
+LAST_RESULT: Optional[Dict[str, Any]] = None
+
+
+def resolve_config(spec: RunSpec):
+    """arch -> ModelConfig, after ``reduced()`` and model overrides (in
+    that order, so a spec override beats the smoke-variant defaults)."""
+    from repro.configs import base as config_base
+    from repro.configs import get_config
+
+    cfg = get_config(spec.arch)
+    if spec.reduced:
+        cfg = cfg.reduced()
+    if spec.model:
+        cfg = config_base.apply_overrides(cfg, spec.model)
+    return cfg
+
+
+def build_mesh(spec: RunSpec):
+    from repro.launch.mesh import make_production_mesh, single_device_mesh
+
+    if spec.mesh == "single":
+        return single_device_mesh()
+    return make_production_mesh(multi_pod=spec.mesh == "multipod")
+
+
+def run_spec(spec: RunSpec) -> Dict[str, Any]:
+    global LAST_RESULT
+    LAST_RESULT = None  # release the previous run's state (Trainer/Engine
+    #                     trees are large) before this one allocates
+    runner = {
+        "train": _run_train,
+        "eval": _run_eval,
+        "serve": _run_serve,
+        "bench": _run_bench,
+        "dryrun": _run_dryrun,
+    }[spec.mode]
+    result = runner(spec)
+    result.setdefault("exit_code", 0)
+    LAST_RESULT = result
+    return result
+
+
+# --------------------------------------------------------------------------- #
+# train / eval
+# --------------------------------------------------------------------------- #
+def _make_trainer(spec: RunSpec):
+    from repro.train import Trainer, TrainerConfig
+
+    t = spec.trainer
+    tcfg = TrainerConfig(
+        total_steps=t.total_steps,
+        eval_every=t.eval_every,
+        checkpoint_every=t.checkpoint_every,
+        checkpoint_dir=t.checkpoint_dir,
+        log_every=t.log_every,
+        seed=spec.seed,
+        metrics=t.metrics,
+    )
+    return Trainer(resolve_config(spec), build_mesh(spec), tcfg)
+
+
+def _run_train(spec: RunSpec) -> Dict[str, Any]:
+    import itertools
+
+    from repro.data.pipeline import synthetic_eval_set, synthetic_lm_batches
+    from repro.train.hooks import BenchRecordHook
+
+    t = spec.trainer
+    trainer = _make_trainer(spec)
+    start = trainer.resume(t.resume) if t.resume else 0
+    # One deterministic stream for the whole run: a resumed run skips the
+    # batches the checkpointed steps already consumed, so interrupted +
+    # resumed == uninterrupted, step for step.
+    batches = synthetic_lm_batches(
+        trainer.cfg, batch=t.batch, seq=t.seq, steps=t.total_steps,
+        seed=spec.seed,
+    )
+    if start:
+        batches = itertools.islice(batches, start, None)
+    eval_fn = None
+    if t.eval_every:
+        eval_fn = synthetic_eval_set(trainer.cfg, batch=t.batch, seq=t.seq)
+    hooks = trainer.default_hooks(eval_fn)
+    if t.bench_out:
+        hooks.append(BenchRecordHook(t.bench_out, arch=trainer.cfg.name,
+                                     tag=f"train-{spec.arch}"))
+    history = trainer.fit(batches, eval_fn, hooks=hooks)
+    print("done", history[-1] if history else "")
+    return {"history": history, "trainer": trainer}
+
+
+def _run_eval(spec: RunSpec) -> Dict[str, Any]:
+    from repro.data.pipeline import synthetic_eval_set
+
+    t = spec.trainer
+    trainer = _make_trainer(spec)
+    if t.resume:
+        trainer.resume(t.resume)
+    eval_fn = synthetic_eval_set(trainer.cfg, batch=t.batch, seq=t.seq)
+    record = trainer.evaluate(eval_fn)
+    print(f"eval {trainer.cfg.name}"
+          f"{' @ step ' + str(trainer.start_step) if t.resume else ''}: "
+          f"nll={record['eval_nll']:.4f}")
+    return {"eval": record, "trainer": trainer}
+
+
+# --------------------------------------------------------------------------- #
+# serve
+# --------------------------------------------------------------------------- #
+def _run_serve(spec: RunSpec) -> Dict[str, Any]:
+    import jax
+
+    from repro.dist import Rules, split_tree, use_rules
+    from repro.serve import Engine, ServeConfig
+    from repro.serve.engine import scenario_driver, synthetic_requests
+    from repro.train.steps import ModelAPI
+
+    s = spec.serve
+    scenario = spec.scenario or "offline"
+    cfg = resolve_config(spec)
+    mesh = build_mesh(spec)
+    rules = Rules(mesh, s.serve_mode or cfg.param_sharding)
+    api = ModelAPI(cfg)
+    params, _ = split_tree(api.init(cfg, jax.random.PRNGKey(spec.seed)))
+
+    n_media = cfg.n_media_tokens if cfg.frontend == "vision_patches" else 0
+    scfg = ServeConfig(
+        max_batch=s.batch if s.max_batch is None else s.max_batch,
+        max_len=n_media + s.prompt_len + s.tokens,
+        prefill_len=s.prompt_len,
+        temperature=s.temperature,
+        seed=spec.seed,
+    )
+    reqs = synthetic_requests(
+        cfg, n=s.batch, tokens=s.tokens, prompt_len=s.prompt_len,
+        scenario=scenario, seed=spec.seed)
+
+    with mesh, use_rules(rules):
+        engine = Engine(cfg, params, rules, scfg)
+        if s.warmup:
+            # compile the prefill/decode programs (both prefill argument
+            # layouts) so the reported metrics measure serving, not XLA
+            scenario_driver("offline")(engine, synthetic_requests(
+                cfg, n=min(2, scfg.max_batch), tokens=2,
+                prompt_len=s.prompt_len, scenario="offline",
+                seed=spec.seed + 1))
+        report = scenario_driver(scenario)(engine, reqs)
+
+    print(f"{spec.arch} [{scenario}, mode="
+          f"{s.serve_mode or cfg.param_sharding}, "
+          f"slots={scfg.max_batch}]: {report.format()}")
+    for req in sorted(report.requests, key=lambda r: r.id):
+        print(f"  req {req.id}: prompt {req.prompt_len} -> "
+              f"{len(req.tokens)} tokens {req.tokens}")
+    return {"report": report, "engine": engine}
+
+
+# --------------------------------------------------------------------------- #
+# bench
+# --------------------------------------------------------------------------- #
+def _run_bench(spec: RunSpec) -> Dict[str, Any]:
+    import time
+
+    from repro.bench import schema
+    from repro.bench.registry import Context
+    from repro.bench.run import run_suite
+
+    b = spec.bench
+    t0 = time.perf_counter()
+    entries, failures = run_suite(
+        smoke=b.smoke, only=list(b.only) or None, warmup=b.warmup,
+        iters=b.iters, verbose=not b.quiet,
+    )
+    elapsed = time.perf_counter() - t0
+
+    probe = Context(smoke=b.smoke, warmup=b.warmup, iters=b.iters,
+                    verbose=False)
+    artifact = schema.make_artifact(
+        entries, tag=b.tag, smoke=b.smoke,
+        warmup=probe.warmup, iters=probe.iters,
+    )
+    out = b.out or f"BENCH_{b.tag}.json"
+    schema.dump(artifact, out)
+
+    n_rec = sum(len(e["records"]) for e in entries.values())
+    print(f"\n{len(entries) - failures}/{len(entries)} benchmarks ok, "
+          f"{n_rec} records, {elapsed:.1f}s -> {out}", flush=True)
+    return {"out": out, "artifact": artifact, "failures": failures,
+            "exit_code": 1 if failures else 0}
+
+
+# --------------------------------------------------------------------------- #
+# dryrun
+# --------------------------------------------------------------------------- #
+def _run_dryrun(spec: RunSpec) -> Dict[str, Any]:
+    import json
+    import os
+
+    from repro.configs import INPUT_SHAPES, list_archs
+    from repro.launch import dryrun as D
+
+    d = spec.dryrun
+    multi_pod = spec.mesh == "multipod"
+    archs = list_archs() if d.all else [spec.arch]
+
+    # Importing repro.launch.dryrun (above) set the 512-placeholder-device
+    # XLA flag before ITS jax import, but that is too late if this process
+    # already initialized jax (notebook, pytest) — fail clearly instead of
+    # with a device-count error deep inside mesh construction.
+    import jax
+
+    from repro.launch import MULTIPOD_DEVICES, POD_DEVICES
+
+    need = MULTIPOD_DEVICES if multi_pod else POD_DEVICES
+    if jax.device_count() < need:
+        raise RuntimeError(
+            f"dryrun needs {need} placeholder CPU devices but jax is "
+            f"initialized with {jax.device_count()}; the dry-run must own "
+            "the process — run `python -m repro run --mode dryrun ...` "
+            "as its own command"
+        )
+
+    if d.specs:
+        tables = []
+        for arch in archs:
+            meta, rows = D.print_spec_table(
+                arch, multi_pod=multi_pod,
+                mode=os.environ.get("REPRO_SERVE_MODE"),
+            )
+            tables.append({**meta, "rows": [
+                {**r, "shape": list(r["shape"]), "axes": list(r["axes"])}
+                for r in rows
+            ]})
+            print()
+        if d.json_out:
+            with open(d.json_out, "w") as f:
+                json.dump(tables, f, indent=1)
+        return {"tables": tables}
+
+    results = []
+    if d.all:
+        for arch in archs:
+            for shape in INPUT_SHAPES:
+                try:
+                    results.append(
+                        D.dryrun_one(arch, shape, multi_pod=multi_pod)
+                    )
+                except Exception as e:  # noqa: BLE001 — report, keep going
+                    print(f"FAILED {arch} x {shape}: {type(e).__name__}: {e}")
+                    results.append({"arch": arch, "shape": shape,
+                                    "multi_pod": multi_pod,
+                                    "error": str(e)[:500]})
+    else:
+        results.append(D.dryrun_one(spec.arch, d.shape, multi_pod=multi_pod))
+    if d.json_out:
+        with open(d.json_out, "w") as f:
+            json.dump(results, f, indent=1)
+    if d.bench_out:
+        from repro.bench import schema as bench_schema
+        bench_schema.dump(
+            bench_schema.dryrun_artifact(
+                results, tag=d.bench_tag, multi_pod=multi_pod
+            ),
+            d.bench_out,
+        )
+        print(f"bench artifact -> {d.bench_out}")
+    ok = sum(1 for r in results if "error" not in r)
+    print(f"\n{ok}/{len(results)} dry-runs succeeded")
+    return {"results": results, "exit_code": 0 if ok == len(results) else 1}

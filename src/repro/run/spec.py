@@ -1,0 +1,189 @@
+"""Declarative run specification: one frozen dataclass per experiment.
+
+A :class:`RunSpec` is the single description every entry point resolves
+through (``python -m repro run``, the legacy launcher shims, spec files
+under ``runs/``): *which* architecture, *which* mode
+(``train|eval|serve|bench|dryrun``), *which* mesh, plus nested
+per-subsystem sections. Specs are data — ``to_dict``/``from_dict``
+round-trip losslessly, so a run is reproducible from a committed JSON or
+TOML file plus ``--set`` overrides (see ``run.overrides``).
+
+``model`` holds *pending* ``ModelConfig`` overrides as a dotted-key dict
+(``{"param_sharding": "wus"}``); they are validated/coerced against the
+config dataclass at spec-build time and applied at dispatch time, after
+``reduced()``, so a spec override always wins over the smoke-variant
+defaults.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional, Tuple
+
+from repro.configs import base as config_base
+from repro.run.overrides import (
+    SpecError,
+    coerce_value,
+    did_you_mean,
+    normalize_model_overrides,
+)
+
+MODES = ("train", "eval", "serve", "bench", "dryrun")
+MESHES = ("single", "pod", "multipod")
+SCENARIOS = ("", "offline", "server")
+# Mirrors train.steps.EXTRA_METRICS (kept literal so spec parsing stays
+# jax-free; a drift test in tests/test_run.py asserts the two agree).
+TRAIN_METRICS = ("grad_norm", "param_norm")
+
+
+@dataclass(frozen=True)
+class TrainerSection:
+    """Train/eval-mode knobs (mirrors ``train.TrainerConfig`` + data)."""
+
+    total_steps: int = 30
+    batch: int = 8
+    seq: int = 64
+    eval_every: int = 0
+    checkpoint_every: int = 0
+    checkpoint_dir: str = "/tmp/repro_ckpt"
+    log_every: int = 10
+    resume: str = ""            # checkpoint dir (root or step_N) to resume
+    metrics: Tuple[str, ...] = ()  # extra per-step metrics, e.g. grad_norm
+    bench_out: str = ""         # write a BENCH_*.json of this training run
+
+    def __post_init__(self):
+        for m in self.metrics:
+            if m not in TRAIN_METRICS:
+                raise SpecError(
+                    f"trainer.metrics: unknown metric {m!r}; known: "
+                    f"{TRAIN_METRICS}" + did_you_mean(m, TRAIN_METRICS)
+                )
+
+
+@dataclass(frozen=True)
+class ServeSection:
+    """Serve-mode knobs (mirrors the ``serve.Engine`` workload surface)."""
+
+    tokens: int = 16
+    batch: int = 4
+    max_batch: Optional[int] = None  # None -> batch (one slot per request)
+    prompt_len: int = 16
+    temperature: float = 0.0
+    serve_mode: str = ""        # '' -> cfg.param_sharding; tp2d|fsdp|wus|...
+    warmup: bool = True         # pre-compile so metrics exclude XLA time
+
+
+@dataclass(frozen=True)
+class BenchSection:
+    """Bench-mode knobs (mirrors ``repro.bench.run``)."""
+
+    smoke: bool = False
+    only: Tuple[str, ...] = ()
+    out: str = ""               # '' -> BENCH_<tag>.json
+    tag: str = "run"
+    warmup: Optional[int] = None  # None -> profile default
+    iters: Optional[int] = None
+    quiet: bool = False
+
+
+@dataclass(frozen=True)
+class DryrunSection:
+    """Dryrun-mode knobs (mirrors ``repro.launch.dryrun``)."""
+
+    shape: str = "train_4k"
+    all: bool = False           # every (arch x shape) instead of one
+    specs: bool = False         # print sharding-spec tables, no compile
+    json_out: str = ""
+    bench_out: str = ""
+    bench_tag: str = "dryrun"
+
+
+@dataclass(frozen=True)
+class RunSpec:
+    arch: str = "gemma-7b"
+    mode: str = "train"
+    mesh: str = "single"
+    scenario: str = ""          # serve: offline|server ('' -> offline)
+    reduced: bool = True
+    seed: int = 0
+    model: Dict[str, Any] = field(default_factory=dict)
+    trainer: TrainerSection = field(default_factory=TrainerSection)
+    serve: ServeSection = field(default_factory=ServeSection)
+    bench: BenchSection = field(default_factory=BenchSection)
+    dryrun: DryrunSection = field(default_factory=DryrunSection)
+
+    def __post_init__(self):
+        if self.mode not in MODES:
+            raise SpecError(
+                f"mode must be one of {MODES}, got {self.mode!r}"
+                + did_you_mean(self.mode, MODES)
+            )
+        if self.mode == "dryrun" and self.mesh == "single":
+            # The dry-run only exists on the production meshes; normalize
+            # here so a spec's to_dict() faithfully records the pod mesh
+            # the run will actually use.
+            object.__setattr__(self, "mesh", "pod")
+        if self.mesh not in MESHES:
+            raise SpecError(
+                f"mesh must be one of {MESHES}, got {self.mesh!r}"
+                + did_you_mean(self.mesh, MESHES)
+            )
+        if self.scenario not in SCENARIOS:
+            raise SpecError(
+                f"scenario must be one of {SCENARIOS[1:]}, got "
+                f"{self.scenario!r}" + did_you_mean(self.scenario, SCENARIOS)
+            )
+
+    # ------------------------------------------------------------------ #
+    def to_dict(self) -> Dict[str, Any]:
+        """JSON-serializable dict (tuples become lists)."""
+        def conv(v):
+            if dataclasses.is_dataclass(v) and not isinstance(v, type):
+                return {f.name: conv(getattr(v, f.name))
+                        for f in dataclasses.fields(v)}
+            if isinstance(v, tuple):
+                return [conv(x) for x in v]
+            if isinstance(v, dict):
+                return {k: conv(x) for k, x in v.items()}
+            return v
+
+        return conv(self)
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "RunSpec":
+        """Build a spec from a dict, rejecting unknown keys with
+        did-you-mean suggestions and coercing values to field types."""
+        if not isinstance(d, dict):
+            raise SpecError(f"run spec must be an object, got {type(d).__name__}")
+        fields = config_base.resolved_field_types(cls)
+        kwargs: Dict[str, Any] = {}
+        for key, value in d.items():
+            if key not in fields:
+                raise SpecError(
+                    f"run spec has no field {key!r}"
+                    + did_you_mean(key, fields)
+                )
+            typ = fields[key]
+            if key == "model":
+                if not isinstance(value, dict):
+                    raise SpecError("model must be an object of overrides")
+                kwargs[key] = normalize_model_overrides(value)
+            elif dataclasses.is_dataclass(typ):
+                kwargs[key] = _section_from_dict(typ, value, where=key)
+            else:
+                kwargs[key] = coerce_value(value, typ, where=key)
+        return cls(**kwargs)
+
+
+def _section_from_dict(section_cls, d, *, where: str):
+    if not isinstance(d, dict):
+        raise SpecError(f"{where} must be an object")
+    fields = config_base.resolved_field_types(section_cls)
+    kwargs = {}
+    for key, value in d.items():
+        if key not in fields:
+            raise SpecError(
+                f"{where} has no field {key!r}" + did_you_mean(key, fields)
+            )
+        kwargs[key] = coerce_value(value, fields[key], where=f"{where}.{key}")
+    return section_cls(**kwargs)

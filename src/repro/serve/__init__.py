@@ -11,7 +11,14 @@ from repro.serve.cache import (
     read_slot,
     write_slot,
 )
-from repro.serve.engine import Engine, ServeConfig, run_offline, run_server
+from repro.serve.engine import (
+    Engine,
+    ServeConfig,
+    run_offline,
+    run_server,
+    scenario_driver,
+    synthetic_requests,
+)
 from repro.serve.metrics import ServeReport, StepTrace, percentile
 from repro.serve.request import Request, RequestState
 from repro.serve.scheduler import Scheduler
@@ -30,5 +37,7 @@ __all__ = [
     "read_slot",
     "run_offline",
     "run_server",
+    "scenario_driver",
+    "synthetic_requests",
     "write_slot",
 ]

@@ -258,7 +258,9 @@ class Engine:
 
 
 # --------------------------------------------------------------------------- #
-# Scenario drivers (MLPerf-Inference-style).
+# Scenario drivers (MLPerf-Inference-style) + spec-side construction:
+# ``run.dispatch`` and the launcher shim address scenarios by name and
+# build synthetic workloads from RunSpec fields alone.
 # --------------------------------------------------------------------------- #
 def run_offline(engine: Engine, requests: List[Request]) -> ServeReport:
     """Offline scenario: the whole workload is available at step 0;
@@ -276,3 +278,45 @@ def run_server(engine: Engine, requests: List[Request]) -> ServeReport:
     for r in requests:
         engine.submit(r)
     return engine.run()
+
+
+SCENARIO_DRIVERS = {"offline": run_offline, "server": run_server}
+
+
+def scenario_driver(name: str):
+    """Driver for an MLPerf-Inference scenario name."""
+    try:
+        return SCENARIO_DRIVERS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown serve scenario {name!r}; "
+            f"known: {sorted(SCENARIO_DRIVERS)}"
+        ) from None
+
+
+def synthetic_requests(cfg, *, n: int, tokens: int, prompt_len: int,
+                       scenario: str = "offline", seed: int = 0
+                       ) -> List[Request]:
+    """Synthetic workload: mixed prompt lengths; the server scenario
+    staggers arrivals so admissions interleave with in-flight decodes.
+    Enc-dec archs get encoder frames, VLM archs get vision patches."""
+    rng = np.random.RandomState(seed)
+    reqs = []
+    for i in range(n):
+        lo = max(1, min(prompt_len // 2, prompt_len))
+        p_len = int(rng.randint(lo, max(lo + 1, prompt_len + 1)))
+        req = Request(
+            prompt=rng.randint(0, cfg.vocab, size=p_len).tolist(),
+            max_new_tokens=tokens,
+            arrival_step=0 if scenario == "offline" else int(i * 2),
+        )
+        if cfg.is_encdec:
+            req.media = np.asarray(jax.random.normal(
+                jax.random.PRNGKey(seed + i),
+                (cfg.enc_source_len, cfg.d_model)))
+        elif cfg.frontend == "vision_patches":
+            req.media = np.asarray(jax.random.normal(
+                jax.random.PRNGKey(seed + i),
+                (cfg.n_media_tokens, cfg.d_model)))
+        reqs.append(req)
+    return reqs

@@ -1,4 +1,21 @@
 from repro.train import checkpoint, steps
+from repro.train.hooks import (
+    BenchRecordHook,
+    CheckpointHook,
+    EvalHook,
+    Hook,
+    MetricsLogger,
+)
 from repro.train.trainer import Trainer, TrainerConfig
 
-__all__ = ["Trainer", "TrainerConfig", "checkpoint", "steps"]
+__all__ = [
+    "BenchRecordHook",
+    "CheckpointHook",
+    "EvalHook",
+    "Hook",
+    "MetricsLogger",
+    "Trainer",
+    "TrainerConfig",
+    "checkpoint",
+    "steps",
+]

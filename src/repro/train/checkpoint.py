@@ -56,6 +56,16 @@ def restore_checkpoint(path: str, state_like):
     return jax.tree_util.tree_unflatten(treedef, new_leaves)
 
 
+def manifest_step(path: str) -> Optional[int]:
+    """The global step recorded in a checkpoint directory's manifest."""
+    manifest = os.path.join(path, "manifest.json")
+    if not os.path.exists(manifest):
+        return None
+    with open(manifest) as f:
+        step = json.load(f).get("step")
+    return None if step is None else int(step)
+
+
 def latest_step(root: str) -> Optional[int]:
     if not os.path.isdir(root):
         return None

@@ -1,0 +1,159 @@
+"""Trainer hooks: the extension surface of ``Trainer.fit``.
+
+``fit`` itself only runs the compiled train step; everything episodic —
+console logging, the paper's nested eval loop (C4), checkpointing,
+benchmark capture — is a :class:`Hook`. Stock hooks reproduce the
+pre-hook behavior exactly; ``run.dispatch`` and user code can append
+their own (any object with the same methods works, subclassing ``Hook``
+just inherits the no-ops).
+
+Call protocol, per fitted step (in hook-list order):
+
+    on_step(trainer, step, record)        # record: mutable per-step dict
+    on_eval(trainer, step, record)        # via Trainer.emit after EvalHook
+    on_checkpoint(trainer, step, path)    # via Trainer.emit
+    on_finish(trainer, history)           # once, after the loop
+
+``record`` is the same dict appended to ``fit``'s returned history, so a
+hook that adds keys (``EvalHook`` adds ``eval_nll``) enriches the
+history entry callers see.
+"""
+from __future__ import annotations
+
+import os
+import time
+from typing import Callable, List, Optional
+
+
+class Hook:
+    """No-op base: override any subset of the four events.
+
+    ``record`` values may be on-device scalars while the run is in
+    flight (reading one forces a host sync, which is exactly what the
+    log/eval cadence did before the hook redesign); ``fit`` materializes
+    every history record to floats before ``on_finish``. A hook that
+    needs accurate per-step wall times sets ``needs_sync = True`` to opt
+    the whole fit into blocking once per step.
+    """
+
+    needs_sync = False
+
+    def on_step(self, trainer, step: int, record: dict) -> None:
+        pass
+
+    def on_eval(self, trainer, step: int, record: dict) -> None:
+        pass
+
+    def on_checkpoint(self, trainer, step: int, path: str) -> None:
+        pass
+
+    def on_finish(self, trainer, history: List[dict]) -> None:
+        pass
+
+
+class MetricsLogger(Hook):
+    """Console metrics sink (replaces the bare ``print`` that used to be
+    inlined in ``Trainer.fit``). ``log_every=0`` silences step lines;
+    eval lines always print when an eval ran."""
+
+    def __init__(self, log_every: int = 10,
+                 sink: Optional[Callable[[str], None]] = None):
+        self.log_every = log_every
+        self.sink = sink or (lambda line: print(line, flush=True))
+        self._t0: Optional[float] = None
+
+    def on_step(self, trainer, step, record):
+        if self._t0 is None:
+            self._t0 = time.time() - trainer.last_step_s
+        if self.log_every and step % self.log_every == 0:
+            dt = time.time() - self._t0
+            self.sink(f"step {step}: loss={record['loss']:.4f} "
+                      f"nll={record['nll']:.4f} ({dt:.1f}s)")
+
+    def on_eval(self, trainer, step, record):
+        self.sink(f"  eval @ {step}: nll={record['eval_nll']:.4f}")
+
+
+class EvalHook(Hook):
+    """The nested train-and-eval loop (C4): every ``every`` steps, run
+    the distributed eval set and merge ``eval_nll`` into the step
+    record, then fan the enriched record out via ``on_eval``."""
+
+    def __init__(self, eval_batches: Callable, every: int):
+        self.eval_batches = eval_batches
+        self.every = every
+
+    def on_step(self, trainer, step, record):
+        if self.every and step % self.every == 0:
+            record.update(trainer.evaluate(self.eval_batches))
+            trainer.emit("on_eval", step, record)
+
+
+class CheckpointHook(Hook):
+    """Periodic sharded checkpoints under ``dir/step_<N>``."""
+
+    def __init__(self, every: int, directory: str):
+        self.every = every
+        self.directory = directory
+
+    def on_step(self, trainer, step, record):
+        if self.every and step % self.every == 0:
+            from repro.train import checkpoint as ckpt
+
+            path = os.path.join(self.directory, f"step_{step}")
+            ckpt.save_checkpoint(path, trainer.state, step=step,
+                                 pspecs=trainer.state_specs)
+            trainer.emit("on_checkpoint", step, path)
+
+
+class BenchRecordHook(Hook):
+    """Emit the training run as a ``BENCH_*.json`` artifact (the exact
+    schema ``repro.bench.compare`` consumes), so a training run lands in
+    the same perf-trajectory format as the benchmark suite.
+
+    Per-step wall samples become one median/IQR record (the first step
+    is dropped as compile warmup when more than one sample exists);
+    final loss/nll ride along as derived keys. ``needs_sync`` makes the
+    fit block once per step so the samples measure the step, not jax's
+    async dispatch.
+    """
+
+    needs_sync = True
+
+    def __init__(self, out: str, *, arch: str = "", tag: str = "train"):
+        self.out = out
+        self.arch = arch
+        self.tag = tag
+        self._samples_us: List[float] = []
+
+    def on_step(self, trainer, step, record):
+        self._samples_us.append(trainer.last_step_s * 1e6)
+
+    def on_finish(self, trainer, history):
+        from repro.bench import schema
+        from repro.bench.registry import timing_from_samples
+
+        samples = self._samples_us[1:] if len(self._samples_us) > 1 \
+            else self._samples_us
+        if not samples:
+            return
+        timing = timing_from_samples(samples, warmup=1)
+        derived = {"steps": len(self._samples_us)}
+        if history:
+            derived["final_loss"] = history[-1].get("loss")
+            derived["final_nll"] = history[-1].get("nll")
+            if "eval_nll" in history[-1]:
+                derived["final_eval_nll"] = history[-1]["eval_nll"]
+        name = f"train/{self.arch or trainer.cfg.name}/step"
+        entry = schema.bench_entry(
+            paper_ref="§Train (RunSpec-driven training run)",
+            units="us",
+            derived_keys=tuple(derived),
+            records=[{"name": name, "wall_us": timing.as_dict(),
+                      "derived": derived}],
+        )
+        artifact = schema.make_artifact(
+            {"train_run": entry}, tag=self.tag, smoke=True,
+            warmup=1, iters=timing.iters,
+        )
+        schema.dump(artifact, self.out)

@@ -180,11 +180,30 @@ def cache_pspecs(cfg: ModelConfig, cache_shapes, rules: Rules):
 from repro.optim.precision import compute_cast  # C7 policy (noqa: E402)
 
 
+def _global_norm(tree):
+    """L2 norm over every leaf (computed in fp32)."""
+    sq = sum(
+        jnp.sum(jnp.square(g.astype(jnp.float32)))
+        for g in jax.tree_util.tree_leaves(tree)
+    )
+    return jnp.sqrt(sq)
+
+
+# Metric names make_train_step knows how to plumb into its metrics dict
+# (requested per run via TrainerConfig.metrics / --set trainer.metrics=...).
+EXTRA_METRICS = ("grad_norm", "param_norm")
+
+
 def make_train_step(cfg: ModelConfig, optimizer: Optimizer,
                     rules: Optional[Rules] = None,
-                    axes=None) -> Callable:
+                    axes=None, extra_metrics=()) -> Callable:
     api = ModelAPI(cfg)
     M = cfg.microbatches
+    unknown = [m for m in extra_metrics if m not in EXTRA_METRICS]
+    if unknown:
+        raise ValueError(
+            f"unknown extra metric(s) {unknown}; supported: {EXTRA_METRICS}"
+        )
 
     def train_step(state, batch):
         with use_rules(rules):
@@ -233,11 +252,13 @@ def make_train_step(cfg: ModelConfig, optimizer: Optimizer,
                 )
                 nll = metrics["nll"]
 
+            metrics_out = {"loss": loss, "nll": nll}
+            if "grad_norm" in extra_metrics:
+                metrics_out["grad_norm"] = _global_norm(grads)
             new_params, new_opt = optimizer.update(grads, opt_state, params)
-            return (
-                {"params": new_params, "opt": new_opt},
-                {"loss": loss, "nll": nll},
-            )
+            if "param_norm" in extra_metrics:
+                metrics_out["param_norm"] = _global_norm(new_params)
+            return ({"params": new_params, "opt": new_opt}, metrics_out)
 
     return train_step
 

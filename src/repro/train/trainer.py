@@ -1,15 +1,18 @@
-"""End-to-end training driver: pjit'd steps + the paper's nested
-train-and-eval loop (C4) + checkpointing.
+"""End-to-end training driver: pjit'd steps + hook-driven episodic work.
 
-Runs identically on the 1x1 CPU mesh (examples, CI) and the production
-pod meshes — only the mesh and config differ.
+``fit`` runs the compiled train step and appends one record per step to
+the returned history (so callers always see per-step loss, with or
+without eval); logging, the paper's nested train-and-eval loop (C4),
+checkpointing and benchmark capture are :mod:`repro.train.hooks`
+attached per run. Runs identically on the 1x1 CPU mesh (examples, CI)
+and the production pod meshes — only the mesh and config differ.
 """
 from __future__ import annotations
 
 import dataclasses
 import os
 import time
-from typing import Callable, Iterable, Optional
+from typing import Callable, Iterable, List, Optional, Tuple
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
@@ -18,16 +21,18 @@ from repro.configs.base import ModelConfig
 from repro.dist import Rules
 from repro.train import checkpoint as ckpt
 from repro.train import steps as T
+from repro.train.hooks import CheckpointHook, EvalHook, Hook, MetricsLogger
 
 
 @dataclasses.dataclass
 class TrainerConfig:
-    total_steps: int = 100
+    total_steps: int = 100       # GLOBAL step budget (resume counts toward it)
     eval_every: int = 0          # 0 = no eval
     checkpoint_every: int = 0    # 0 = no checkpoints
     checkpoint_dir: str = "/tmp/repro_ckpt"
     log_every: int = 10
     seed: int = 0
+    metrics: Tuple[str, ...] = ()  # extra step metrics (e.g. "grad_norm")
 
 
 class Trainer:
@@ -45,79 +50,164 @@ class Trainer:
         shapes, axes = T.init_train_state(cfg, self.optimizer, key)
         self.axes = axes
         self.state_specs = T.train_state_specs(cfg, shapes, axes, self.rules)
-        ns = lambda t: jax.tree_util.tree_map(
-            lambda s: NamedSharding(mesh, s), t
-        )
         with mesh:
             self.state = jax.jit(
                 lambda k: T.init_train_state(
                     cfg, self.optimizer, k, concrete=True
                 )[0],
-                out_shardings=ns(self.state_specs),
+                out_shardings=self._ns(self.state_specs),
             )(key)
         self._train_step = None
         self._eval_step = None
+        self.start_step = 0          # set by resume(); fit continues from it
+        self.last_step_s = 0.0       # wall time of the latest train step
+        self._hooks: List[Hook] = []
 
+    def _ns(self, spec_tree):
+        return jax.tree_util.tree_map(
+            lambda s: NamedSharding(self.mesh, s), spec_tree
+        )
+
+    # ------------------------------------------------------------------ #
+    # Compilation (lazy, from the first batch's shapes).
+    # ------------------------------------------------------------------ #
     def _compile_train(self, batch):
         bshapes = jax.tree_util.tree_map(
             lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), batch
         )
         bspecs = T.batch_pspecs(bshapes, self.rules)
-        ns = lambda t: jax.tree_util.tree_map(
-            lambda s: NamedSharding(self.mesh, s), t
-        )
-        step = T.make_train_step(self.cfg, self.optimizer, self.rules, self.axes)
+        step = T.make_train_step(self.cfg, self.optimizer, self.rules,
+                                 self.axes, extra_metrics=self.tcfg.metrics)
         self._train_step = jax.jit(
             step,
             donate_argnums=(0,),
-            in_shardings=(ns(self.state_specs), ns(bspecs)),
-            out_shardings=(ns(self.state_specs), NamedSharding(self.mesh, P())),
+            in_shardings=(self._ns(self.state_specs), self._ns(bspecs)),
+            out_shardings=(self._ns(self.state_specs),
+                           NamedSharding(self.mesh, P())),
         )
+
+    def _compile_eval(self, batch):
+        bshapes = jax.tree_util.tree_map(
+            lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), batch
+        )
+        bspecs = T.batch_pspecs(bshapes, self.rules)
         estep = T.make_eval_step(self.cfg, self.rules)
         self._eval_step = jax.jit(
             estep,
             in_shardings=(
-                ns(self.state_specs)["params"], ns(bspecs),
+                self._ns(self.state_specs)["params"], self._ns(bspecs),
                 NamedSharding(self.mesh, P()),
             ),
         )
 
-    def fit(self, train_batches: Iterable, eval_batches: Optional[Callable] = None):
-        """train_batches: iterable of batch dicts. eval_batches: callable
-        yielding (batch, mask) pairs (see core.distributed_eval)."""
-        history = []
-        t0 = time.time()
+    # ------------------------------------------------------------------ #
+    # Hook plumbing.
+    # ------------------------------------------------------------------ #
+    def default_hooks(self, eval_batches: Optional[Callable] = None
+                      ) -> List[Hook]:
+        """The stock hook set implied by ``TrainerConfig`` (exactly the
+        behavior the pre-hook ``fit`` had inlined)."""
+        hooks: List[Hook] = [MetricsLogger(self.tcfg.log_every)]
+        if self.tcfg.eval_every and eval_batches is not None:
+            hooks.append(EvalHook(eval_batches, self.tcfg.eval_every))
+        if self.tcfg.checkpoint_every:
+            hooks.append(CheckpointHook(self.tcfg.checkpoint_every,
+                                        self.tcfg.checkpoint_dir))
+        return hooks
+
+    def emit(self, event: str, *args) -> None:
+        """Fan an event out to every hook of the current fit."""
+        for h in self._hooks:
+            getattr(h, event)(self, *args)
+
+    # ------------------------------------------------------------------ #
+    # Resume.
+    # ------------------------------------------------------------------ #
+    def resume(self, ckpt_dir: str) -> int:
+        """Restore state from a checkpoint and return its step count.
+
+        ``ckpt_dir`` may be a run directory containing ``step_<N>``
+        subdirs (the latest wins) or one ``step_<N>`` directory itself.
+        After resume, ``fit`` continues at ``start_step`` and
+        ``total_steps`` keeps meaning *global* steps.
+        """
+        step = ckpt.latest_step(ckpt_dir)
+        if step is not None:
+            path = os.path.join(ckpt_dir, f"step_{step}")
+        else:
+            path = ckpt_dir
+            step = ckpt.manifest_step(path)
+            if step is None:
+                raise ValueError(
+                    f"{ckpt_dir}: no step_<N> checkpoints and no step "
+                    "recorded in manifest.json"
+                )
+        restored = ckpt.restore_checkpoint(path, self.state)
         with self.mesh:
-            for step_idx, batch in enumerate(train_batches):
-                if step_idx >= self.tcfg.total_steps:
+            self.state = jax.device_put(restored, self._ns(self.state_specs))
+        self.start_step = int(step)
+        return self.start_step
+
+    # ------------------------------------------------------------------ #
+    # Eval (standalone or via EvalHook).
+    # ------------------------------------------------------------------ #
+    def evaluate(self, eval_batches: Callable) -> dict:
+        """Distributed eval (C4) over ``eval_batches()`` -> ``(batch,
+        mask)`` pairs; returns ``{"eval_nll": ...}``."""
+        nll, cnt = 0.0, 0.0
+        with self.mesh:
+            for ebatch, mask in eval_batches():
+                if self._eval_step is None:
+                    self._compile_eval(ebatch)
+                s, c = self._eval_step(self.state["params"], ebatch, mask)
+                nll += float(s)
+                cnt += float(c)
+        return {"eval_nll": nll / max(cnt, 1.0)}
+
+    # ------------------------------------------------------------------ #
+    # Fit.
+    # ------------------------------------------------------------------ #
+    def fit(self, train_batches: Iterable,
+            eval_batches: Optional[Callable] = None,
+            hooks: Optional[List[Hook]] = None) -> List[dict]:
+        """Run up to ``total_steps`` global steps; returns the per-step
+        history (one record per step, eval/checkpoint keys merged in by
+        the corresponding hooks).
+
+        train_batches: iterable of batch dicts. eval_batches: callable
+        yielding (batch, mask) pairs (see core.distributed_eval), used
+        by the stock ``EvalHook`` when ``tcfg.eval_every`` is set.
+        ``hooks``: explicit hook list; None means ``default_hooks``.
+        """
+        self._hooks = (self.default_hooks(eval_batches)
+                       if hooks is None else list(hooks))
+        # Metrics stay on device in the step records; a hook that needs
+        # true per-step wall times (BenchRecordHook) opts into a per-step
+        # block — otherwise the hot path keeps jax's async dispatch and
+        # only log/eval boundaries force a host sync (as before the
+        # hook redesign).
+        needs_sync = any(getattr(h, "needs_sync", False)
+                         for h in self._hooks)
+        history: List[dict] = []
+        step = self.start_step
+        with self.mesh:
+            for batch in train_batches:
+                if step >= self.tcfg.total_steps:
                     break
                 if self._train_step is None:
                     self._compile_train(batch)
+                t0 = time.perf_counter()
                 self.state, metrics = self._train_step(self.state, batch)
-                if (self.tcfg.log_every
-                        and (step_idx + 1) % self.tcfg.log_every == 0):
-                    m = {k: float(v) for k, v in metrics.items()}
-                    dt = time.time() - t0
-                    print(f"step {step_idx+1}: loss={m['loss']:.4f} "
-                          f"nll={m['nll']:.4f} ({dt:.1f}s)")
-                if (self.tcfg.eval_every and eval_batches is not None
-                        and (step_idx + 1) % self.tcfg.eval_every == 0):
-                    nll, cnt = 0.0, 0.0
-                    for ebatch, mask in eval_batches():
-                        s, c = self._eval_step(
-                            self.state["params"], ebatch, mask
-                        )
-                        nll += float(s)
-                        cnt += float(c)
-                    rec = {"step": step_idx + 1,
-                           "eval_nll": nll / max(cnt, 1.0),
-                           **{k: float(v) for k, v in metrics.items()}}
-                    history.append(rec)
-                    print(f"  eval @ {step_idx+1}: nll={rec['eval_nll']:.4f}")
-                if (self.tcfg.checkpoint_every
-                        and (step_idx + 1) % self.tcfg.checkpoint_every == 0):
-                    d = os.path.join(self.tcfg.checkpoint_dir,
-                                     f"step_{step_idx+1}")
-                    ckpt.save_checkpoint(d, self.state, step=step_idx + 1,
-                                         pspecs=self.state_specs)
+                if needs_sync:
+                    jax.block_until_ready(metrics)
+                self.last_step_s = time.perf_counter() - t0
+                step += 1
+                record = {"step": step, **metrics}
+                history.append(record)
+                self.emit("on_step", step, record)
+            for record in history:  # materialize device scalars -> floats
+                for k, v in record.items():
+                    if hasattr(v, "item"):  # jax/numpy scalar; hooks may
+                        record[k] = float(v)  # have added non-numeric keys
+            self.emit("on_finish", history)
         return history

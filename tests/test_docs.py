@@ -22,7 +22,7 @@ def _blocks(doc):
 
 def test_docs_exist():
     for doc in ("architecture.md", "paper_map.md", "dist.md",
-                "benchmarks.md", "serving.md"):
+                "benchmarks.md", "serving.md", "run.md"):
         path = os.path.join(DOCS, doc)
         assert os.path.exists(path), f"docs/{doc} missing"
         assert os.path.getsize(path) > 500, f"docs/{doc} is a stub"
@@ -58,6 +58,21 @@ def test_serving_md_snippets_execute():
                         f"{type(e).__name__}: {e}\n---\n{src}")
 
 
+def test_run_md_snippets_execute():
+    """The run-API guide's python blocks run verbatim, sequentially
+    (spec building, override grammar, dispatch, hooks), asserts
+    included."""
+    blocks = _blocks("run.md")
+    assert len(blocks) >= 5, "run.md lost its runnable snippets"
+    ns = {}
+    for i, src in enumerate(blocks):
+        try:
+            exec(compile(src, f"docs/run.md[block {i}]", "exec"), ns)
+        except Exception as e:  # noqa: BLE001
+            pytest.fail(f"docs/run.md block {i} failed: "
+                        f"{type(e).__name__}: {e}\n---\n{src}")
+
+
 _BASH_FENCE = re.compile(r"```bash\n(.*?)```", re.DOTALL)
 
 
@@ -78,6 +93,28 @@ def test_serving_md_cli_commands_run():
     for cmd in cmds:
         argv = cmd.split("repro.launch.serve", 1)[1].split()
         assert serve_main(argv) == 0, f"documented CLI failed: {cmd}"
+
+
+@pytest.mark.slow
+def test_run_md_cli_commands_run(monkeypatch):
+    """Every documented `python -m repro run ...` line in a bash fence
+    executes (in-process, argv parsed straight out of the doc; the
+    dryrun examples sit in a text fence because they must own the
+    process)."""
+    from repro.run.cli import main as run_main
+    monkeypatch.chdir(os.path.join(os.path.dirname(__file__), ".."))
+    with open(os.path.join(DOCS, "run.md")) as f:
+        text = f.read()
+    cmds = [
+        line.strip()
+        for block in _BASH_FENCE.findall(text)
+        for line in block.splitlines()
+        if "-m repro run" in line
+    ]
+    assert len(cmds) >= 3, "run.md lost its CLI examples"
+    for cmd in cmds:
+        argv = ["run"] + cmd.split("-m repro run", 1)[1].split()
+        assert run_main(argv) == 0, f"documented CLI failed: {cmd}"
 
 
 def test_paper_map_covers_every_benchmark():

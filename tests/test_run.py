@@ -1,0 +1,494 @@
+"""The unified run API: RunSpec round-trips, the --set override grammar
+(typed coercion + did-you-mean), spec files, shim equivalence with the
+legacy launchers, hook-based Trainer behavior, and checkpoint resume."""
+import dataclasses
+import itertools
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config, list_archs
+from repro.launch.mesh import single_device_mesh
+from repro.run import (
+    RunSpec,
+    ServeSection,
+    SpecError,
+    TrainerSection,
+    apply_assignments,
+    load_spec_file,
+    resolve_config,
+    run_spec,
+)
+from repro.run.cli import main as cli_main
+
+RUNS_DIR = os.path.join(os.path.dirname(__file__), "..", "runs")
+
+
+def _strip_wall_times(out: str) -> str:
+    """Log lines carry wall-clock seconds; equality is modulo timing."""
+    import re
+
+    return re.sub(r"\(\d+\.\d+s\)", "(Xs)", out)
+
+
+# --------------------------------------------------------------------------- #
+# RunSpec round-trips + validation.
+# --------------------------------------------------------------------------- #
+def test_roundtrip_all_archs():
+    """from_dict(to_dict(spec)) is the identity for every arch, with
+    non-default nested sections and model overrides in play."""
+    for i, arch in enumerate(list_archs()):
+        spec = RunSpec(
+            arch=arch,
+            mode=("train", "serve", "eval", "bench", "dryrun")[i % 5],
+            mesh=("single", "pod", "multipod")[i % 3],
+            seed=i,
+            model={"param_sharding": "wus", "microbatches": 2},
+            trainer=TrainerSection(total_steps=10 + i,
+                                   metrics=("grad_norm",)),
+            serve=ServeSection(max_batch=2 + i, temperature=0.5),
+        )
+        again = RunSpec.from_dict(spec.to_dict())
+        assert again == spec, arch
+        # and the dict itself survives a JSON round-trip (spec files)
+        assert RunSpec.from_dict(json.loads(json.dumps(spec.to_dict()))) \
+            == spec, arch
+
+
+def test_roundtrip_preserves_json_types():
+    d = RunSpec(trainer=TrainerSection(metrics=("grad_norm",))).to_dict()
+    assert d["trainer"]["metrics"] == ["grad_norm"]  # tuple -> list
+    assert isinstance(d["reduced"], bool)
+
+
+@pytest.mark.parametrize("bad,fragment", [
+    ({"trianer": {}}, "did you mean 'trainer'"),
+    ({"trainer": {"total_stepz": 5}}, "did you mean 'total_steps'"),
+    ({"trainer": {"total_steps": "many"}}, "expected an int"),
+    ({"mode": "trian"}, "did you mean 'train'"),
+    ({"model": {"param_shard": "wus"}}, "did you mean 'param_sharding'"),
+    ({"serve": []}, "must be an object"),
+])
+def test_from_dict_rejects_bad_keys_and_values(bad, fragment):
+    with pytest.raises(SpecError, match=fragment.replace("?", "\\?")):
+        RunSpec.from_dict(bad)
+
+
+# --------------------------------------------------------------------------- #
+# --set override grammar.
+# --------------------------------------------------------------------------- #
+def test_set_grammar_typed_coercion():
+    spec = apply_assignments(RunSpec(), [
+        "trainer.total_steps=50",
+        "serve.max_batch=8",
+        "serve.temperature=0.75",
+        "model.param_sharding=wus",
+        "model.sliding_window=none",
+        "trainer.metrics=grad_norm,param_norm",
+        "reduced=false",
+        "seed=3",
+    ])
+    assert spec.trainer.total_steps == 50
+    assert spec.serve.max_batch == 8
+    assert spec.serve.temperature == 0.75
+    assert spec.model == {"param_sharding": "wus", "sliding_window": None}
+    assert spec.trainer.metrics == ("grad_norm", "param_norm")
+    assert spec.reduced is False and spec.seed == 3
+
+
+@pytest.mark.parametrize("assignment,fragment", [
+    ("trainer.total_steps=abc", "expected an int"),
+    ("trainer.total_steps=true", "expected an int"),
+    ("reduced=maybe", "expected a bool"),
+    ("serve.temperature=hot", "expected a float"),
+    ("trianer.total_steps=5", "did you mean 'trainer'"),
+    ("trainer.total_stepz=5", "did you mean 'total_steps'"),
+    ("model.param_shard=wus", "did you mean 'param_sharding'"),
+    ("model=wus", "concrete model field"),
+    ("trainer=5", "is a section"),
+    ("seed.x=1", "does not exist"),
+    ("no_equals", "--set expects"),
+])
+def test_set_grammar_rejects(assignment, fragment):
+    with pytest.raises(SpecError, match=fragment.replace("?", "\\?")):
+        apply_assignments(RunSpec(), [assignment])
+
+
+def test_trainer_metrics_validated_at_spec_build_time():
+    """A typo'd metric name fails in the grammar, not at first compile;
+    TRAIN_METRICS must not drift from what the train step supports."""
+    from repro.run.spec import TRAIN_METRICS
+    from repro.train.steps import EXTRA_METRICS
+
+    assert tuple(TRAIN_METRICS) == tuple(EXTRA_METRICS)
+    with pytest.raises(SpecError, match="did you mean 'grad_norm'"):
+        apply_assignments(RunSpec(), ["trainer.metrics=grad_nrm"])
+
+
+def test_set_grammar_strips_list_whitespace():
+    spec = apply_assignments(RunSpec(), [
+        "trainer.metrics=grad_norm, param_norm",
+        "bench.only= gradsum_2d ,roofline",
+    ])
+    assert spec.trainer.metrics == ("grad_norm", "param_norm")
+    assert spec.bench.only == ("gradsum_2d", "roofline")
+
+
+def test_dryrun_spec_normalizes_single_mesh_to_pod():
+    """The dry-run only exists on production meshes; the recorded spec
+    must say which one actually ran."""
+    assert RunSpec(mode="dryrun").mesh == "pod"
+    assert RunSpec(mode="dryrun", mesh="multipod").mesh == "multipod"
+    assert RunSpec(mode="dryrun").to_dict()["mesh"] == "pod"
+
+
+def test_model_overrides_apply_after_reduced():
+    """reduced() forces replicated; a spec override must win over it."""
+    spec = apply_assignments(
+        RunSpec(arch="gemma-7b"), ["model.param_sharding=wus"])
+    cfg = resolve_config(spec)
+    assert cfg.name == "gemma-7b-smoke"
+    assert cfg.param_sharding == "wus"
+    # and config invariants still run on the overridden dataclass
+    # (jamba's reduced block pattern has 3 layer kinds; 4 isn't divisible)
+    with pytest.raises(ValueError, match="not divisible"):
+        resolve_config(apply_assignments(
+            RunSpec(arch="jamba-1.5-large-398b"), ["model.n_layers=4"]))
+
+
+def test_model_override_rederives_head_dim():
+    """__post_init__ materializes head_dim; overriding d_model/n_heads
+    must re-derive it rather than carry the stale value — but an
+    explicitly non-derived head_dim must be kept."""
+    base = resolve_config(RunSpec(arch="gemma-7b"))
+    assert base.head_dim == base.d_model // base.n_heads  # derived (smoke)
+    cfg = resolve_config(apply_assignments(
+        RunSpec(arch="gemma-7b"), ["model.n_heads=2"]))
+    assert cfg.head_dim == cfg.d_model // 2
+    cfg = resolve_config(apply_assignments(
+        RunSpec(arch="gemma-7b"), ["model.d_model=128"]))
+    assert cfg.head_dim == 128 // cfg.n_heads
+    # explicit head_dim override wins over re-derivation
+    cfg = resolve_config(apply_assignments(
+        RunSpec(arch="gemma-7b"),
+        ["model.n_heads=2", "model.head_dim=32"]))
+    assert cfg.head_dim == 32
+    # the full (non-reduced) gemma-7b pins head_dim=256 explicitly
+    # (16 heads x 256 != 3072): a head-count override must not clobber it
+    full = resolve_config(apply_assignments(
+        RunSpec(arch="gemma-7b", reduced=False), ["model.n_heads=8"]))
+    assert full.head_dim == get_config("gemma-7b").head_dim
+
+
+def test_model_override_nested_dataclass():
+    spec = apply_assignments(
+        RunSpec(arch="mixtral-8x7b"), ["model.moe.top_k=1"])
+    assert resolve_config(spec).moe.top_k == 1
+    # nested override on an arch without that sub-config fails loudly
+    with pytest.raises(ValueError, match="not enabled"):
+        resolve_config(apply_assignments(
+            RunSpec(arch="gemma-7b"), ["model.moe.top_k=1"]))
+
+
+# --------------------------------------------------------------------------- #
+# Spec files.
+# --------------------------------------------------------------------------- #
+def test_spec_file_json_and_toml_agree(tmp_path):
+    d = {"arch": "rwkv6-3b", "mode": "serve", "scenario": "server",
+         "serve": {"tokens": 4, "temperature": 0.5},
+         "model": {"param_sharding": "replicated"}}
+    jpath = tmp_path / "s.json"
+    jpath.write_text(json.dumps(d))
+    tpath = tmp_path / "s.toml"
+    tpath.write_text(
+        'arch = "rwkv6-3b"  # comment\nmode = "serve"\n'
+        'scenario = "server"\n\n[serve]\ntokens = 4\ntemperature = 0.5\n\n'
+        '[model]\nparam_sharding = "replicated"\n'
+    )
+    assert load_spec_file(str(jpath)) == load_spec_file(str(tpath))
+
+
+def test_spec_file_errors(tmp_path):
+    p = tmp_path / "bad.json"
+    p.write_text('{"trianer": {}}')
+    with pytest.raises(SpecError, match="did you mean 'trainer'"):
+        load_spec_file(str(p))
+    with pytest.raises(SpecError, match="not found"):
+        load_spec_file(str(tmp_path / "missing.json"))
+    y = tmp_path / "s.yaml"
+    y.write_text("arch: gemma-7b")
+    with pytest.raises(SpecError, match="unsupported spec extension"):
+        load_spec_file(str(y))
+
+
+def test_committed_example_specs_load_and_roundtrip():
+    """Every spec under runs/ parses, validates, and round-trips."""
+    names = sorted(os.listdir(RUNS_DIR))
+    assert len(names) >= 3, "runs/ lost its example specs"
+    for name in names:
+        spec = load_spec_file(os.path.join(RUNS_DIR, name))
+        assert RunSpec.from_dict(spec.to_dict()) == spec, name
+        resolve_config(spec)  # arch + model overrides are coherent
+
+
+# --------------------------------------------------------------------------- #
+# Shim equivalence: the legacy launcher and `python -m repro run` are the
+# same run (identical per-step history and stdout for a fixed seed).
+# --------------------------------------------------------------------------- #
+def test_train_shim_equivalent_to_repro_run(capsys):
+    from repro.launch.train import main as train_main
+    from repro.run import dispatch
+
+    assert train_main(["--arch", "rwkv6-3b", "--steps", "3", "--batch",
+                       "4", "--seq", "32"]) == 0
+    shim_out = capsys.readouterr().out
+    shim_hist = dispatch.LAST_RESULT["history"]
+
+    rc = cli_main(["run", "--arch", "rwkv6-3b", "--mode", "train",
+                   "--set", "trainer.total_steps=3",
+                   "--set", "trainer.batch=4", "--set", "trainer.seq=32",
+                   "--set", "trainer.log_every=1"])
+    assert rc == 0
+    cli_out = capsys.readouterr().out
+    cli_hist = dispatch.LAST_RESULT["history"]
+
+    assert _strip_wall_times(cli_out) == _strip_wall_times(shim_out)
+    assert cli_hist == shim_hist
+    assert [r["step"] for r in cli_hist] == [1, 2, 3]
+
+
+def test_spec_file_run_equals_flag_run(tmp_path, capsys):
+    from repro.run import dispatch
+
+    spec_path = tmp_path / "train.json"
+    spec_path.write_text(json.dumps({
+        "arch": "rwkv6-3b", "mode": "train",
+        "trainer": {"total_steps": 2, "batch": 4, "seq": 32,
+                    "log_every": 1},
+    }))
+    assert cli_main(["run", "--spec", str(spec_path)]) == 0
+    out_a = capsys.readouterr().out
+    hist_a = dispatch.LAST_RESULT["history"]
+    assert cli_main(["run", "--spec", str(spec_path),
+                     "--set", "trainer.total_steps=2"]) == 0
+    out_b = capsys.readouterr().out
+    assert _strip_wall_times(out_a) == _strip_wall_times(out_b)
+    assert hist_a == dispatch.LAST_RESULT["history"]
+
+
+# --------------------------------------------------------------------------- #
+# Hook-based Trainer: per-step history, logger routing, bench capture.
+# --------------------------------------------------------------------------- #
+def _tiny_trainer(arch="rwkv6-3b", **tcfg_kw):
+    from repro.data.pipeline import synthetic_lm_batches
+    from repro.train import Trainer, TrainerConfig
+
+    cfg = get_config(arch).reduced()
+    tcfg = TrainerConfig(**{"total_steps": 3, "log_every": 0, **tcfg_kw})
+    tr = Trainer(cfg, single_device_mesh(), tcfg)
+    batches = synthetic_lm_batches(cfg, batch=4, seq=32,
+                                   steps=tcfg.total_steps)
+    return tr, batches
+
+
+def test_fit_returns_per_step_history_without_eval():
+    """eval_every=0 used to mean an empty history; now every step
+    reports, so callers can read final loss programmatically."""
+    tr, batches = _tiny_trainer()
+    hist = tr.fit(batches)
+    assert [r["step"] for r in hist] == [1, 2, 3]
+    assert all(np.isfinite(r["loss"]) and np.isfinite(r["nll"])
+               for r in hist)
+
+
+def test_metrics_logger_is_the_console_sink(capsys):
+    from repro.train.hooks import MetricsLogger
+
+    tr, batches = _tiny_trainer(log_every=2)
+    tr.fit(batches)
+    out = capsys.readouterr().out
+    assert "step 2: loss=" in out and "step 3" not in out
+
+    # routing through a custom sink produces no stdout at all
+    lines = []
+    tr2, batches2 = _tiny_trainer()
+    tr2.fit(batches2, hooks=[MetricsLogger(log_every=1,
+                                           sink=lines.append)])
+    assert capsys.readouterr().out == ""
+    assert len(lines) == 3 and lines[0].startswith("step 1: loss=")
+
+
+def test_extra_metrics_grad_norm():
+    tr, batches = _tiny_trainer(metrics=("grad_norm",))
+    hist = tr.fit(batches)
+    assert all(r["grad_norm"] > 0 for r in hist)
+
+
+def test_unknown_extra_metric_rejected():
+    from repro.train.steps import make_optimizer, make_train_step
+
+    cfg = get_config("rwkv6-3b").reduced()
+    with pytest.raises(ValueError, match="unknown extra metric"):
+        make_train_step(cfg, make_optimizer(cfg), extra_metrics=("lr",))
+
+
+def test_bench_record_hook_emits_valid_artifact(tmp_path):
+    from repro.bench import schema
+    from repro.bench.compare import main as compare_main
+    from repro.train.hooks import BenchRecordHook, MetricsLogger
+
+    out = str(tmp_path / "BENCH_train.json")
+    tr, batches = _tiny_trainer()
+    tr.fit(batches, hooks=[MetricsLogger(0),
+                           BenchRecordHook(out, tag="t")])
+    artifact = schema.load(out)  # raises on schema violations
+    entry = artifact["benchmarks"]["train_run"]
+    assert entry["status"] == "ok"
+    rec = entry["records"][0]
+    assert rec["wall_us"]["median_us"] > 0
+    assert np.isfinite(rec["derived"]["final_loss"])
+    # and the cross-PR comparison tool accepts it
+    assert compare_main([out, out, "--threshold", "1.15"]) == 0
+
+
+def test_custom_hook_may_add_non_numeric_record_keys():
+    """The Hook docs invite enriching the step record; non-numeric keys
+    must survive fit's device-scalar materialization."""
+    from repro.train.hooks import Hook
+
+    class Tagger(Hook):
+        def on_step(self, trainer, step, record):
+            record["phase"] = "warmup" if step == 1 else "steady"
+
+    tr, batches = _tiny_trainer(total_steps=2)
+    hist = tr.fit(batches, hooks=[Tagger()])
+    assert [r["phase"] for r in hist] == ["warmup", "steady"]
+    assert all(isinstance(r["loss"], float) for r in hist)
+
+
+def test_custom_hook_sees_eval_and_checkpoint_events(tmp_path):
+    from repro.data.pipeline import synthetic_eval_set
+    from repro.train.hooks import Hook
+
+    events = []
+
+    class Recorder(Hook):
+        def on_step(self, trainer, step, record):
+            events.append(("step", step))
+
+        def on_eval(self, trainer, step, record):
+            events.append(("eval", step, round(record["eval_nll"], 4)))
+
+        def on_checkpoint(self, trainer, step, path):
+            events.append(("ckpt", step, os.path.basename(path)))
+
+    tr, batches = _tiny_trainer(
+        total_steps=2, eval_every=2, checkpoint_every=2,
+        checkpoint_dir=str(tmp_path))
+    eval_fn = synthetic_eval_set(tr.cfg, batch=4, seq=32)
+    hooks = [Recorder()] + tr.default_hooks(eval_fn)
+    hist = tr.fit(batches, eval_fn, hooks=hooks)
+    kinds = [e[0] for e in events]
+    assert kinds == ["step", "step", "eval", "ckpt"]
+    assert events[3][2] == "step_2"
+    assert "eval_nll" in hist[-1]
+
+
+# --------------------------------------------------------------------------- #
+# Resume (global step semantics).
+# --------------------------------------------------------------------------- #
+@pytest.mark.slow
+def test_resume_is_bit_exact_with_uninterrupted_run(tmp_path):
+    """checkpoint@2 + resume to 4 == straight 4-step run, bit for bit
+    (same LR schedule, same data stream position, same opt moments)."""
+    import jax
+
+    from repro.data.pipeline import synthetic_lm_batches
+    from repro.train import Trainer, TrainerConfig
+
+    cfg = get_config("rwkv6-3b").reduced()
+    mk = lambda: synthetic_lm_batches(cfg, batch=4, seq=32, steps=4)
+
+    full = Trainer(cfg, single_device_mesh(),
+                   TrainerConfig(total_steps=4, log_every=0,
+                                 checkpoint_every=2,
+                                 checkpoint_dir=str(tmp_path)))
+    hist_full = full.fit(mk())
+
+    resumed = Trainer(cfg, single_device_mesh(),
+                      TrainerConfig(total_steps=4, log_every=0))
+    start = resumed.resume(os.path.join(str(tmp_path), "step_2"))
+    assert start == 2
+    hist_tail = resumed.fit(itertools.islice(mk(), start, None))
+
+    assert [r["step"] for r in hist_tail] == [3, 4]
+    assert hist_tail[-1]["loss"] == hist_full[-1]["loss"]
+    for a, b in zip(jax.tree_util.tree_leaves(full.state),
+                    jax.tree_util.tree_leaves(resumed.state)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_resume_picks_latest_step_in_run_dir(tmp_path):
+    from repro.train import Trainer, TrainerConfig
+
+    cfg = get_config("rwkv6-3b").reduced()
+    tr, batches = _tiny_trainer(total_steps=2, checkpoint_every=1,
+                                checkpoint_dir=str(tmp_path))
+    tr.fit(batches)
+    fresh = Trainer(cfg, single_device_mesh(),
+                    TrainerConfig(total_steps=2, log_every=0))
+    assert fresh.resume(str(tmp_path)) == 2
+    with pytest.raises(ValueError, match="no step"):
+        fresh.resume(str(tmp_path / "nothing_here"))
+
+
+# --------------------------------------------------------------------------- #
+# Dispatcher modes beyond train.
+# --------------------------------------------------------------------------- #
+def test_eval_mode_reports_nll(capsys):
+    result = run_spec(RunSpec(
+        arch="rwkv6-3b", mode="eval",
+        trainer=TrainerSection(batch=4, seq=32),
+    ))
+    assert result["exit_code"] == 0
+    assert np.isfinite(result["eval"]["eval_nll"])
+    assert "eval rwkv6-3b-smoke: nll=" in capsys.readouterr().out
+
+
+def test_bench_mode_emits_schema_valid_artifact(tmp_path):
+    from repro.bench import schema
+
+    out = str(tmp_path / "BENCH_x.json")
+    result = run_spec(RunSpec(mode="bench", bench=dataclasses.replace(
+        RunSpec().bench, smoke=True, only=("gradsum_2d",), out=out,
+        quiet=True)))
+    assert result["exit_code"] == 0
+    artifact = schema.load(out)
+    assert artifact["benchmarks"]["gradsum_2d"]["status"] == "ok"
+
+
+def test_bench_mode_unknown_name_did_you_mean():
+    with pytest.raises(SystemExit, match="gradsum_2d"):
+        run_spec(RunSpec(mode="bench", bench=dataclasses.replace(
+            RunSpec().bench, only=("gradsum2d",), quiet=True)))
+
+
+@pytest.mark.slow
+def test_serve_mode_via_dispatcher(capsys):
+    result = run_spec(RunSpec(
+        arch="rwkv6-3b", mode="serve", scenario="offline",
+        serve=ServeSection(tokens=4, batch=2, prompt_len=8, warmup=False),
+    ))
+    assert result["exit_code"] == 0
+    report = result["report"]
+    assert report.tokens_generated == 8
+    assert "rwkv6-3b [offline" in capsys.readouterr().out
+
+
+def test_cli_rejects_unknown_command_and_bad_set(capsys):
+    assert cli_main(["serve"]) == 2
+    assert cli_main(["run", "--set", "trainer.total_stepz=5"]) == 2
+    err = capsys.readouterr().err
+    assert "did you mean 'total_steps'" in err
