@@ -8,6 +8,11 @@ record is the per-decode-step wall time; derived keys carry tokens/sec,
 p50/p99 per-token latency and mean batch occupancy from the engine's
 own step trace.
 
+The ``*_paged_*`` rows run the same ragged workloads (every request a
+different prompt length) through the paged-KV engine — chunked prefill
+through one compiled program, pool sized below slab parity — and add
+page-pool utilization (mean/peak) and the preemption count.
+
     PYTHONPATH=src python -m repro.bench.run --only serve_decode [--smoke]
 """
 import jax
@@ -18,10 +23,12 @@ from repro.dist import Rules, split_tree, use_rules
 from repro.launch.mesh import single_device_mesh
 from repro.launch.serve import build_requests
 from repro.serve import Engine, ServeConfig, run_offline, run_server
+from repro.serve.engine import synthetic_requests
 from repro.train.steps import ModelAPI
 
 DERIVED = ("tokens_per_s", "p50_token_ms", "p99_token_ms", "ttft_p50_ms",
-           "mean_batch_occupancy", "requests")
+           "mean_batch_occupancy", "requests", "pool_util_mean",
+           "pool_util_peak", "preemptions")
 
 
 def _decode_timing(report):
@@ -51,7 +58,12 @@ def run(ctx):
     rules = Rules(mesh, "tp2d")
     scfg = ServeConfig(max_batch=min(4, n_req),
                        max_len=prompt_len + tokens,
-                       prefill_len=prompt_len)
+                       prefill_len=prompt_len, kv_layout="slab")
+    # The paged rows pin a ragged spread (every request a different
+    # prompt length) so they exercise per-row page occupancy; the slab
+    # rows keep the original seeded workload so the committed BENCH_*
+    # trajectory stays comparable across PRs.
+    spread = tuple(max(1, prompt_len - 3 * i) for i in range(n_req))
 
     with mesh, use_rules(rules):
         engine = Engine(cfg, params, rules, scfg)
@@ -80,6 +92,39 @@ def run(ctx):
             p99_token_ms=s["p99_token_ms"],
             ttft_p50_ms=s["ttft_p50_ms"],
             mean_batch_occupancy=s["mean_batch_occupancy"],
+            requests=s["requests"],
+        )
+
+    # ---- paged KV + chunked prefill (one compiled program) ------------- #
+    pcfg = ServeConfig(
+        max_batch=min(4, n_req), max_len=prompt_len + tokens,
+        kv_layout="paged", page_size=4, prefill_chunk=4,
+        # sized below slab parity: admission runs by free-page budget
+        n_pages=min(4, n_req) * ((prompt_len + tokens + 3) // 4) * 3 // 4,
+    )
+    with mesh, use_rules(rules):
+        paged = Engine(cfg, params, rules, pcfg)
+        run_offline(paged, build_requests(  # compile the chunk program
+            cfg, n=2, tokens=2, prompt_len=prompt_len,
+            scenario="offline", seed=1))
+    for scenario, driver in (("offline", run_offline),
+                             ("server", run_server)):
+        reqs = synthetic_requests(cfg, n=n_req, tokens=tokens,
+                                  prompt_len=prompt_len, scenario=scenario,
+                                  seed=0, prompt_lens=spread)
+        with mesh, use_rules(rules):
+            report = driver(paged, reqs)
+        s = report.summary()
+        ctx.record(
+            f"serve/{cfg.name}_paged_{scenario}",
+            _decode_timing(report),
+            tokens_per_s=s["tokens_per_s"],
+            p50_token_ms=s["p50_token_ms"],
+            p99_token_ms=s["p99_token_ms"],
+            ttft_p50_ms=s["ttft_p50_ms"],
+            pool_util_mean=s["pool_util_mean"],
+            pool_util_peak=s["pool_util_peak"],
+            preemptions=report.preemptions,
             requests=s["requests"],
         )
 

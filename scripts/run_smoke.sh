@@ -24,6 +24,10 @@ echo "== run-smoke: serve (rwkv6-3b, ssm exact-length prefill) =="
 python -m repro run --arch rwkv6-3b --mode serve \
     --set serve.tokens=4 --set serve.batch=2 --set serve.prompt_len=8
 
+echo "== run-smoke: serve paged (gemma-7b, chunked prefill + page pool) =="
+python -m repro run --spec runs/serve_paged.toml \
+    --set serve.tokens=4 --set serve.batch=3
+
 echo "== run-smoke: bench (registry subset, schema-valid artifact) =="
 python -m repro run --mode bench --set bench.smoke=true \
     --set bench.only=gradsum_2d --set bench.out=/tmp/BENCH_run_smoke.json

@@ -17,12 +17,17 @@ Regressions (any one exits 1):
 
 Sub-``--min-us`` medians are never compared: at CPU-noise timescales a
 ratio is meaningless.
+
+When ``$GITHUB_STEP_SUMMARY`` is set (CI), the per-row delta table is
+also appended there as markdown, so a regression shows up in the job
+summary instead of being buried in the log.
 """
 from __future__ import annotations
 
 import argparse
+import os
 import sys
-from typing import Dict, Tuple
+from typing import Dict, List, Tuple
 
 from repro.bench import schema
 
@@ -35,10 +40,19 @@ def _records(artifact) -> Dict[Tuple[str, str], dict]:
     return out
 
 
-def compare(old, new, *, threshold: float = 1.15, check_wall: bool = True,
-            allow_missing: bool = False, min_us: float = 50.0):
-    """Return (report_lines, regressions)."""
-    lines, regressions = [], []
+def diff_rows(old, new, *, threshold: float = 1.15, check_wall: bool = True,
+              allow_missing: bool = False, min_us: float = 50.0
+              ) -> Tuple[List[dict], List[str]]:
+    """Structured per-row diff.
+
+    Returns (rows, regressions). Each row: ``{"name", "old_us",
+    "new_us", "ratio", "status"}`` with status one of ok / improved /
+    regression / noise-floor / wall-skipped / derived-only / new /
+    missing / lost-timing. Benchmark-level failures (an ``ok`` benchmark
+    now ``failed``) only land in ``regressions``.
+    """
+    rows: List[dict] = []
+    regressions: List[str] = []
     old_recs, new_recs = _records(old), _records(new)
 
     for bname, entry in old["benchmarks"].items():
@@ -53,49 +67,102 @@ def compare(old, new, *, threshold: float = 1.15, check_wall: bool = True,
 
     for key, old_rec in sorted(old_recs.items()):
         bname, rname = key
+        name = f"{bname}:{rname}"
         new_rec = new_recs.get(key)
+        row = {"name": name, "old_us": None, "new_us": None, "ratio": None}
         if new_rec is None:
             if not allow_missing:
-                regressions.append(f"record {bname}:{rname} disappeared")
+                regressions.append(f"record {name} disappeared")
+                rows.append({**row, "status": "missing"})
             continue
         ow, nw = old_rec.get("wall_us"), new_rec.get("wall_us")
         if ow is not None and nw is None:
             # a record that used to carry a timing lost it — that's a
             # measurement-coverage regression, wall flags notwithstanding
             if not allow_missing:
-                regressions.append(
-                    f"record {bname}:{rname} lost its wall_us timing"
-                )
+                regressions.append(f"record {name} lost its wall_us timing")
+                rows.append({**row, "old_us": ow["median_us"],
+                             "status": "lost-timing"})
             continue
         if ow is None:
-            lines.append(f"  {bname}:{rname}  (derived-only)")
+            rows.append({**row, "status": "derived-only"})
             continue
         o, n = ow["median_us"], nw["median_us"]
+        row.update(old_us=o, new_us=n)
         if not check_wall:
-            lines.append(f"  {bname}:{rname}  {o:.1f}us -> {n:.1f}us "
-                         f"(wall not compared)")
+            rows.append({**row, "status": "wall-skipped"})
             continue
         if o < min_us and n < min_us:
-            lines.append(f"  {bname}:{rname}  {o:.1f}us -> {n:.1f}us "
-                         f"(below {min_us}us noise floor)")
+            rows.append({**row, "status": "noise-floor"})
             continue
         ratio = n / max(o, 1e-9)
-        mark = ""
+        row["ratio"] = ratio
         if ratio > threshold:
-            mark = f"  REGRESSION (> {threshold:.2f}x)"
             regressions.append(
-                f"{bname}:{rname} slowed {ratio:.2f}x "
-                f"({o:.1f}us -> {n:.1f}us)"
-            )
+                f"{name} slowed {ratio:.2f}x ({o:.1f}us -> {n:.1f}us)")
+            rows.append({**row, "status": "regression"})
         elif ratio < 1.0 / threshold:
-            mark = "  improved"
-        lines.append(f"  {bname}:{rname}  {o:.1f}us -> {n:.1f}us "
-                     f"({ratio:.2f}x){mark}")
+            rows.append({**row, "status": "improved"})
+        else:
+            rows.append({**row, "status": "ok"})
 
-    new_only = sorted(set(new_recs) - set(old_recs))
-    for bname, rname in new_only:
-        lines.append(f"  {bname}:{rname}  (new)")
-    return lines, regressions
+    for bname, rname in sorted(set(new_recs) - set(old_recs)):
+        rows.append({"name": f"{bname}:{rname}", "old_us": None,
+                     "new_us": None, "ratio": None, "status": "new"})
+    return rows, regressions
+
+
+def _render_line(row) -> str:
+    name, st = row["name"], row["status"]
+    if st in ("derived-only", "new", "missing", "lost-timing"):
+        return f"  {name}  ({st})"
+    o, n = row["old_us"], row["new_us"]
+    if st == "wall-skipped":
+        return f"  {name}  {o:.1f}us -> {n:.1f}us (wall not compared)"
+    if st == "noise-floor":
+        return f"  {name}  {o:.1f}us -> {n:.1f}us (below noise floor)"
+    mark = {"regression": "  REGRESSION", "improved": "  improved"}.get(st, "")
+    return f"  {name}  {o:.1f}us -> {n:.1f}us ({row['ratio']:.2f}x){mark}"
+
+
+def compare(old, new, *, threshold: float = 1.15, check_wall: bool = True,
+            allow_missing: bool = False, min_us: float = 50.0):
+    """Return (report_lines, regressions)."""
+    rows, regressions = diff_rows(
+        old, new, threshold=threshold, check_wall=check_wall,
+        allow_missing=allow_missing, min_us=min_us,
+    )
+    return [_render_line(r) for r in rows], regressions
+
+
+_STATUS_MARK = {
+    "ok": "✅", "improved": "✅ improved", "regression": "❌ regression",
+    "noise-floor": "〰️ noise floor", "wall-skipped": "➖ not compared",
+    "derived-only": "➖ derived only", "new": "🆕 new",
+    "missing": "❌ missing", "lost-timing": "❌ lost timing",
+}
+
+
+def markdown_table(rows: List[dict], regressions: List[str], *,
+                   old_name: str, new_name: str) -> str:
+    """Per-row delta table for a CI job summary ($GITHUB_STEP_SUMMARY)."""
+    out = [f"### Bench compare: `{old_name}` → `{new_name}`", ""]
+    out.append("| record | old (us) | new (us) | ratio | status |")
+    out.append("|---|---:|---:|---:|---|")
+    fmt = lambda v, spec: (spec % v) if v is not None else "—"
+    for r in rows:
+        out.append(
+            f"| `{r['name']}` | {fmt(r['old_us'], '%.1f')} "
+            f"| {fmt(r['new_us'], '%.1f')} | {fmt(r['ratio'], '%.2fx')} "
+            f"| {_STATUS_MARK.get(r['status'], r['status'])} |")
+    out.append("")
+    if regressions:
+        out.append(f"**{len(regressions)} regression(s):**")
+        out.extend(f"- {r}" for r in regressions)
+    else:
+        out.append("**No regressions.**")
+    out.append("")
+    return "\n".join(out)
 
 
 def main(argv=None) -> int:
@@ -116,14 +183,23 @@ def main(argv=None) -> int:
 
     old = schema.load(args.old)
     new = schema.load(args.new)
-    lines, regressions = compare(
+    rows, regressions = diff_rows(
         old, new, threshold=args.threshold, check_wall=not args.no_wall,
         allow_missing=args.allow_missing, min_us=args.min_us,
     )
     print(f"compare {args.old} ({old['tag']}) -> {args.new} "
           f"({new['tag']}):")
-    for ln in lines:
-        print(ln)
+    for row in rows:
+        print(_render_line(row))
+
+    summary_path = os.environ.get("GITHUB_STEP_SUMMARY")
+    if summary_path:
+        with open(summary_path, "a") as f:
+            f.write(markdown_table(
+                rows, regressions,
+                old_name=f"{args.old} ({old['tag']})",
+                new_name=f"{args.new} ({new['tag']})"))
+
     if regressions:
         print(f"\n{len(regressions)} regression(s):", file=sys.stderr)
         for r in regressions:

@@ -187,6 +187,64 @@ def decode_attention(q, k_cache, v_cache, slot_pos, *, pos, window=None,
     return out.reshape(B, 1, H, D).astype(q.dtype)
 
 
+def paged_attention(q, kp, vp, page_table, *, pos, n_valid, window=None,
+                    scale=None, kp_scale=None, vp_scale=None):
+    """Ragged decode attention against a paged KV pool.
+
+    q: (B, C, H, D) — C tokens per row this step (decode rows feed 1,
+    chunked-prefill rows up to C; ``n_valid`` masks the rest).
+    kp/vp: (P, page, K, hd) physical page pool in bf16 or int8; the new
+    tokens' K/V are already scattered into their pages
+    (``layers.paged_cache_insert`` runs before attention).
+    page_table: (B, max_pages) int32 physical page ids (-1 unmapped).
+    pos: (B,) absolute position of each row's first token this step.
+    kp_scale/vp_scale: (P, page, K) dequant scales when the pool is int8
+    (served by the jnp path; the Pallas kernel handles bf16/fp32 pools).
+
+    On TPU (or REPRO_USE_PALLAS=interpret) the Pallas kernel visits only
+    the pages each row occupies; the jnp fallback gathers the mapped
+    pages and masks — O(max_len) per row, correctness-equal.
+    """
+    mode = _pallas_mode()
+    if mode is not None and kp_scale is None:
+        from repro.kernels import paged_attention as pa
+
+        return pa.paged_attention(
+            q, kp, vp, page_table, pos=pos, n_valid=n_valid, window=window,
+            scale=scale, interpret=(mode == "interpret"),
+        )
+    B, C, H, D = q.shape
+    P, page, K, hd = kp.shape
+    G = H // K
+    scale = scale if scale is not None else D ** -0.5
+    npg = page_table.shape[1]
+    pt = jnp.asarray(page_table, jnp.int32)
+    safe = jnp.clip(pt, 0, P - 1)
+    kf = kp[safe].astype(jnp.float32)  # (B, npg, page, K, hd)
+    vf = vp[safe].astype(jnp.float32)
+    if kp_scale is not None:
+        kf = kf * kp_scale[safe][..., None].astype(jnp.float32)
+    if vp_scale is not None:
+        vf = vf * vp_scale[safe][..., None].astype(jnp.float32)
+    kf = kf.reshape(B, npg * page, K, hd)
+    vf = vf.reshape(B, npg * page, K, hd)
+    qf = (q.astype(jnp.float32) * scale).reshape(B, C, K, G, D)
+    logits = jnp.einsum("bckgd,blkd->bckgl", qf, kf)
+    kpos = jnp.arange(npg * page, dtype=jnp.int32)
+    posv = jnp.asarray(pos, jnp.int32).reshape(B)
+    qpos = posv[:, None] + jnp.arange(C, dtype=jnp.int32)[None, :]
+    lim = posv + jnp.asarray(n_valid, jnp.int32).reshape(B)
+    mapped = jnp.repeat(pt >= 0, page, axis=1)  # (B, L)
+    valid = mapped[:, None, :] & (kpos[None, None, :] < lim[:, None, None])
+    valid &= kpos[None, None, :] <= qpos[:, :, None]
+    if window is not None:
+        valid &= kpos[None, None, :] > qpos[:, :, None] - window
+    logits = jnp.where(valid[:, :, None, None, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bckgl,blkd->bckgd", probs, vf)
+    return out.reshape(B, C, H, D).astype(q.dtype)
+
+
 # --------------------------------------------------------------------------- #
 # LSTM cell (GNMT hot spot, C9).
 # --------------------------------------------------------------------------- #

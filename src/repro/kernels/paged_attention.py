@@ -1,0 +1,139 @@
+"""Ragged paged-decode attention Pallas kernel (TPU target).
+
+The serving engine stores KV in fixed-size pages of a shared physical
+pool (``repro.serve.cache.PagePool``); each batch row owns the pages its
+page-table row maps. This kernel runs online-softmax attention for C new
+tokens per row against *only the pages that row actually occupies*:
+
+  * grid ``(B, H, max_pages)`` — the page axis is the sequential minor
+    dimension, so fp32 online-softmax accumulators live in VMEM scratch
+    across it (same structure as ``kernels/flash_attention.py``);
+  * the page table, per-row start positions and per-row valid-token
+    counts are **scalar-prefetched** (``pltpu.PrefetchScalarGridSpec``):
+    the K/V BlockSpec index maps read the page table to DMA the right
+    physical page, the classic paged-attention indirection;
+  * pages past a row's occupancy (``p * page >= pos + n_valid``) and
+    unmapped pages skip their compute via ``pl.when`` — a ragged batch
+    pays for the tokens it holds, not for ``max_len``.
+
+GQA folds the query head onto its KV head in the index maps. The new
+tokens' K/V must already be written into their pages (the model layer
+scatters before attending, see ``layers.paged_cache_insert``). int8
+KV pools are served by the jnp fallback in ``kernels/ops.py``.
+Validated against ``kernels/ref.paged_attention`` in interpret mode on
+CPU (tests/test_kernels.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(pt_ref, pos_ref, nv_ref, q_ref, k_ref, v_ref, o_ref, acc, m, l,
+            *, scale, window, page, n_pages, C):
+    b = pl.program_id(0)
+    p = pl.program_id(2)
+
+    @pl.when(p == 0)
+    def _init():
+        m[...] = jnp.full_like(m, NEG_INF)
+        l[...] = jnp.zeros_like(l)
+        acc[...] = jnp.zeros_like(acc)
+
+    pos = pos_ref[b]
+    lim = pos + nv_ref[b]  # first absolute position past this row's tokens
+    used = jnp.logical_and(pt_ref[b, p] >= 0, p * page < lim)
+
+    @pl.when(used)
+    def _update():
+        qb = q_ref[0, :, 0, :].astype(jnp.float32) * scale  # (C, D)
+        kb = k_ref[0, :, 0, :].astype(jnp.float32)          # (page, D)
+        vb = v_ref[0, :, 0, :].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            qb, kb, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )  # (C, page)
+        rows = jax.lax.broadcasted_iota(jnp.int32, (C, page), 0)
+        cols = jax.lax.broadcasted_iota(jnp.int32, (C, page), 1)
+        qpos = pos + rows
+        kpos = p * page + cols
+        mask = (kpos < lim) & (kpos <= qpos)
+        if window is not None:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        pexp = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l[...] = l[...] * corr + pexp.sum(axis=-1)
+        acc[...] = acc[...] * corr[:, None] + jax.lax.dot_general(
+            pexp, vb, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        m[...] = m_new
+
+    @pl.when(p == n_pages - 1)
+    def _finish():
+        o_ref[0, :, 0, :] = (
+            acc[...] / jnp.maximum(l[...], 1e-30)[:, None]
+        ).astype(o_ref.dtype)
+
+
+def paged_attention(q, kp, vp, page_table, *, pos, n_valid, window=None,
+                    scale=None, interpret=False):
+    """q: (B, C, H, D); kp/vp: (P, page, K, hd) with H % K == 0.
+
+    page_table: (B, max_pages) int32 physical page ids (-1 unmapped);
+    pos/n_valid: (B,) int32. Returns (B, C, H, D) in q.dtype.
+    """
+    B, C, H, D = q.shape
+    P, page, K, hd = kp.shape
+    if hd != D:
+        raise ValueError(f"head_dim mismatch: q {D} vs pool {hd}")
+    G = H // K
+    n_pages = page_table.shape[1]
+    scale = scale if scale is not None else D ** -0.5
+
+    pt = jnp.asarray(page_table, jnp.int32)
+    posv = jnp.asarray(pos, jnp.int32).reshape(B)
+    nv = jnp.asarray(n_valid, jnp.int32).reshape(B)
+    # Unmapped pages DMA page 0 (skipped by pl.when); keep ids in range.
+    pt_safe = jnp.clip(pt, -1, P - 1)
+
+    def kv_map(b, h, p, pt_ref, pos_ref, nv_ref):
+        return (jnp.maximum(pt_ref[b, p], 0), 0, h // G, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(B, H, n_pages),
+        in_specs=[
+            pl.BlockSpec((1, C, 1, D),
+                         lambda b, h, p, *refs: (b, 0, h, 0)),
+            pl.BlockSpec((1, page, 1, hd), kv_map),
+            pl.BlockSpec((1, page, 1, hd), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, C, 1, D),
+                               lambda b, h, p, *refs: (b, 0, h, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((C, D), jnp.float32),
+            pltpu.VMEM((C,), jnp.float32),
+            pltpu.VMEM((C,), jnp.float32),
+        ],
+    )
+    kernel = functools.partial(
+        _kernel, scale=scale, window=window, page=page, n_pages=n_pages,
+        C=C,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, C, H, D), q.dtype),
+        interpret=interpret,
+    )(pt_safe, posv, nv, q, kp, vp)

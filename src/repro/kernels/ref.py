@@ -42,6 +42,48 @@ def attention(q, k, v, *, causal=True, window=None, q_offset=0, k_offset=0,
     return out.reshape(B, Sq, H, D).astype(q.dtype)
 
 
+def paged_attention(q, kp, vp, page_table, *, pos, n_valid, window=None,
+                    scale=None):
+    """Naive paged-decode attention oracle.
+
+    q: (B, C, H, D) — C new tokens per row (decode: C=1 valid; chunked
+    prefill: up to C). kp/vp: (P, page, K, hd) physical page pool — the
+    NEW tokens' K/V are assumed already written into their pages.
+    page_table: (B, max_pages) int32 physical page ids, -1 unmapped.
+    pos: (B,) absolute position of each row's first new token.
+    n_valid: (B,) how many of the C tokens are real this step.
+
+    Key at absolute position j is visible to query i (absolute qpos =
+    pos + i) iff its page is mapped, j < pos + n_valid, j <= qpos and
+    (window) j > qpos - window. Rows/queries beyond n_valid produce
+    garbage the caller must ignore. Softmax in fp32.
+    """
+    B, C, H, D = q.shape
+    P, page, K, hd = kp.shape
+    G = H // K
+    scale = scale if scale is not None else D ** -0.5
+    npg = page_table.shape[1]
+    pt = jnp.asarray(page_table, jnp.int32)
+    kg = kp[jnp.clip(pt, 0, P - 1)].astype(jnp.float32)  # (B,npg,page,K,hd)
+    vg = vp[jnp.clip(pt, 0, P - 1)].astype(jnp.float32)
+    kg = kg.reshape(B, npg * page, K, hd)
+    vg = vg.reshape(B, npg * page, K, hd)
+    qf = (q.astype(jnp.float32) * scale).reshape(B, C, K, G, D)
+    logits = jnp.einsum("bckgd,blkd->bckgl", qf, kg)  # (B,C,K,G,L)
+    kpos = jnp.arange(npg * page, dtype=jnp.int32)
+    qpos = jnp.asarray(pos, jnp.int32)[:, None] + jnp.arange(C)[None, :]
+    mapped = jnp.repeat(pt >= 0, page, axis=1)  # (B, L)
+    lim = (jnp.asarray(pos, jnp.int32) + jnp.asarray(n_valid, jnp.int32))
+    valid = mapped[:, None, :] & (kpos[None, None, :] < lim[:, None, None])
+    valid &= kpos[None, None, :] <= qpos[:, :, None]
+    if window is not None:
+        valid &= kpos[None, None, :] > qpos[:, :, None] - window
+    logits = jnp.where(valid[:, :, None, None, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bckgl,blkd->bckgd", probs, vg)
+    return out.reshape(B, C, H, D).astype(q.dtype)
+
+
 def lstm_cell(x_proj, h_prev, c_prev, w_h, b):
     """Fused LSTM cell oracle (GNMT C9: input projection pre-hoisted).
 

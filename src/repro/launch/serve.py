@@ -54,6 +54,16 @@ def main(argv=None):
                          "latency then include XLA compile time")
     ap.add_argument("--serve-mode", default=None,
                     choices=[None, "tp2d", "fsdp", "wus", "replicated"])
+    ap.add_argument("--kv-layout", default="auto",
+                    choices=["auto", "slab", "paged"],
+                    help="KV memory layout: paged pool (attention-only "
+                         "stacks) or dense slot slab; auto picks per arch")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="paged: tokens per KV page")
+    ap.add_argument("--prefill-chunk", type=int, default=8,
+                    help="paged: prompt tokens fed per chunk step")
+    ap.add_argument("--n-pages", type=int, default=None,
+                    help="paged: pool size in pages (default: slab parity)")
     args = ap.parse_args(argv)
 
     from repro.run import RunSpec, ServeSection
@@ -72,6 +82,10 @@ def main(argv=None):
             temperature=args.temperature,
             serve_mode=args.serve_mode or "",
             warmup=not args.no_warmup,
+            kv_layout=args.kv_layout,
+            page_size=args.page_size,
+            prefill_chunk=args.prefill_chunk,
+            n_pages=args.n_pages,
         ),
     )
     return run_spec(spec)["exit_code"]

@@ -188,6 +188,80 @@ def init_cache(cfg: ModelConfig, B: int, seq_len: int, window=None):
     return {"self": self_c, "cross": cross_c}
 
 
+def init_paged_cache(cfg: ModelConfig, B: int, n_pages: int, page: int):
+    """Paged decoder self-attn pools + dense per-slot cross caches.
+
+    Self-attention KV pages like ``lm.init_paged_cache``; cross-attention
+    K/V is computed once per request from the encoder output
+    (``encode_cross``) and written into its slot of a dense
+    ``(n_layers, B, enc_source_len, ...)`` slab — it never grows, so
+    paging buys nothing there.
+    """
+    self_c = jax.tree_util.tree_map(
+        lambda a: jnp.broadcast_to(a, (cfg.n_layers,) + a.shape),
+        L.init_paged_kv_cache(cfg, n_pages, page),
+    )
+    cross_c = jax.tree_util.tree_map(
+        lambda a: jnp.broadcast_to(a, (cfg.n_layers,) + a.shape),
+        L.init_kv_cache(cfg, B, cfg.enc_source_len),
+    )
+    return {"self": self_c, "cross": cross_c}
+
+
+def encode_cross(params, cfg: ModelConfig, frames):
+    """Run the encoder and project per-layer cross K/V for one request.
+
+    frames: (B, T, d_model). Returns the cross-cache tree
+    (n_layers, B, enc_source_len, ...) the chunk program reads — the
+    only encoder work a request ever needs, done once at admission.
+    """
+    vals = split_tree(params)[0] if _is_tagged_tree(params) else params
+    enc_out = encode(vals, cfg, frames)
+
+    def block_fn(carry, bp):
+        k = L._qkv(bp["cross_attn"], enc_out, cfg, "k")
+        v = L._qkv(bp["cross_attn"], enc_out, cfg, "v")
+        return carry, L.cache_from_prefill(cfg, k, v, cfg.enc_source_len)
+
+    _, cross = jax.lax.scan(
+        block_fn, jnp.zeros((), jnp.float32), vals["dec_blocks"])
+    return cross
+
+
+def decode_chunk(params, cfg: ModelConfig, tokens, cache, page_table, pos,
+                 n_valid, *, window=None):
+    """C decoder tokens per row against paged self-attn KV + static cross
+    caches (see ``lm.decode_chunk`` for the batch contract)."""
+    vals = split_tree(params)[0] if _is_tagged_tree(params) else params
+    dt = jnp.dtype(cfg.dtype)
+    B, C = tokens.shape
+    positions = (jnp.asarray(pos, jnp.int32).reshape(B, 1)
+                 + jnp.arange(C, dtype=jnp.int32)[None, :])
+    x = jnp.take(vals["embed"], tokens, axis=0).astype(dt)
+    x = x + jnp.take(sinusoid_table(cfg, dt), positions, axis=0)
+
+    def block_fn(x, binp):
+        bp, cs, cc = binp
+        h = L.apply_norm(bp["norm1"], x, cfg)
+        y, ncs = L.attention_decode_paged(
+            bp["self_attn"], h, cfg, cs, page_table, pos, n_valid,
+            window=window)
+        x = x + y
+        h = L.apply_norm(bp["norm_x"], x, cfg)
+        x = x + L.attention_cross_chunk(bp["cross_attn"], h, cfg, cc)
+        h = L.apply_norm(bp["norm2"], x, cfg)
+        x = x + L.apply_ffn(bp["ffn"], h, cfg)
+        return x, ncs
+
+    x, new_self = jax.lax.scan(
+        block_fn, x, (vals["dec_blocks"], cache["self"], cache["cross"])
+    )
+    x = L.apply_norm(vals["dec_norm"], x, cfg)
+    logits = _head(vals, cfg, L.gather_last(
+        x, jnp.asarray(n_valid, jnp.int32) - 1))
+    return logits[:, 0], {"self": new_self, "cross": cache["cross"]}
+
+
 def prefill(params, cfg: ModelConfig, frames, tokens, *, cache_len=None,
             window=None, last_pos=None):
     """Encode + teacher-force the prompt, building decode caches.

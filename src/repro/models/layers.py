@@ -298,6 +298,139 @@ def _cache_insert_per_row(cache, k_new, v_new, posv):
     return out
 
 
+# ---- paged KV cache (serving; see repro.serve.cache.PagePool) ------------- #
+def init_paged_kv_cache(cfg: ModelConfig, n_pages: int, page: int):
+    """Physical page pool for one attention layer.
+
+    ``n_pages`` real pages plus one trailing *trash* page (index
+    ``n_pages``) that absorbs masked writes — ``paged_cache_insert``
+    routes invalid token positions there so the scatter needs no
+    conditional. Validity is carried by the page table (-1 = unmapped)
+    plus per-row lengths, not by a per-slot ``slot_pos`` map.
+    """
+    K, hd = cfg.n_kv_heads, cfg.head_dim
+    int8 = cfg.kv_cache_dtype == "int8"
+    dt = jnp.int8 if int8 else _cdtype(cfg)
+    cache = {
+        "kp": jnp.zeros((n_pages + 1, page, K, hd), dt),
+        "vp": jnp.zeros((n_pages + 1, page, K, hd), dt),
+    }
+    if int8:
+        cache["kp_scale"] = jnp.zeros((n_pages + 1, page, K), jnp.float32)
+        cache["vp_scale"] = jnp.zeros((n_pages + 1, page, K), jnp.float32)
+    return cache
+
+
+def paged_cache_insert(cache, k_new, v_new, page_table, pos, n_valid):
+    """Scatter C new tokens' K/V into their rows' pages.
+
+    k_new/v_new: (B, C, K, hd). page_table: (B, max_pages) int32 physical
+    page ids (-1 unmapped). pos: (B,) absolute position of each row's
+    first token this step; token i of row b lands at logical position
+    ``pos[b] + i``, i.e. page ``(pos+i) // page``, offset ``(pos+i) %
+    page`` within the row's mapped physical page. Tokens at i >=
+    n_valid[b] (and any position whose page is unmapped) are routed to
+    the trash page. The engine guarantees every valid position's page is
+    mapped before the step runs.
+    """
+    P1, page = cache["kp"].shape[:2]
+    B, C, K, hd = k_new.shape
+    npg = page_table.shape[1]
+    logical = (jnp.asarray(pos, jnp.int32).reshape(B, 1)
+               + jnp.arange(C, dtype=jnp.int32)[None, :])      # (B, C)
+    pg, off = logical // page, logical % page
+    phys = jnp.take_along_axis(
+        jnp.asarray(page_table, jnp.int32), jnp.clip(pg, 0, npg - 1), axis=1)
+    ok = (jnp.arange(C, dtype=jnp.int32)[None, :]
+          < jnp.asarray(n_valid, jnp.int32).reshape(B, 1))
+    ok &= (phys >= 0) & (pg < npg)
+    row = jnp.where(ok, phys, P1 - 1)                          # trash page
+    idx = (row * page + off).reshape(B * C)
+
+    def put(pool, new):  # pool (P1, page, ...), new (B, C, ...)
+        flat = pool.reshape((P1 * page,) + pool.shape[2:])
+        flat = flat.at[idx].set(
+            new.reshape((B * C,) + new.shape[2:]).astype(pool.dtype))
+        return flat.reshape(pool.shape)
+
+    out = dict(cache)
+    if "kp_scale" in cache:
+        kq, ks = _quantize_kv(k_new.reshape(B * C, K, hd))
+        vq, vs = _quantize_kv(v_new.reshape(B * C, K, hd))
+        out["kp"] = put(cache["kp"], kq.reshape(B, C, K, hd))
+        out["vp"] = put(cache["vp"], vq.reshape(B, C, K, hd))
+        out["kp_scale"] = put(cache["kp_scale"], ks.reshape(B, C, K))
+        out["vp_scale"] = put(cache["vp_scale"], vs.reshape(B, C, K))
+    else:
+        out["kp"] = put(cache["kp"], k_new)
+        out["vp"] = put(cache["vp"], v_new)
+    return out
+
+
+def attention_decode_paged(params, x, cfg: ModelConfig, cache, page_table,
+                           pos, n_valid, *, window=None):
+    """C-token attention against the paged pool; returns (out, new_cache).
+
+    x: (B, C, d) — the chunk program's mixed batch: decode rows feed one
+    real token, chunked-prefill rows up to C (``n_valid`` masks the
+    rest). The new K/V are scattered into the rows' pages first, then
+    every query attends causally over exactly its row's occupied pages
+    (``ops.paged_attention``). Positions beyond ``n_valid`` produce
+    garbage the caller masks at the logit gather.
+    """
+    B, C, _ = x.shape
+    q = _qkv(params, x, cfg, "q")
+    k_new = _qkv(params, x, cfg, "k")
+    v_new = _qkv(params, x, cfg, "v")
+    if cfg.rope != "none":
+        posm = (jnp.asarray(pos, jnp.int32).reshape(B, 1)
+                + jnp.arange(C, dtype=jnp.int32)[None, :])
+        mr = cfg.rope == "mrope"
+        if mr:
+            posm = jnp.broadcast_to(posm[..., None], (B, C, 3))
+        q = apply_rope(q, posm, theta=cfg.rope_theta, mrope=mr)
+        k_new = apply_rope(k_new, posm, theta=cfg.rope_theta, mrope=mr)
+    new_cache = paged_cache_insert(
+        cache, k_new, v_new, page_table, pos, n_valid)
+    out = ops.paged_attention(
+        q, new_cache["kp"], new_cache["vp"], page_table,
+        pos=pos, n_valid=n_valid, window=window,
+        kp_scale=new_cache.get("kp_scale"),
+        vp_scale=new_cache.get("vp_scale"),
+    )
+    wo = params["wo"][0] if isinstance(params["wo"], tuple) else params["wo"]
+    y = jnp.einsum("bshk,hkd->bsd", out, wo.astype(_cdtype(cfg)))
+    return y, new_cache
+
+
+def attention_cross_chunk(params, x, cfg: ModelConfig, cache):
+    """C-query cross-attention against a static (encoder) KV cache.
+
+    x: (B, C, d); cache: dense {"k","v","slot_pos"} of the encoder K/V
+    (non-causal; slots with ``slot_pos`` -1 masked). The chunk-program
+    counterpart of ``attention_decode`` with ``cross=True``.
+    """
+    B, C, _ = x.shape
+    q = _qkv(params, x, cfg, "q")  # (B, C, H, hd)
+    H, D = q.shape[2], q.shape[3]
+    K = cache["k"].shape[2]
+    G = H // K
+    kf = cache["k"].astype(jnp.float32)
+    vf = cache["v"].astype(jnp.float32)
+    if "k_scale" in cache:
+        kf = kf * cache["k_scale"][..., None].astype(jnp.float32)
+        vf = vf * cache["v_scale"][..., None].astype(jnp.float32)
+    qf = (q.astype(jnp.float32) * D ** -0.5).reshape(B, C, K, G, D)
+    logits = jnp.einsum("bckgd,bskd->bckgs", qf, kf)
+    valid = cache["slot_pos"] >= 0  # (B, S)
+    logits = jnp.where(valid[:, None, None, None, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bckgs,bskd->bckgd", probs, vf).reshape(B, C, H, D)
+    wo = params["wo"][0] if isinstance(params["wo"], tuple) else params["wo"]
+    return jnp.einsum("bshk,hkd->bsd", out.astype(_cdtype(cfg)),
+                      wo.astype(_cdtype(cfg)))
+
+
 def cache_from_prefill(cfg: ModelConfig, k, v, length: int):
     """Build a decode cache from prefill K/V (B,S,K,hd); S <= length."""
     B, S = k.shape[0], k.shape[1]

@@ -316,6 +316,66 @@ def init_cache(cfg: ModelConfig, B: int, seq_len: int, window=None):
     return tuple(entries)
 
 
+def init_paged_cache(cfg: ModelConfig, n_pages: int, page: int):
+    """Paged decode cache: a physical page pool per pattern position,
+    stacked over n_blocks. Attention-only stacks — recurrent mixers
+    carry per-slot state, not KV, and stay on the slab layout."""
+    entries = []
+    for spec in cfg.block_pattern:
+        if spec.mixer != "attn":
+            raise ValueError(
+                f"paged KV cache requires an attention-only stack; "
+                f"{cfg.name} has a {spec.mixer!r} mixer")
+        e = L.init_paged_kv_cache(cfg, n_pages, page)
+        entries.append(
+            jax.tree_util.tree_map(
+                lambda a: jnp.broadcast_to(a, (cfg.n_blocks,) + a.shape), e
+            )
+        )
+    return tuple(entries)
+
+
+def decode_chunk(params, cfg: ModelConfig, tokens, cache, page_table, pos,
+                 n_valid, *, window=None):
+    """C tokens per row against the paged cache — the serving engine's
+    single compiled program (chunked prefill + batched decode mixed).
+
+    tokens: (B, C) int32 — row b feeds ``n_valid[b]`` real tokens
+    starting at absolute position ``pos[b]`` (decode rows feed 1, the
+    rest padding). page_table: (B, max_pages) int32. Returns (logits of
+    each row's last valid token (B, vocab), new_cache).
+    """
+    vals = split_tree(params)[0] if _is_tagged_tree(params) else params
+    x = _embed(vals, cfg, tokens)
+    x = constrain(x, "batch", None, None)
+
+    def block_fn(x, binp):
+        bparams, bcache = binp
+        new_entries = []
+        for j, spec in enumerate(cfg.block_pattern):
+            lp = bparams[j]
+            h = L.apply_norm(lp["norm1"], x, cfg)
+            y, nc = L.attention_decode_paged(
+                lp["mixer"], h, cfg, bcache[j], page_table, pos, n_valid,
+                window=window)
+            new_entries.append(nc)
+            x = x + y
+            if spec.ffn != "none":
+                h = L.apply_norm(lp["norm2"], x, cfg)
+                if spec.ffn == "moe":
+                    y, _ = L.apply_moe(lp["ffn"], h, cfg)
+                else:
+                    y = L.apply_ffn(lp["ffn"], h, cfg)
+                x = x + y
+        return x, tuple(new_entries)
+
+    x, new_cache = jax.lax.scan(block_fn, x, (vals["blocks"], cache))
+    x = L.apply_norm(vals["final_norm"], x, cfg)
+    logits = _head(vals, cfg, L.gather_last(x, jnp.asarray(
+        n_valid, jnp.int32) - 1))
+    return logits[:, 0], new_cache
+
+
 def prefill(params, cfg: ModelConfig, tokens, *, media=None, cache_len=None,
             window=None, last_pos=None):
     """Forward over the prompt, building the decode cache.

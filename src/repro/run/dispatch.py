@@ -162,6 +162,10 @@ def _run_serve(spec: RunSpec) -> Dict[str, Any]:
         prefill_len=s.prompt_len,
         temperature=s.temperature,
         seed=spec.seed,
+        kv_layout=s.kv_layout,
+        page_size=s.page_size,
+        prefill_chunk=s.prefill_chunk,
+        n_pages=s.n_pages,
     )
     reqs = synthetic_requests(
         cfg, n=s.batch, tokens=s.tokens, prompt_len=s.prompt_len,
@@ -180,7 +184,7 @@ def _run_serve(spec: RunSpec) -> Dict[str, Any]:
 
     print(f"{spec.arch} [{scenario}, mode="
           f"{s.serve_mode or cfg.param_sharding}, "
-          f"slots={scfg.max_batch}]: {report.format()}")
+          f"slots={scfg.max_batch}, kv={engine.layout}]: {report.format()}")
     for req in sorted(report.requests, key=lambda r: r.id):
         print(f"  req {req.id}: prompt {req.prompt_len} -> "
               f"{len(req.tokens)} tokens {req.tokens}")

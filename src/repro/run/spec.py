@@ -60,6 +60,9 @@ class TrainerSection:
                 )
 
 
+KV_LAYOUTS = ("auto", "slab", "paged")  # mirrors serve.engine.KV_LAYOUTS
+
+
 @dataclass(frozen=True)
 class ServeSection:
     """Serve-mode knobs (mirrors the ``serve.Engine`` workload surface)."""
@@ -71,6 +74,23 @@ class ServeSection:
     temperature: float = 0.0
     serve_mode: str = ""        # '' -> cfg.param_sharding; tp2d|fsdp|wus|...
     warmup: bool = True         # pre-compile so metrics exclude XLA time
+    kv_layout: str = "auto"     # auto | slab | paged (auto: paged when the
+    #                             stack is attention-only, slab otherwise)
+    page_size: int = 16         # paged: tokens per KV page
+    prefill_chunk: int = 8      # paged: prompt tokens fed per chunk step
+    n_pages: Optional[int] = None  # paged pool size; None -> slab parity
+
+    def __post_init__(self):
+        if self.kv_layout not in KV_LAYOUTS:
+            raise SpecError(
+                f"serve.kv_layout must be one of {KV_LAYOUTS}, got "
+                f"{self.kv_layout!r}" + did_you_mean(self.kv_layout,
+                                                     KV_LAYOUTS))
+        if self.page_size < 1 or self.prefill_chunk < 1:
+            raise SpecError(
+                "serve.page_size and serve.prefill_chunk must be >= 1")
+        if self.n_pages is not None and self.n_pages < 1:
+            raise SpecError("serve.n_pages must be >= 1")
 
 
 @dataclass(frozen=True)

@@ -6,6 +6,8 @@ See docs/serving.md for the request lifecycle, scheduler states and
 cache layout; ``benchmarks/serve_decode.py`` measures it.
 """
 from repro.serve.cache import (
+    PagePool,
+    apply_defrag,
     init_slab,
     invalidate_beyond,
     read_slot,
@@ -21,16 +23,19 @@ from repro.serve.engine import (
 )
 from repro.serve.metrics import ServeReport, StepTrace, percentile
 from repro.serve.request import Request, RequestState
-from repro.serve.scheduler import Scheduler
+from repro.serve.scheduler import PagedScheduler, Scheduler
 
 __all__ = [
     "Engine",
+    "PagePool",
+    "PagedScheduler",
     "Request",
     "RequestState",
     "Scheduler",
     "ServeConfig",
     "ServeReport",
     "StepTrace",
+    "apply_defrag",
     "init_slab",
     "invalidate_beyond",
     "percentile",

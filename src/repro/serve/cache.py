@@ -1,18 +1,34 @@
-"""Slot-slab KV cache for continuous batching.
+"""KV-cache memory management for continuous batching: the dense slot
+slab and the paged block pool.
 
-The slab is the model's ordinary decode cache (``ModelAPI.init_cache``)
-with batch = ``max_batch``: every leaf is ``(n_blocks, max_batch, ...)``
-with the batch dimension at axis 1 (attention ring buffers, mamba
-conv/ssm states, rwkv shift/wkv states, enc-dec self/cross caches alike).
-A *slot* is one index of that batch dimension; admission writes a freshly
-prefilled single-request cache into the slot, retirement simply abandons
-it — the next admission overwrites every leaf, so slots are reused
-without any reset pass (tested in tests/test_serve.py).
+**Slot slab** (the PR 3 layout, still used by recurrent/hybrid/VLM
+stacks): the model's ordinary decode cache (``ModelAPI.init_cache``)
+with batch = ``max_batch`` — every leaf is ``(n_blocks, max_batch, ...)``
+with the batch dimension at axis 1. A *slot* is one index of that batch
+dimension; admission writes a freshly prefilled single-request cache
+into the slot, retirement simply abandons it.
+
+**Paged pool** (attention-only stacks): KV memory is ``n_pages`` fixed-
+size pages shared by every slot. :class:`PagePool` is the host-side
+block allocator — per-slot page tables, all-or-nothing alloc, free-page
+budget for admission, compaction (``defrag``) — and the device side is
+``models.layers.init_paged_kv_cache`` / ``paged_cache_insert`` /
+``kernels.ops.paged_attention``, reached through the same
+init/write/read/invalidate-shaped surface the engine always used: init
+(``ModelAPI.init_paged_cache``), write (the chunk program's page
+scatter), read (`table_row` feeding the gather), invalidate
+(``free_slot`` — dropping the mapping *is* the invalidation; no mask
+pass needed, which is the point of paging). Memory no longer scales as
+``max_batch x max_len`` but as actual tokens held, the serving analogue
+of the paper's partition-what-no-longer-fits story (§3).
 """
 from __future__ import annotations
 
+from typing import Dict, List
+
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 def init_slab(api, max_batch: int, max_len: int, window=None):
@@ -38,6 +54,132 @@ def read_slot(slab, slot: int):
     return jax.tree_util.tree_map(
         lambda s: jax.lax.dynamic_slice_in_dim(s, slot, 1, axis=1), slab
     )
+
+
+# --------------------------------------------------------------------------- #
+# Paged block pool (host-side allocator).
+# --------------------------------------------------------------------------- #
+class PagePool:
+    """Fixed-size-page allocator over ``n_pages`` physical pages.
+
+    Pure Python, no jax: the pool decides *which* physical pages a slot's
+    logical positions map to; the device side consumes the mapping as an
+    ``(max_batch, max_pages)`` int32 page table (``table_row``).
+    Invariants (property-tested in tests/test_serve.py):
+
+      * a physical page is owned by at most one slot (or free);
+      * ``alloc`` is all-or-nothing — a partial grant never leaks pages;
+      * ``free_slot`` returns every page to the free list (reused by
+        later allocs);
+      * ``defrag`` preserves each slot's logical->token mapping while
+        compacting occupied pages to the lowest physical indices.
+    """
+
+    def __init__(self, n_pages: int, page_size: int):
+        if n_pages < 1 or page_size < 1:
+            raise ValueError("n_pages and page_size must be >= 1")
+        self.n_pages = n_pages
+        self.page_size = page_size
+        self._free: List[int] = list(range(n_pages - 1, -1, -1))
+        self._slots: Dict[int, List[int]] = {}
+
+    # ------------------------------------------------------------------ #
+    def pages_for(self, n_tokens: int) -> int:
+        """Pages needed to hold ``n_tokens`` logical positions."""
+        return max(0, -(-n_tokens // self.page_size))
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_pages(self) -> int:
+        return self.n_pages - len(self._free)
+
+    def utilization(self) -> float:
+        return self.used_pages / self.n_pages
+
+    def slot_pages(self, slot: int) -> List[int]:
+        return list(self._slots.get(slot, ()))
+
+    # ------------------------------------------------------------------ #
+    def alloc(self, slot: int, n: int) -> bool:
+        """Append ``n`` pages to ``slot``; all-or-nothing."""
+        if n > len(self._free):
+            return False
+        pages = [self._free.pop() for _ in range(n)]
+        self._slots.setdefault(slot, []).extend(pages)
+        return True
+
+    def ensure(self, slot: int, n_tokens: int) -> bool:
+        """Grow ``slot`` so positions [0, n_tokens) are mapped."""
+        have = len(self._slots.get(slot, ()))
+        return self.alloc(slot, max(0, self.pages_for(n_tokens) - have))
+
+    def free_slot(self, slot: int) -> int:
+        """Return every page of ``slot`` to the free list."""
+        pages = self._slots.pop(slot, [])
+        self._free.extend(pages)
+        return len(pages)
+
+    def table_row(self, slot: int, max_pages: int) -> np.ndarray:
+        """(max_pages,) int32 page-table row for ``slot`` (-1 unmapped)."""
+        row = np.full((max_pages,), -1, np.int32)
+        pages = self._slots.get(slot, ())
+        row[: len(pages)] = pages
+        return row
+
+    # ------------------------------------------------------------------ #
+    def defrag(self) -> np.ndarray:
+        """Compact occupied pages to the lowest physical indices.
+
+        Returns ``perm`` of shape (n_pages + 1,): ``new_pool[i] =
+        old_pool[perm[i]]`` — apply to the device pools with
+        :func:`apply_defrag` *before* the next step consumes the updated
+        page tables. The trailing trash page stays put. After
+        compaction the free list is the contiguous tail, so long-lived
+        mixed workloads keep allocation O(1) and (on real hardware)
+        DMA-friendly.
+        """
+        order: List[int] = []
+        remap: Dict[int, int] = {}
+        for slot in sorted(self._slots):
+            new_pages = []
+            for old in self._slots[slot]:
+                remap[old] = len(order)
+                new_pages.append(len(order))
+                order.append(old)
+            self._slots[slot] = new_pages
+        free_old = [i for i in range(self.n_pages) if i not in remap]
+        self._free = list(range(self.n_pages - 1, len(order) - 1, -1))
+        perm = np.empty((self.n_pages + 1,), np.int32)
+        perm[: len(order)] = order
+        perm[len(order): self.n_pages] = free_old
+        perm[self.n_pages] = self.n_pages  # trash page fixed
+        return perm
+
+
+def apply_defrag(cache, perm):
+    """Gather every paged pool leaf into the post-``defrag`` page order.
+
+    Leaves are ``(n_blocks, n_pages + 1, page, ...)``; ``perm`` comes
+    from :meth:`PagePool.defrag`. Dense entries (enc-dec ``cross``
+    slabs, recurrent states) are left untouched.
+    """
+    permj = jnp.asarray(perm, jnp.int32)
+
+    def rec(node):
+        if isinstance(node, dict):
+            if "kp" in node:
+                return {k: jnp.take(v, permj, axis=1)
+                        for k, v in node.items()}
+            return {k: (v if k == "cross" else rec(v))
+                    for k, v in node.items()}
+        if isinstance(node, (tuple, list)):
+            return tuple(rec(x) for x in node)
+        return node
+
+    return rec(cache)
 
 
 def invalidate_beyond(cache, true_len):

@@ -1,28 +1,40 @@
 """Continuous-batching engine: the device side of the serving subsystem.
 
-Two compiled programs serve the whole run, regardless of how requests
-arrive:
+Two KV layouts share one engine surface (submit/step/run):
+
+**paged** (default for attention-only stacks): KV lives in a shared
+:class:`repro.serve.cache.PagePool`; a **single compiled program** — the
+chunk step from ``train.steps.make_serve_chunk_step`` — advances every
+slot each round. Decode rows feed one token; admitted prompts are fed as
+fixed-size **chunked-prefill** slices of the same (B, C) batch, so a
+prompt of any length maps onto the one compile shape: there are zero
+per-prompt-length prefill specializations (asserted via the jit
+cache-miss counter in tests/test_serve.py). Admission is by free-page
+budget (``PagedScheduler``); when decode growth exhausts the pool the
+engine preempts youngest-first — the victim re-queues at the FIFO front
+and is later re-prefilled from prompt + tokens-so-far (recompute-style,
+token-identical under greedy). Enc-dec stacks run their fixed-shape
+encoder once per admission into a dense per-slot cross slab.
+
+**slab** (recurrent/hybrid/VLM stacks, or ``kv_layout="slab"``): the
+PR 3 dense slot-slab with two compiled programs —
 
   * ``prefill``: one request's (padded) prompt -> its first-token logits
     + its KV cache, fused with the write of that cache into the slot-slab
-    (``serve.cache.write_slot``) and the padding invalidation, all in one
-    jit so admission is a single device dispatch;
+    (``serve.cache.write_slot``) and the padding invalidation;
   * ``decode``: one token for *every* slot, with a per-slot position
-    vector — in-flight sequences at different offsets advance together
-    (the continuous-batching step).
+    vector.
 
-Both are built from ``train.steps.make_serve_{prefill,decode}_step`` and
-run under ``dist.Rules`` (any serve mode incl. tp2d): the same code
-lowers on the 1x1 CPU mesh and on pod meshes.
+Both layouts run under ``dist.Rules`` (any serve mode incl. tp2d): the
+same code lowers on the 1x1 CPU mesh and on pod meshes.
 
-Exactness: with greedy sampling the engine's outputs are token-identical
-to a sequential single-request prefill+decode loop (asserted by
-tests/test_serve.py). Right-padding prompts to ``prefill_len`` keeps one
-compile shape for attention-only stacks; stacks with recurrent mixers
-(mamba/rwkv6) carry prompt state, so the engine prefills those at exact
-prompt length instead (one compile per distinct length). MoE capacity is
-a known batching asymmetry: at tight capacity factors routing depends on
-batch composition (reduced configs use no-drop capacity).
+Exactness: with greedy sampling both layouts are token-identical to a
+sequential single-request prefill+decode loop and to each other
+(tests/test_serve.py). Stacks with recurrent mixers (mamba/rwkv6) carry
+prompt state, so they prefill at exact prompt length (one compile per
+distinct length) and always use the slab layout. MoE capacity is a known
+batching asymmetry: at tight capacity factors routing depends on batch
+composition (reduced configs use no-drop capacity).
 """
 from __future__ import annotations
 
@@ -30,30 +42,38 @@ import dataclasses
 import heapq
 import itertools
 import time
-from typing import List, Optional
+from typing import List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.dist import Rules
+from repro.dist import Rules, use_rules
 from repro.serve import cache as slab_ops
 from repro.serve.metrics import ServeReport, StepTrace
 from repro.serve.request import Request
-from repro.serve.scheduler import Scheduler
+from repro.serve.scheduler import PagedScheduler, Scheduler
 from repro.train.steps import (
     ModelAPI,
+    make_serve_chunk_step,
     make_serve_decode_step,
     make_serve_prefill_step,
 )
 
+KV_LAYOUTS = ("auto", "slab", "paged")
+
 
 @dataclasses.dataclass(frozen=True)
 class ServeConfig:
-    """Engine knobs. ``max_len`` is the per-slot KV ring length and must
-    hold media + prompt + generation; ``prefill_len`` is the padded
-    prompt compile shape (attention-only stacks)."""
+    """Engine knobs. ``max_len`` is the per-request token budget (media +
+    prompt + generation). ``prefill_len`` is the slab layout's padded
+    prompt compile shape; the paged layout ignores it (any prompt length
+    streams through ``prefill_chunk``-sized chunks). ``page_size`` /
+    ``n_pages`` size the paged pool: ``n_pages`` defaults to capacity
+    parity with the slab (``max_batch * ceil(max_len / page_size)``) —
+    size it smaller to serve more concurrent requests than dense slots
+    could and let admission/preemption manage the overcommit."""
 
     max_batch: int = 4
     max_len: int = 128
@@ -61,10 +81,33 @@ class ServeConfig:
     temperature: float = 0.0
     eos_id: Optional[int] = None
     seed: int = 0
+    kv_layout: str = "auto"      # auto | slab | paged
+    page_size: int = 16
+    prefill_chunk: int = 8
+    n_pages: Optional[int] = None
 
     def __post_init__(self):
-        if self.prefill_len > self.max_len:
+        if self.kv_layout != "paged" and self.prefill_len > self.max_len:
+            # the paged layout never pads to prefill_len; don't make its
+            # users tune a knob the chunk program ignores
             raise ValueError("prefill_len exceeds max_len")
+        if self.kv_layout not in KV_LAYOUTS:
+            raise ValueError(
+                f"kv_layout must be one of {KV_LAYOUTS}, got "
+                f"{self.kv_layout!r}")
+        if self.page_size < 1 or self.prefill_chunk < 1:
+            raise ValueError("page_size and prefill_chunk must be >= 1")
+        if self.n_pages is not None and self.n_pages < 1:
+            raise ValueError("n_pages must be >= 1")
+
+    @property
+    def max_pages(self) -> int:
+        """Page-table width: pages a single request can map."""
+        return -(-self.max_len // self.page_size)
+
+    @property
+    def pool_pages(self) -> int:
+        return self.n_pages or self.max_batch * self.max_pages
 
 
 class Engine:
@@ -77,38 +120,93 @@ class Engine:
         self.api = ModelAPI(cfg)
         # Recurrent mixers carry prompt state -> exact-length prefill.
         self._exact = any(s.mixer != "attn" for s in cfg.block_pattern)
+        paged_ok = not self._exact and cfg.frontend != "vision_patches"
+        layout = self.scfg.kv_layout
+        if layout == "auto":
+            layout = "paged" if paged_ok else "slab"
+        elif layout == "paged" and not paged_ok:
+            raise ValueError(
+                f"kv_layout='paged' needs an attention-only, token-frontend "
+                f"stack; {cfg.name} has "
+                f"{'a recurrent mixer' if self._exact else 'a vision frontend'}"
+                f" — use kv_layout='slab'")
+        self.layout = layout
 
-        prefill_step = make_serve_prefill_step(
-            cfg, rules, cache_len=self.scfg.max_len)
-        decode_step = make_serve_decode_step(cfg, rules)
+        if layout == "paged":
+            self._chunk_jit = jax.jit(make_serve_chunk_step(cfg, rules))
+            if cfg.is_encdec:
+                api = self.api
 
-        def prefill_insert(params, batch, last_pos, true_len, slab, slot):
-            logits, c = prefill_step(params, batch, last_pos)
-            c = slab_ops.invalidate_beyond(c, true_len)
-            return logits, slab_ops.write_slot(slab, c, slot)
+                def encode_insert(params, frames, cross, slot):
+                    with use_rules(rules):
+                        kv = api.encode_cross(params, frames)
+                    return slab_ops.write_slot(cross, kv, slot)
 
-        self._prefill_jit = jax.jit(prefill_insert)
-        self._decode_jit = jax.jit(decode_step)
+                self._encode_jit = jax.jit(encode_insert)
+        else:
+            prefill_step = make_serve_prefill_step(
+                cfg, rules, cache_len=self.scfg.max_len)
+            decode_step = make_serve_decode_step(cfg, rules)
+
+            def prefill_insert(params, batch, last_pos, true_len, slab, slot):
+                logits, c = prefill_step(params, batch, last_pos)
+                c = slab_ops.invalidate_beyond(c, true_len)
+                return logits, slab_ops.write_slot(slab, c, slot)
+
+            self._prefill_jit = jax.jit(prefill_insert)
+            self._decode_jit = jax.jit(decode_step)
         self._key = jax.random.PRNGKey(self.scfg.seed)
         self.reset()
 
     def reset(self) -> None:
-        """Fresh scheduler/slab/trace state; compiled programs are kept,
+        """Fresh scheduler/cache/trace state; compiled programs are kept,
         so one engine can serve successive workloads without recompiling
         (e.g. the offline and server scenarios of one benchmark)."""
-        self.sched = Scheduler(self.scfg.max_batch)
-        self._slab = slab_ops.init_slab(
-            self.api, self.scfg.max_batch, self.scfg.max_len)
-        self._tok = np.zeros((self.scfg.max_batch,), np.int32)
-        self._pos = np.zeros((self.scfg.max_batch,), np.int32)
-        self._rid = np.zeros((self.scfg.max_batch,), np.uint32)
+        B = self.scfg.max_batch
+        self._tok = np.zeros((B,), np.int32)
+        self._pos = np.zeros((B,), np.int32)
+        self._rid = np.zeros((B,), np.uint32)
         self._arrivals: list = []
         self._arrival_seq = itertools.count()
         self._finished: List[Request] = []
         self._trace: List[StepTrace] = []
         self._step_idx = 0
+        self._preempted = 0
+        if self.layout == "paged":
+            self._pool = slab_ops.PagePool(
+                self.scfg.pool_pages, self.scfg.page_size)
+            self.sched: Scheduler = PagedScheduler(
+                B, self._pool, self._admission_pages)
+            # Commit the fresh pools to the replicated sharding the chunk
+            # program's outputs carry; otherwise the first call (fresh,
+            # uncommitted arrays) and every later call (committed jit
+            # outputs) would compile separate specializations of the one
+            # program.
+            cache = self.api.init_paged_cache(
+                B, self.scfg.pool_pages, self.scfg.page_size)
+            if self.rules is not None and hasattr(self.rules.mesh, "devices"):
+                from jax.sharding import NamedSharding
+                from jax.sharding import PartitionSpec as P
+
+                sh = NamedSharding(self.rules.mesh, P())
+                cache = jax.device_put(cache, sh)
+            else:
+                cache = jax.device_put(cache)
+            self._cache = cache
+            self._ptab = np.full((B, self.scfg.max_pages), -1, np.int32)
+            self._stream = {}
+            self._admit_seq = np.zeros((B,), np.int64)
+            self._admit_counter = itertools.count(1)
+        else:
+            self.sched = Scheduler(B)
+            self._slab = slab_ops.init_slab(self.api, B, self.scfg.max_len)
 
     # ------------------------------------------------------------------ #
+    def _admission_pages(self, req: Request) -> int:
+        """Pages the pending prefill stream needs (prompt + any tokens
+        generated before a preemption)."""
+        return self._pool.pages_for(len(req.prompt) + len(req.tokens))
+
     def submit(self, req: Request) -> None:
         """Register a request; it enters the queue at ``req.arrival_step``."""
         if self.cfg.is_encdec and req.media is None:
@@ -121,18 +219,31 @@ class Engine:
                 f"request {req.id}: media+prompt+generation "
                 f"({n_media}+{req.prompt_len}+{req.max_new_tokens}) "
                 f"exceeds max_len={self.scfg.max_len}")
-        if not self._exact and req.prompt_len > self.scfg.prefill_len:
-            raise ValueError(
-                f"request {req.id}: prompt_len {req.prompt_len} exceeds "
-                f"prefill_len={self.scfg.prefill_len}")
-        # The padded prefill sequence must fit the cache whole — otherwise
-        # lm.prefill truncates to the trailing cache_len positions and the
-        # slot_pos labels would no longer match the kept K/V.
-        pad_to = req.prompt_len if self._exact else self.scfg.prefill_len
-        if n_media + pad_to > self.scfg.max_len:
-            raise ValueError(
-                f"request {req.id}: media+padded prompt ({n_media}+{pad_to}) "
-                f"exceeds max_len={self.scfg.max_len}")
+        if self.layout == "paged":
+            if req.media is not None and not self.cfg.is_encdec:
+                raise ValueError(
+                    f"request {req.id}: the paged layout feeds token ids "
+                    f"only — decoder-side media needs kv_layout='slab'")
+            need = self._pool.pages_for(req.prompt_len + req.max_new_tokens)
+            if need > self.scfg.pool_pages:
+                raise ValueError(
+                    f"request {req.id}: needs {need} pages but the pool "
+                    f"has {self.scfg.pool_pages}; raise n_pages or shrink "
+                    f"the request")
+        else:
+            if not self._exact and req.prompt_len > self.scfg.prefill_len:
+                raise ValueError(
+                    f"request {req.id}: prompt_len {req.prompt_len} exceeds "
+                    f"prefill_len={self.scfg.prefill_len}")
+            # The padded prefill sequence must fit the cache whole —
+            # otherwise lm.prefill truncates to the trailing cache_len
+            # positions and the slot_pos labels would no longer match.
+            pad_to = req.prompt_len if self._exact else self.scfg.prefill_len
+            if n_media + pad_to > self.scfg.max_len:
+                raise ValueError(
+                    f"request {req.id}: media+padded prompt "
+                    f"({n_media}+{pad_to}) exceeds "
+                    f"max_len={self.scfg.max_len}")
         heapq.heappush(
             self._arrivals, (req.arrival_step, next(self._arrival_seq), req))
 
@@ -149,22 +260,58 @@ class Engine:
             requests=list(self._finished),
             steps=list(self._trace),
             elapsed_s=time.perf_counter() - t0,
+            preemptions=self._preempted,
         )
         self.reset()
         return report
 
     # ------------------------------------------------------------------ #
     def step(self) -> None:
-        """One scheduling round: arrivals -> admissions -> batched decode."""
+        """One scheduling round: arrivals -> admissions -> batched step."""
         while self._arrivals and self._arrivals[0][0] <= self._step_idx:
             _, _, req = heapq.heappop(self._arrivals)
-            req.t_arrival = time.perf_counter()
+            if req.t_arrival is None:
+                req.t_arrival = time.perf_counter()
             self.sched.submit(req)
+        admit = (self._admit_paged if self.layout == "paged"
+                 else self._admit_slab)
         for slot, req in self.sched.admit():
-            self._admit(slot, req)
+            admit(slot, req)
         if self.sched.n_active:
-            self._decode_once()
+            if self.layout == "paged":
+                self._chunk_once()
+            else:
+                self._decode_once()
         self._step_idx += 1
+
+    def compiled_programs(self) -> dict:
+        """Program name -> jit cache size (compiled specializations).
+
+        The paged engine's contract is chunk == 1 regardless of the mix
+        of prompt lengths served: every prompt streams through the one
+        (B, C) compile shape."""
+        def sz(f):
+            return getattr(f, "_cache_size", lambda: -1)()
+
+        if self.layout == "paged":
+            out = {"chunk": sz(self._chunk_jit)}
+            if self.cfg.is_encdec:
+                out["encode"] = sz(self._encode_jit)
+            return out
+        return {"prefill": sz(self._prefill_jit),
+                "decode": sz(self._decode_jit)}
+
+    def defrag(self) -> None:
+        """Compact the page pool (paged layout): occupied pages move to
+        the lowest physical indices, page tables are rewritten, decode
+        output is unchanged (tested)."""
+        if self.layout != "paged":
+            raise ValueError("defrag is a paged-layout operation")
+        perm = self._pool.defrag()
+        self._cache = slab_ops.apply_defrag(self._cache, perm)
+        for slot in range(self.scfg.max_batch):
+            self._ptab[slot] = self._pool.table_row(
+                slot, self.scfg.max_pages)
 
     # ------------------------------------------------------------------ #
     def _n_media(self, req: Request) -> int:
@@ -173,7 +320,114 @@ class Engine:
             return 0  # enc-dec media feeds the encoder, not the decoder
         return int(np.asarray(req.media).shape[0])
 
-    def _admit(self, slot: int, req: Request) -> None:
+    # ---- paged layout ------------------------------------------------- #
+    def _admit_paged(self, slot: int, req: Request) -> None:
+        """Stage the prefill stream; pages were reserved by the
+        scheduler's budget check. Enc-dec: run the fixed-shape encoder
+        into the slot's cross slab (one compile, any prompt length)."""
+        self._stream[slot] = list(req.prompt) + list(req.tokens)
+        self._pos[slot] = 0
+        self._rid[slot] = req.id
+        self._admit_seq[slot] = next(self._admit_counter)
+        self._ptab[slot] = self._pool.table_row(slot, self.scfg.max_pages)
+        if self.cfg.is_encdec:
+            t0 = time.perf_counter()
+            cross = self._encode_jit(
+                self.params, jnp.asarray(req.media)[None],
+                self._cache["cross"], jnp.int32(slot))
+            self._cache = {**self._cache,
+                           "cross": jax.block_until_ready(cross)}
+            self._trace.append(StepTrace(
+                "encode", time.perf_counter() - t0, 0,
+                pool_util=self._pool.utilization()))
+
+    def _chunk_once(self) -> None:
+        """One mixed dispatch: every occupied slot advances — decode rows
+        by one token, prefilling rows by up to ``prefill_chunk`` prompt
+        tokens — through the single compiled chunk program."""
+        C = self.scfg.prefill_chunk
+        B = self.scfg.max_batch
+        active = dict(self.sched.running())
+
+        # Lazy decode growth; preempt youngest-first when the pool is dry.
+        while active:
+            growth = {}
+            for slot in active:
+                if self._stream.get(slot):
+                    continue  # prefill pages were reserved at admission
+                need = (self._pool.pages_for(int(self._pos[slot]) + 1)
+                        - len(self._pool.slot_pages(slot)))
+                if need > 0:
+                    growth[slot] = need
+            if sum(growth.values()) <= self._pool.free_pages:
+                for slot in growth:
+                    self._pool.ensure(slot, int(self._pos[slot]) + 1)
+                break
+            victim = max(active, key=lambda s: self._admit_seq[s])
+            self.sched.preempt(victim)
+            self._ptab[victim] = -1
+            self._stream.pop(victim, None)
+            active.pop(victim)
+            self._preempted += 1
+        if not active:
+            return
+
+        toks = np.zeros((B, C), np.int32)
+        nv = np.ones((B,), np.int32)
+        posb = np.zeros((B,), np.int32)
+        prefilling = False
+        for slot in active:
+            posb[slot] = self._pos[slot]
+            stream = self._stream.get(slot)
+            if stream:
+                n = min(C, len(stream))
+                toks[slot, :n] = stream[:n]
+                nv[slot] = n
+                prefilling = True
+            else:
+                toks[slot, 0] = self._tok[slot]
+            self._ptab[slot] = self._pool.table_row(
+                slot, self.scfg.max_pages)
+
+        t0 = time.perf_counter()
+        logits, self._cache = self._chunk_jit(
+            self.params, jnp.asarray(toks), self._cache,
+            jnp.asarray(self._ptab), jnp.asarray(posb), jnp.asarray(nv))
+        # each row's sampled token sits right after its last fed token
+        next_tok = np.asarray(jax.block_until_ready(
+            self._sample(logits, self._rid, posb + nv)))
+        dt = time.perf_counter() - t0
+
+        produced = 0
+        for slot, req in active.items():
+            n = int(nv[slot])
+            self._pos[slot] += n
+            stream = self._stream.get(slot)
+            if stream:
+                self._stream[slot] = stream[n:]
+                if self._stream[slot]:
+                    continue  # mid-prompt: logits not sampled yet
+            tok = int(next_tok[slot])
+            req.tokens.append(tok)
+            produced += 1
+            if req.t_first_token is None:
+                req.t_first_token = time.perf_counter()
+            self._tok[slot] = tok
+            if req.done or tok == self.scfg.eos_id:
+                self._retire_paged(slot, req)
+        self._trace.append(StepTrace(
+            "mixed" if prefilling else "decode", dt, produced,
+            pool_util=self._pool.utilization()))
+
+    def _retire_paged(self, slot: int, req: Request) -> None:
+        self.sched.retire(slot)  # frees the slot's pages too
+        self._ptab[slot] = -1
+        self._stream.pop(slot, None)
+        req.t_done = time.perf_counter()
+        self._finished.append(req)
+
+    # ---- slab layout --------------------------------------------------- #
+    def _admit_slab(self, slot: int, req: Request) -> None:
         """Prefill ``req`` into ``slot``; samples its first token."""
         P = req.prompt_len
         n_media = self._n_media(req)
@@ -198,7 +452,7 @@ class Engine:
         req.t_first_token = time.perf_counter()
         self._trace.append(StepTrace("prefill", dt, 1))
         if req.done or tok == self.scfg.eos_id:
-            self._retire(slot, req)
+            self._retire_slab(slot, req)
         else:
             self._tok[slot] = tok
             self._pos[slot] = n_media + P
@@ -222,14 +476,15 @@ class Engine:
             self._tok[slot] = tok
             self._pos[slot] += 1
             if req.done or tok == self.scfg.eos_id:
-                self._retire(slot, req)
+                self._retire_slab(slot, req)
         self._trace.append(StepTrace("decode", dt, len(running)))
 
-    def _retire(self, slot: int, req: Request) -> None:
+    def _retire_slab(self, slot: int, req: Request) -> None:
         self.sched.retire(slot)
         req.t_done = time.perf_counter()
         self._finished.append(req)
 
+    # ------------------------------------------------------------------ #
     def _sample(self, logits, rid, pos):
         """Greedy, or temperature sampling keyed by (seed, request id,
         position).
@@ -295,16 +550,25 @@ def scenario_driver(name: str):
 
 
 def synthetic_requests(cfg, *, n: int, tokens: int, prompt_len: int,
-                       scenario: str = "offline", seed: int = 0
+                       scenario: str = "offline", seed: int = 0,
+                       prompt_lens: Optional[Sequence[int]] = None,
                        ) -> List[Request]:
-    """Synthetic workload: mixed prompt lengths; the server scenario
+    """Synthetic workload with mixed prompt lengths; the server scenario
     staggers arrivals so admissions interleave with in-flight decodes.
-    Enc-dec archs get encoder frames, VLM archs get vision patches."""
+
+    ``prompt_lens`` pins the per-request lengths explicitly (cycled over
+    the ``n`` requests) — serve benchmarks and tests pass a wide spread
+    so ragged batches are the default exercise; ``None`` keeps the
+    seeded random spread in ``[prompt_len // 2, prompt_len]``. Enc-dec
+    archs get encoder frames, VLM archs get vision patches."""
     rng = np.random.RandomState(seed)
     reqs = []
     for i in range(n):
-        lo = max(1, min(prompt_len // 2, prompt_len))
-        p_len = int(rng.randint(lo, max(lo + 1, prompt_len + 1)))
+        if prompt_lens:
+            p_len = max(1, int(prompt_lens[i % len(prompt_lens)]))
+        else:
+            lo = max(1, min(prompt_len // 2, prompt_len))
+            p_len = int(rng.randint(lo, max(lo + 1, prompt_len + 1)))
         req = Request(
             prompt=rng.randint(0, cfg.vocab, size=p_len).tolist(),
             max_new_tokens=tokens,

@@ -9,7 +9,7 @@ prefill contributes the first token of its request.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 
 def percentile(xs: List[float], q: float) -> float:
@@ -23,11 +23,19 @@ def percentile(xs: List[float], q: float) -> float:
 
 @dataclasses.dataclass
 class StepTrace:
-    """One engine step's device work: kind 'prefill' | 'decode'."""
+    """One engine step's device work.
+
+    kind: 'prefill' | 'decode' (slab engine); the paged engine's single
+    mixed program reports 'decode' when every active row fed one token
+    and 'mixed' while any row is still chunk-prefilling, plus 'encode'
+    for enc-dec admissions. pool_util: fraction of the page pool in use
+    after the step (paged engine only).
+    """
 
     kind: str
     wall_s: float
     n_tokens: int  # tokens produced by this step
+    pool_util: Optional[float] = None
 
 
 @dataclasses.dataclass
@@ -37,6 +45,7 @@ class ServeReport:
     requests: List[Any]          # FINISHED Request objects
     steps: List[StepTrace]
     elapsed_s: float
+    preemptions: int = 0         # paged engine: pool-pressure evictions
 
     # ------------------------------------------------------------------ #
     @property
@@ -62,7 +71,15 @@ class ServeReport:
         p50, p99 = self.percentiles_ms()
         ttfts = [r.ttft_s for r in self.requests if r.ttft_s is not None]
         decode_steps = [s for s in self.steps if s.kind == "decode"]
+        utils = [s.pool_util for s in self.steps if s.pool_util is not None]
+        extra = {}
+        if utils:
+            extra = {
+                "pool_util_mean": round(sum(utils) / len(utils), 4),
+                "pool_util_peak": round(max(utils), 4),
+            }
         return {
+            **extra,
             "requests": len(self.requests),
             "tokens": self.tokens_generated,
             "elapsed_s": round(self.elapsed_s, 4),

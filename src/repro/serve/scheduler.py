@@ -29,6 +29,11 @@ class Scheduler:
         self._slots: List[Optional[Request]] = [None] * max_batch
         self._queue: deque = deque()
 
+    # Overridden by PagedScheduler: whether the head of the queue can be
+    # admitted into ``slot`` right now (capacity-aware admission).
+    def _can_admit(self, slot: int, req: Request) -> bool:
+        return True
+
     # ------------------------------------------------------------------ #
     def submit(self, req: Request) -> None:
         """Move a request into the FIFO (WAITING/QUEUED -> QUEUED)."""
@@ -49,6 +54,8 @@ class Scheduler:
         for i in range(self.max_batch):
             if self._slots[i] is not None or not self._queue:
                 continue
+            if not self._can_admit(i, self._queue[0]):
+                break  # strict FIFO: never admit past a blocked head
             req = self._queue.popleft()
             req.state = RequestState.RUNNING
             req.slot = i
@@ -64,6 +71,22 @@ class Scheduler:
         self._slots[slot] = None
         req.state = RequestState.FINISHED
         req.slot = None
+        return req
+
+    # ------------------------------------------------------------------ #
+    def preempt(self, slot: int) -> Request:
+        """Kick the request in ``slot`` back to the *front* of the FIFO
+        (RUNNING -> QUEUED); it keeps its generated tokens and will be
+        re-prefilled (prompt + tokens so far) on re-admission. Preempting
+        youngest-first and re-queueing at the front preserves overall
+        FIFO order, so the oldest request always makes progress."""
+        req = self._slots[slot]
+        if req is None:
+            raise ValueError(f"slot {slot} is free; nothing to preempt")
+        self._slots[slot] = None
+        req.state = RequestState.QUEUED
+        req.slot = None
+        self._queue.appendleft(req)
         return req
 
     # ------------------------------------------------------------------ #
@@ -84,3 +107,34 @@ class Scheduler:
     @property
     def has_work(self) -> bool:
         return bool(self._queue) or self.n_active > 0
+
+
+class PagedScheduler(Scheduler):
+    """Scheduler for the paged engine: admission is by **free-page
+    budget**, not slot count alone.
+
+    ``cost(req)`` returns the pages a request needs on admission (the
+    engine passes the pages of its pending prefill stream — prompt plus
+    any tokens generated before a preemption). ``_can_admit`` *reserves*
+    those pages (all-or-nothing) in the same move, so a returned
+    admission is always backed by mapped memory; a blocked queue head
+    blocks everyone behind it (strict FIFO — no starvation). Decode-time
+    growth is allocated lazily by the engine, which preempts
+    youngest-first via :meth:`Scheduler.preempt` when the pool runs dry.
+    """
+
+    def __init__(self, max_batch: int, pool, cost):
+        super().__init__(max_batch)
+        self.pool = pool
+        self._cost = cost
+
+    def _can_admit(self, slot: int, req: Request) -> bool:
+        return self.pool.alloc(slot, self._cost(req))
+
+    def preempt(self, slot: int) -> Request:
+        self.pool.free_slot(slot)
+        return super().preempt(slot)
+
+    def retire(self, slot: int) -> Request:
+        self.pool.free_slot(slot)
+        return super().retire(slot)

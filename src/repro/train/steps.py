@@ -62,6 +62,23 @@ class ModelAPI:
     def init_cache(self, B, seq_len, window=None):
         return self._m.init_cache(self.cfg, B, seq_len, window)
 
+    # ---- paged serving (attention-only stacks; repro.serve) ----------- #
+    def init_paged_cache(self, B, n_pages, page):
+        if self.cfg.is_encdec:
+            return self._m.init_paged_cache(self.cfg, B, n_pages, page)
+        return self._m.init_paged_cache(self.cfg, n_pages, page)
+
+    def decode_chunk(self, params, tokens, cache, page_table, pos, n_valid,
+                     *, window=None):
+        return self._m.decode_chunk(
+            params, self.cfg, tokens, cache, page_table, pos, n_valid,
+            window=window,
+        )
+
+    def encode_cross(self, params, frames):
+        """Enc-dec only: encoder + per-layer cross K/V for one request."""
+        return self._m.encode_cross(params, self.cfg, frames)
+
 
 def make_optimizer(cfg: ModelConfig, total_steps: int = 10_000) -> Optimizer:
     """Default per-arch optimizer: Adam w/ cosine schedule (the paper's
@@ -323,6 +340,24 @@ def make_serve_prefill_step(cfg: ModelConfig, rules: Optional[Rules] = None,
                                window=window, last_pos=last_pos)
 
     return prefill_step
+
+
+def make_serve_chunk_step(cfg: ModelConfig, rules: Optional[Rules] = None,
+                          *, window=None):
+    """The paged engine's single compiled program: C tokens per row
+    against the paged KV pool — decode rows feed one real token,
+    chunked-prefill rows up to C, in the same dispatch. Every prompt
+    length maps onto the one (B, C) compile shape, so there are no
+    per-length prefill specializations to compile."""
+    api = ModelAPI(cfg)
+
+    def chunk_step(params, tokens, cache, page_table, pos, n_valid):
+        with use_rules(rules):
+            return api.decode_chunk(
+                params, tokens, cache, page_table, pos, n_valid,
+                window=window)
+
+    return chunk_step
 
 
 def make_serve_decode_step(cfg: ModelConfig, rules: Optional[Rules] = None,

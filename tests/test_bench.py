@@ -253,3 +253,32 @@ def test_compare_flags_newly_failing_benchmark(smoke_artifact):
     broken["benchmarks"][name]["error"] = "boom"
     _, regressions = compare(art, broken, allow_missing=True)
     assert any("now failing" in r for r in regressions)
+
+
+@pytest.mark.slow
+def test_compare_writes_github_step_summary(smoke_artifact, tmp_path,
+                                            monkeypatch):
+    """With $GITHUB_STEP_SUMMARY set (CI), the CLI appends a per-row
+    markdown delta table there — regressions surface in the job summary,
+    not just the log."""
+    art, _, _ = smoke_artifact
+    doctored = copy.deepcopy(art)
+    first_timed = None
+    for entry in doctored["benchmarks"].values():
+        for rec in entry["records"]:
+            if rec["wall_us"] is not None:
+                rec["wall_us"]["median_us"] *= 2.0
+                first_timed = first_timed or rec["name"]
+    old_p, new_p = tmp_path / "old.json", tmp_path / "new.json"
+    bench_schema.dump(art, str(old_p))
+    bench_schema.dump(doctored, str(new_p))
+    summary = tmp_path / "summary.md"
+    monkeypatch.setenv("GITHUB_STEP_SUMMARY", str(summary))
+    assert compare_main([str(old_p), str(new_p), "--threshold", "1.15"]) == 1
+    text = summary.read_text()
+    assert "| record |" in text and "regression" in text
+    assert f"`{next(iter(art['benchmarks']))}" in text
+    assert "regression(s):" in text
+    # a clean compare appends (not overwrites) and reports no regressions
+    assert compare_main([str(old_p), str(old_p)]) == 0
+    assert "No regressions." in summary.read_text()

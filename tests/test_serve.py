@@ -1,6 +1,8 @@
 """repro.serve: scheduler invariants under random arrival orders,
-continuous-batching vs sequential decode equivalence, and KV-slot reuse
-after retirement."""
+continuous-batching vs sequential decode equivalence, KV-slot reuse
+after retirement, and the paged layout — allocator invariants under
+randomized admit/retire/overflow/preempt sequences, paged==slab token
+identity, the one-compiled-program contract, and clean preemption."""
 import random
 
 import jax
@@ -13,6 +15,8 @@ from repro.dist import Rules, split_tree, use_rules
 from repro.launch.mesh import single_device_mesh
 from repro.serve import (
     Engine,
+    PagePool,
+    PagedScheduler,
     Request,
     RequestState,
     Scheduler,
@@ -24,6 +28,7 @@ from repro.serve import (
     run_server,
     write_slot,
 )
+from repro.serve.engine import synthetic_requests
 from repro.train.steps import ModelAPI
 
 
@@ -278,13 +283,269 @@ def test_kv_slot_reuse_after_retirement():
         want[r.id] for r in reqs]
 
 
+# --------------------------------------------------------------------------- #
+# Paged engine: identity with the dense slab, one-program contract,
+# preemption and defrag transparency.
+# --------------------------------------------------------------------------- #
+def _request_stream(cfg, seed, n=6):
+    rng = np.random.RandomState(seed)
+    return [
+        Request(
+            prompt=rng.randint(0, cfg.vocab,
+                               size=int(rng.randint(2, 14))).tolist(),
+            max_new_tokens=int(rng.randint(1, 6)),
+            arrival_step=int(rng.randint(0, 8)),
+        )
+        for _ in range(n)
+    ]
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch,mode", [("gemma-7b", "tp2d"),
+                                       ("rwkv6-3b", "replicated")])
+def test_paged_engine_token_identical_to_slab(arch, mode):
+    """The default-layout engine (paged for attention stacks, slab-exact
+    for recurrent ones) reproduces the PR 3 dense-slab engine token for
+    token on the same mixed-arrival stream — and for the paged layout the
+    whole run, spanning many distinct prompt lengths, compiles exactly
+    one decode-shaped program (jit cache-miss counter stays at 1)."""
+    cfg = get_config(arch).reduced()
+    api = ModelAPI(cfg)
+    params, _ = split_tree(api.init(cfg, jax.random.PRNGKey(0)))
+    mesh = single_device_mesh()
+    rules = Rules(mesh, mode)
+    with mesh, use_rules(rules):
+        slab = Engine(cfg, params, rules,
+                      ServeConfig(max_batch=3, max_len=32, prefill_len=16,
+                                  kv_layout="slab"))
+        want = {r.id: r.tokens for r in run_server(
+            slab, _request_stream(cfg, seed=11)).requests}
+        eng = Engine(cfg, params, rules,
+                     ServeConfig(max_batch=3, max_len=32, prefill_len=16,
+                                 page_size=4, prefill_chunk=4))
+        report = run_server(eng, _request_stream(cfg, seed=11))
+    got = {r.id: r.tokens for r in report.requests}
+    assert len(got) == len(want) == 6
+    # ids are sequential per stream: the i-th submitted request of each
+    # run must generate the same tokens
+    assert ([t for _, t in sorted(got.items())]
+            == [t for _, t in sorted(want.items())])
+    if arch == "gemma-7b":
+        assert eng.layout == "paged"
+        assert eng.compiled_programs() == {"chunk": 1}, (
+            "per-prompt-length recompiles detected")
+        # a second workload with fresh lengths still compiles nothing new
+        with mesh, use_rules(rules):
+            run_offline(eng, [Request(prompt=[5] * p, max_new_tokens=2)
+                              for p in (1, 13, 6)])
+        assert eng.compiled_programs() == {"chunk": 1}
+        utils = [s.pool_util for s in report.steps
+                 if s.pool_util is not None]
+        assert utils and max(utils) <= 1.0
+    else:
+        assert eng.layout == "slab"
+
+
+@pytest.mark.slow
+def test_paged_preemption_and_defrag_keep_tokens_identical():
+    """A pool too small for the workload forces preemptions; preempted
+    requests resume by re-prefilling prompt + tokens-so-far, so greedy
+    outputs match the uncontended slab run exactly. A mid-run defrag
+    (page compaction + table rewrite) is equally invisible."""
+    cfg = get_config("gemma-7b").reduced()
+    api = ModelAPI(cfg)
+    params, _ = split_tree(api.init(cfg, jax.random.PRNGKey(0)))
+
+    def mk():
+        rng = np.random.RandomState(7)
+        return [Request(prompt=rng.randint(0, cfg.vocab, size=int(p)).tolist(),
+                        max_new_tokens=6)
+                for p in (9, 7, 12, 5)]
+
+    slab = Engine(cfg, params, None,
+                  ServeConfig(max_batch=4, max_len=32, prefill_len=16,
+                              kv_layout="slab"))
+    want = [r.tokens for r in sorted(run_offline(slab, mk()).requests,
+                                     key=lambda r: r.id)]
+
+    tiny = Engine(cfg, params, None,
+                  ServeConfig(max_batch=4, max_len=32, kv_layout="paged",
+                              page_size=4, prefill_chunk=4, n_pages=6))
+    report = run_offline(tiny, mk())
+    got = [r.tokens for r in sorted(report.requests, key=lambda r: r.id)]
+    assert report.preemptions > 0, "6-page pool should have preempted"
+    assert got == want
+    # pool fully drained after the run (reset() rebuilt it)
+    assert tiny._pool.free_pages == tiny._pool.n_pages
+
+    eng = Engine(cfg, params, None,
+                 ServeConfig(max_batch=4, max_len=32, kv_layout="paged",
+                             page_size=4, prefill_chunk=4))
+    for r in mk():
+        eng.submit(r)
+    for _ in range(5):
+        eng.step()
+    eng.defrag()  # compact mid-flight
+    while eng._arrivals or eng.sched.has_work:
+        eng.step()
+    got2 = [r.tokens for r in sorted(eng._finished, key=lambda r: r.id)]
+    assert got2 == want
+
+
+@pytest.mark.slow
+def test_paged_encdec_matches_slab():
+    """Whisper under the paged layout (chunked decoder prefill + one
+    fixed-shape encoder program per admission) matches the slab engine;
+    no prompt-length specializations compile."""
+    cfg = get_config("whisper-medium").reduced()
+    api = ModelAPI(cfg)
+    params, _ = split_tree(api.init(cfg, jax.random.PRNGKey(0)))
+    mk = lambda: synthetic_requests(cfg, n=4, tokens=4, prompt_len=10,
+                                    scenario="server", seed=5)
+    slab = Engine(cfg, params, None,
+                  ServeConfig(max_batch=2, max_len=32, prefill_len=16,
+                              kv_layout="slab"))
+    want = sorted(tuple(r.tokens) for r in run_server(slab, mk()).requests)
+    paged = Engine(cfg, params, None,
+                   ServeConfig(max_batch=2, max_len=32, kv_layout="paged",
+                               page_size=4, prefill_chunk=4))
+    assert paged.layout == "paged"
+    got = sorted(tuple(r.tokens) for r in run_server(paged, mk()).requests)
+    assert got == want
+    assert paged.compiled_programs() == {"chunk": 1, "encode": 1}
+
+
 def test_engine_rejects_oversized_requests():
     cfg = get_config("gemma-7b").reduced()
     api = ModelAPI(cfg)
     params, _ = split_tree(api.init(cfg, jax.random.PRNGKey(0)))
-    engine = Engine(cfg, params, None,
-                    ServeConfig(max_batch=1, max_len=16, prefill_len=8))
+    # slab layout: prompts must fit the padded prefill compile shape
+    slab = Engine(cfg, params, None,
+                  ServeConfig(max_batch=1, max_len=16, prefill_len=8,
+                              kv_layout="slab"))
     with pytest.raises(ValueError, match="exceeds max_len"):
-        engine.submit(Request(prompt=[1] * 8, max_new_tokens=12))
+        slab.submit(Request(prompt=[1] * 8, max_new_tokens=12))
     with pytest.raises(ValueError, match="exceeds prefill_len"):
-        engine.submit(Request(prompt=[1] * 12, max_new_tokens=2))
+        slab.submit(Request(prompt=[1] * 12, max_new_tokens=2))
+    # paged layout: no prefill_len cap (chunked prefill), but max_len and
+    # the pool's single-request capacity still bound a request
+    paged = Engine(cfg, params, None,
+                   ServeConfig(max_batch=1, max_len=16, kv_layout="paged",
+                               page_size=4, n_pages=3))
+    paged.submit(Request(prompt=[1] * 10, max_new_tokens=2))  # 3 pages: ok
+    with pytest.raises(ValueError, match="exceeds max_len"):
+        paged.submit(Request(prompt=[1] * 8, max_new_tokens=12))
+    with pytest.raises(ValueError, match="pages"):
+        paged.submit(Request(prompt=[1] * 10, max_new_tokens=4))  # 4 > 3
+    with pytest.raises(ValueError, match="token ids only"):
+        paged.submit(Request(prompt=[1, 2], max_new_tokens=1,
+                             media=np.zeros((2, cfg.d_model))))
+
+
+def test_paged_layout_requires_attention_only_stack():
+    """Explicit kv_layout='paged' on a recurrent stack is an error;
+    'auto' silently keeps such stacks on the slab layout."""
+    cfg = get_config("rwkv6-3b").reduced()
+    api = ModelAPI(cfg)
+    params, _ = split_tree(api.init(cfg, jax.random.PRNGKey(0)))
+    with pytest.raises(ValueError, match="attention-only"):
+        Engine(cfg, params, None,
+               ServeConfig(max_batch=1, max_len=16, kv_layout="paged"))
+    eng = Engine(cfg, params, None,
+                 ServeConfig(max_batch=1, max_len=16, prefill_len=8))
+    assert eng.layout == "slab"
+    with pytest.raises(ValueError, match="kv_layout"):
+        ServeConfig(kv_layout="ragged")
+
+
+# --------------------------------------------------------------------------- #
+# Page pool + paged scheduler (pure python).
+# --------------------------------------------------------------------------- #
+def _check_pool(pool: PagePool, n_pages: int):
+    """Global invariants: conservation, exclusive ownership."""
+    owned = [p for s in pool._slots.values() for p in s]
+    assert len(owned) == len(set(owned)), "page double-owned"
+    assert len(owned) + pool.free_pages == n_pages, "pages leaked"
+    assert set(owned).isdisjoint(pool._free)
+    for slot in pool._slots:
+        row = pool.table_row(slot, 8 + len(pool._slots[slot]))
+        n = len(pool._slots[slot])
+        assert row[:n].tolist() == pool._slots[slot]
+        assert (row[n:] == -1).all()
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_page_pool_randomized_alloc_free_defrag(seed):
+    """Random alloc/ensure/free/defrag sequences keep every invariant:
+    no page double-owned, all-or-nothing allocation, freed pages reused,
+    defrag compacts without changing any slot's page count/order."""
+    rng = random.Random(seed)
+    n_pages = rng.randint(4, 24)
+    pool = PagePool(n_pages, page_size=rng.randint(1, 8))
+    freed_ever, reused = set(), False
+    for _ in range(200):
+        op = rng.random()
+        slot = rng.randint(0, 5)
+        if op < 0.45:
+            n = rng.randint(0, n_pages + 2)
+            before = pool.free_pages
+            ok = pool.alloc(slot, n)
+            if ok:
+                assert pool.free_pages == before - n
+                if freed_ever & set(pool._slots.get(slot, ())):
+                    reused = True
+            else:  # all-or-nothing: a failed grant changes nothing
+                assert pool.free_pages == before and n > before
+        elif op < 0.75:
+            freed_ever |= set(pool._slots.get(slot, ()))
+            pool.free_slot(slot)
+        elif op < 0.9:
+            pool.ensure(slot, rng.randint(0, n_pages * pool.page_size))
+        else:
+            sizes = {s: len(p) for s, p in pool._slots.items()}
+            perm = pool.defrag()
+            assert sorted(perm[: n_pages].tolist()) == list(range(n_pages))
+            assert perm[n_pages] == n_pages  # trash page pinned
+            assert {s: len(p) for s, p in pool._slots.items()} == sizes
+            # compaction: occupied pages are exactly the low indices
+            owned = [p for s in pool._slots.values() for p in s]
+            assert sorted(owned) == list(range(len(owned)))
+        _check_pool(pool, n_pages)
+    assert reused, "freed pages were never reused (workload too light?)"
+
+
+def test_paged_scheduler_budget_admission_and_preempt():
+    """Admission is by free-page budget with strict FIFO head-of-line
+    blocking; preemption frees the pages and requeues at the front."""
+    pool = PagePool(4, page_size=4)
+    sched = PagedScheduler(2, pool, cost=lambda r: pool.pages_for(
+        len(r.prompt) + len(r.tokens)))
+    big = Request(prompt=[1] * 12, max_new_tokens=1)    # 3 pages
+    small = Request(prompt=[2] * 4, max_new_tokens=1)   # 1 page
+    tiny = Request(prompt=[3] * 2, max_new_tokens=1)    # 1 page
+    for r in (big, small, tiny):
+        sched.submit(r)
+    admitted = sched.admit()
+    # big (3 pages) + small (1 page) fill the pool; tiny blocks
+    assert [r is big for _, r in admitted][0] and len(admitted) == 2
+    assert pool.free_pages == 0 and tiny.state is RequestState.QUEUED
+    # nothing admits while the pool is dry, even with a free slot
+    sched.retire(small.slot if small.slot is not None else 1)
+    assert sched.admit() == [(1, tiny)]  # small's page freed -> tiny fits
+    # preempting big frees its 3 pages and requeues it at the front
+    slot_big = big.slot
+    out = sched.preempt(slot_big)
+    assert out is big and big.state is RequestState.QUEUED
+    assert pool.free_pages == 3 and big.slot is None
+    assert sched.admit()[0][1] is big  # front of the FIFO
+
+
+def test_synthetic_requests_prompt_lens_spread():
+    cfg = get_config("gemma-7b").reduced()
+    reqs = synthetic_requests(cfg, n=6, tokens=2, prompt_len=16,
+                              prompt_lens=(3, 9, 14))
+    assert [r.prompt_len for r in reqs] == [3, 9, 14, 3, 9, 14]
+    # default draw is already a spread, never exceeding prompt_len
+    reqs = synthetic_requests(cfg, n=12, tokens=2, prompt_len=16, seed=1)
+    lens = {r.prompt_len for r in reqs}
+    assert len(lens) > 1 and max(lens) <= 16 and min(lens) >= 8
