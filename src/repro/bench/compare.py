@@ -156,6 +156,10 @@ def markdown_table(rows: List[dict], regressions: List[str], *,
             f"| {fmt(r['new_us'], '%.1f')} | {fmt(r['ratio'], '%.2fx')} "
             f"| {_STATUS_MARK.get(r['status'], r['status'])} |")
     out.append("")
+    n_new = sum(r["status"] == "new" for r in rows)
+    if n_new:
+        out.append(f"**{n_new} new record(s)** (additions, not compared).")
+        out.append("")
     if regressions:
         out.append(f"**{len(regressions)} regression(s):**")
         out.extend(f"- {r}" for r in regressions)
@@ -200,6 +204,9 @@ def main(argv=None) -> int:
                 old_name=f"{args.old} ({old['tag']})",
                 new_name=f"{args.new} ({new['tag']})"))
 
+    n_new = sum(row["status"] == "new" for row in rows)
+    if n_new:
+        print(f"{n_new} new record(s) (additions, not compared)")
     if regressions:
         print(f"\n{len(regressions)} regression(s):", file=sys.stderr)
         for r in regressions:

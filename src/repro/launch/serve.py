@@ -64,6 +64,14 @@ def main(argv=None):
                     help="paged: prompt tokens fed per chunk step")
     ap.add_argument("--n-pages", type=int, default=None,
                     help="paged: pool size in pages (default: slab parity)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="paged: share KV pages across requests with a "
+                         "radix prefix index (greedy outputs unchanged)")
+    ap.add_argument("--shared-prefix-len", type=int, default=0,
+                    help="workload: open every prompt with a template "
+                         "prefix of this many tokens (0 = off)")
+    ap.add_argument("--n-templates", type=int, default=1,
+                    help="workload: distinct template prefixes to cycle")
     args = ap.parse_args(argv)
 
     from repro.run import RunSpec, ServeSection
@@ -86,6 +94,9 @@ def main(argv=None):
             page_size=args.page_size,
             prefill_chunk=args.prefill_chunk,
             n_pages=args.n_pages,
+            prefix_cache=args.prefix_cache,
+            shared_prefix_len=args.shared_prefix_len,
+            n_templates=args.n_templates,
         ),
     )
     return run_spec(spec)["exit_code"]

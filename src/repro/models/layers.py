@@ -367,6 +367,22 @@ def paged_cache_insert(cache, k_new, v_new, page_table, pos, n_valid):
     return out
 
 
+def paged_copy_pages(cache, src, dst):
+    """Copy-on-write content copy: pool pages ``src[i] -> dst[i]``.
+
+    ``cache`` is one paged-attention pool dict (``kp``/``vp`` + optional
+    int8 scales), either per-layer ``(n_pages+1, page, ...)`` or stacked
+    ``(n_blocks, n_pages+1, page, ...)``. The copy runs before the
+    owning slot's next ``paged_cache_insert`` writes into ``dst``, so a
+    shared source page is never mutated.
+    """
+    s = jnp.asarray(src, jnp.int32)
+    d = jnp.asarray(dst, jnp.int32)
+    if cache["kp"].ndim == 5:  # n_blocks-stacked: page axis 1
+        return {k: v.at[:, d].set(v[:, s]) for k, v in cache.items()}
+    return {k: v.at[d].set(v[s]) for k, v in cache.items()}
+
+
 def attention_decode_paged(params, x, cfg: ModelConfig, cache, page_table,
                            pos, n_valid, *, window=None):
     """C-token attention against the paged pool; returns (out, new_cache).

@@ -166,10 +166,12 @@ def _run_serve(spec: RunSpec) -> Dict[str, Any]:
         page_size=s.page_size,
         prefill_chunk=s.prefill_chunk,
         n_pages=s.n_pages,
+        prefix_cache=s.prefix_cache,
     )
     reqs = synthetic_requests(
         cfg, n=s.batch, tokens=s.tokens, prompt_len=s.prompt_len,
-        scenario=scenario, seed=spec.seed)
+        scenario=scenario, seed=spec.seed,
+        shared_prefix_len=s.shared_prefix_len, n_templates=s.n_templates)
 
     with mesh, use_rules(rules):
         engine = Engine(cfg, params, rules, scfg)
@@ -185,6 +187,11 @@ def _run_serve(spec: RunSpec) -> Dict[str, Any]:
     print(f"{spec.arch} [{scenario}, mode="
           f"{s.serve_mode or cfg.param_sharding}, "
           f"slots={scfg.max_batch}, kv={engine.layout}]: {report.format()}")
+    if report.prefix_hit_rate is not None:
+        print(f"  prefix cache: hit_rate {report.prefix_hit_rate:.3f}, "
+              f"{report.pages_shared} pages shared, "
+              f"{report.prefill_tokens_skipped} prefill tokens skipped, "
+              f"{report.cow_copies} cow copies")
     for req in sorted(report.requests, key=lambda r: r.id):
         print(f"  req {req.id}: prompt {req.prompt_len} -> "
               f"{len(req.tokens)} tokens {req.tokens}")

@@ -79,6 +79,9 @@ class ServeSection:
     page_size: int = 16         # paged: tokens per KV page
     prefill_chunk: int = 8      # paged: prompt tokens fed per chunk step
     n_pages: Optional[int] = None  # paged pool size; None -> slab parity
+    prefix_cache: bool = False  # paged: cross-request KV prefix sharing
+    shared_prefix_len: int = 0  # workload: template prefix tokens (0 off)
+    n_templates: int = 1        # workload: distinct shared templates
 
     def __post_init__(self):
         if self.kv_layout not in KV_LAYOUTS:
@@ -91,6 +94,14 @@ class ServeSection:
                 "serve.page_size and serve.prefill_chunk must be >= 1")
         if self.n_pages is not None and self.n_pages < 1:
             raise SpecError("serve.n_pages must be >= 1")
+        if self.prefix_cache and self.kv_layout == "slab":
+            raise SpecError(
+                "serve.prefix_cache shares paged-pool pages; it cannot "
+                "run with serve.kv_layout='slab'")
+        if self.shared_prefix_len < 0 or self.n_templates < 1:
+            raise SpecError(
+                "serve.shared_prefix_len must be >= 0 and "
+                "serve.n_templates >= 1")
 
 
 @dataclass(frozen=True)

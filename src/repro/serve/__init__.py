@@ -8,6 +8,7 @@ cache layout; ``benchmarks/serve_decode.py`` measures it.
 from repro.serve.cache import (
     PagePool,
     apply_defrag,
+    copy_pages,
     init_slab,
     invalidate_beyond,
     read_slot,
@@ -22,6 +23,7 @@ from repro.serve.engine import (
     synthetic_requests,
 )
 from repro.serve.metrics import ServeReport, StepTrace, percentile
+from repro.serve.prefix import PrefixIndex
 from repro.serve.request import Request, RequestState
 from repro.serve.scheduler import PagedScheduler, Scheduler
 
@@ -29,6 +31,7 @@ __all__ = [
     "Engine",
     "PagePool",
     "PagedScheduler",
+    "PrefixIndex",
     "Request",
     "RequestState",
     "Scheduler",
@@ -36,6 +39,7 @@ __all__ = [
     "ServeReport",
     "StepTrace",
     "apply_defrag",
+    "copy_pages",
     "init_slab",
     "invalidate_beyond",
     "percentile",

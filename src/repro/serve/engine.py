@@ -16,6 +16,24 @@ and is later re-prefilled from prompt + tokens-so-far (recompute-style,
 token-identical under greedy). Enc-dec stacks run their fixed-shape
 encoder once per admission into a dense per-slot cross slab.
 
+With ``prefix_cache=True`` the paged engine additionally shares KV
+**across requests**: every full page a slot writes is registered in a
+radix prefix index (``serve.prefix.PrefixIndex``, keyed on token ids at
+page granularity; enc-dec streams are namespaced by a digest of their
+media), and admission looks the stream up first — cached pages are
+mapped straight into the new slot's table (refcounted, see
+``cache.PagePool``), the budget is charged only for the *new* pages,
+and prefill starts at the first uncached token (fully-cached chunks are
+never fed). A stream whose every page is cached copy-on-writes the
+final page and re-feeds just its last token to produce logits. Under
+pool pressure the engine first evicts LRU unreferenced index entries,
+then preempts. Preempted requests resume *through the index*, so a
+victim's own surviving pages are rediscovered instead of recomputed.
+Cache hits change only host-side page tables, positions and lengths —
+never the compiled program — so the one-chunk-program contract holds,
+and greedy outputs are token-identical to the cache-off engine
+(tests/test_prefix.py).
+
 **slab** (recurrent/hybrid/VLM stacks, or ``kv_layout="slab"``): the
 PR 3 dense slot-slab with two compiled programs —
 
@@ -52,6 +70,7 @@ from repro.configs.base import ModelConfig
 from repro.dist import Rules, use_rules
 from repro.serve import cache as slab_ops
 from repro.serve.metrics import ServeReport, StepTrace
+from repro.serve.prefix import PrefixIndex
 from repro.serve.request import Request
 from repro.serve.scheduler import PagedScheduler, Scheduler
 from repro.train.steps import (
@@ -85,6 +104,7 @@ class ServeConfig:
     page_size: int = 16
     prefill_chunk: int = 8
     n_pages: Optional[int] = None
+    prefix_cache: bool = False   # cross-request KV sharing (paged only)
 
     def __post_init__(self):
         if self.kv_layout != "paged" and self.prefill_len > self.max_len:
@@ -130,6 +150,11 @@ class Engine:
                 f"stack; {cfg.name} has "
                 f"{'a recurrent mixer' if self._exact else 'a vision frontend'}"
                 f" — use kv_layout='slab'")
+        if self.scfg.prefix_cache and layout != "paged":
+            raise ValueError(
+                "prefix_cache shares pages of the paged KV pool; the slab "
+                "layout has no pages to share — use kv_layout='paged' "
+                "(or drop prefix_cache for this arch)")
         self.layout = layout
 
         if layout == "paged":
@@ -172,11 +197,25 @@ class Engine:
         self._trace: List[StepTrace] = []
         self._step_idx = 0
         self._preempted = 0
+        # Cross-request prefix-cache state (None/zeros when off or slab).
+        self._prefix: Optional[PrefixIndex] = None
+        self._ns: dict = {}                       # slot -> trie namespace
+        self._start: dict = {}                    # slot -> prefill offset
+        self._n_indexed = np.zeros((B,), np.int32)  # full pages registered
+        self._prefill_total = 0
+        self._prefill_skipped = 0
+        self._pages_shared = 0
+        self._cow = 0
         if self.layout == "paged":
             self._pool = slab_ops.PagePool(
                 self.scfg.pool_pages, self.scfg.page_size)
-            self.sched: Scheduler = PagedScheduler(
-                B, self._pool, self._admission_pages)
+            if self.scfg.prefix_cache:
+                self._prefix = PrefixIndex(self._pool, self.scfg.page_size)
+                self.sched: Scheduler = PagedScheduler(
+                    B, self._pool, acquire=self._acquire_paged)
+            else:
+                self.sched = PagedScheduler(
+                    B, self._pool, self._admission_pages)
             # Commit the fresh pools to the replicated sharding the chunk
             # program's outputs carry; otherwise the first call (fresh,
             # uncommitted arrays) and every later call (committed jit
@@ -206,6 +245,74 @@ class Engine:
         """Pages the pending prefill stream needs (prompt + any tokens
         generated before a preemption)."""
         return self._pool.pages_for(len(req.prompt) + len(req.tokens))
+
+    def _media_ns(self, req: Request):
+        """Trie namespace: enc-dec KV depends on the encoder input, so
+        only requests with bitwise-identical media may share pages."""
+        if req.media is None:
+            return None
+        import hashlib
+        return hashlib.sha1(
+            np.ascontiguousarray(np.asarray(req.media)).tobytes()).digest()
+
+    def _acquire_paged(self, slot: int, req: Request) -> bool:
+        """Prefix-cache admission: map the stream's longest cached
+        page-aligned prefix into ``slot`` (refcounted ``pool.share``),
+        charge the page budget only for the uncached tail, and stage the
+        prefill offset for :meth:`_admit_paged`. A stream whose every
+        page is cached copy-on-writes its final page (the slot re-feeds
+        just the last token to produce logits). All-or-nothing: on any
+        shortfall — even after evicting LRU index entries — every
+        mapping is rolled back and admission falls back to the plain
+        cache-off allocation, so the cache never admits *less* than the
+        cache-off engine would."""
+        stream = list(req.prompt) + list(req.tokens)
+        S = len(stream)
+        ps = self.scfg.page_size
+        need_total = self._pool.pages_for(S)
+        cached = self._prefix.lookup(stream, self._media_ns(req))
+        k = len(cached)
+        full_match = k > 0 and k * ps == S
+        # Shared pages cost nothing; the tail needs fresh pages (a full
+        # match needs exactly one, for the copy-on-write of page k-1).
+        need_new = 1 if full_match else need_total - k
+        if k:
+            self._pool.share(slot, cached)  # pins them against evict
+        if self._pool.free_pages < need_new:
+            self._prefix.evict(need_new - self._pool.free_pages)
+        ok = self._pool.free_pages >= need_new
+        if ok and full_match:
+            src, dst = self._pool.cow(slot, k - 1)
+            self._cache = slab_ops.copy_pages(self._cache, [src], [dst])
+            self._cow += 1
+        elif ok and need_new:
+            self._pool.alloc(slot, need_new)
+        if not ok:
+            # Roll back the shares; behave exactly like the cache-off
+            # admission (which may itself fail -> blocked queue head).
+            self._pool.free_slot(slot)
+            if not self._pool.alloc(slot, need_total):
+                return False
+            k = full_match = 0
+        start = S - 1 if full_match else k * ps
+        self._start[slot] = start
+        self._prefill_total += S
+        self._prefill_skipped += start
+        self._pages_shared += k
+        return True
+
+    def _register(self, slot: int, req: Request) -> None:
+        """Index every complete page ``slot`` has written (fed tokens are
+        always ``(prompt + tokens)[:pos]``). First-writer-wins in the
+        trie, so re-registering shared pages is a no-op touch."""
+        ps = self.scfg.page_size
+        full = int(self._pos[slot]) // ps
+        if full <= int(self._n_indexed[slot]):
+            return
+        seq = (list(req.prompt) + list(req.tokens))[:full * ps]
+        self._prefix.insert(seq, self._pool.slot_pages(slot)[:full],
+                            self._ns.get(slot))
+        self._n_indexed[slot] = full
 
     def submit(self, req: Request) -> None:
         """Register a request; it enters the queue at ``req.arrival_step``."""
@@ -261,6 +368,12 @@ class Engine:
             steps=list(self._trace),
             elapsed_s=time.perf_counter() - t0,
             preemptions=self._preempted,
+            prefix_hit_rate=(
+                self._prefill_skipped / max(self._prefill_total, 1)
+                if self._prefix is not None else None),
+            pages_shared=self._pages_shared,
+            prefill_tokens_skipped=self._prefill_skipped,
+            cow_copies=self._cow,
         )
         self.reset()
         return report
@@ -309,6 +422,8 @@ class Engine:
             raise ValueError("defrag is a paged-layout operation")
         perm = self._pool.defrag()
         self._cache = slab_ops.apply_defrag(self._cache, perm)
+        if self._prefix is not None:
+            self._prefix.remap(slab_ops.PagePool.remap_from_perm(perm))
         for slot in range(self.scfg.max_batch):
             self._ptab[slot] = self._pool.table_row(
                 slot, self.scfg.max_pages)
@@ -325,11 +440,16 @@ class Engine:
         """Stage the prefill stream; pages were reserved by the
         scheduler's budget check. Enc-dec: run the fixed-shape encoder
         into the slot's cross slab (one compile, any prompt length)."""
-        self._stream[slot] = list(req.prompt) + list(req.tokens)
-        self._pos[slot] = 0
+        stream = list(req.prompt) + list(req.tokens)
+        start = self._start.pop(slot, 0)  # first uncached token (prefix)
+        self._stream[slot] = stream[start:]
+        self._pos[slot] = start
         self._rid[slot] = req.id
         self._admit_seq[slot] = next(self._admit_counter)
         self._ptab[slot] = self._pool.table_row(slot, self.scfg.max_pages)
+        if self._prefix is not None:
+            self._ns[slot] = self._media_ns(req)
+            self._n_indexed[slot] = start // self.scfg.page_size
         if self.cfg.is_encdec:
             t0 = time.perf_counter()
             cross = self._encode_jit(
@@ -359,14 +479,21 @@ class Engine:
                         - len(self._pool.slot_pages(slot)))
                 if need > 0:
                     growth[slot] = need
-            if sum(growth.values()) <= self._pool.free_pages:
+            shortfall = sum(growth.values()) - self._pool.free_pages
+            if shortfall <= 0:
                 for slot in growth:
                     self._pool.ensure(slot, int(self._pos[slot]) + 1)
                 break
+            # Prefer dropping cold cache entries over evicting a live
+            # request; preempt only once the index has nothing to give.
+            if self._prefix is not None and self._prefix.evict(shortfall):
+                continue
             victim = max(active, key=lambda s: self._admit_seq[s])
             self.sched.preempt(victim)
             self._ptab[victim] = -1
             self._stream.pop(victim, None)
+            self._ns.pop(victim, None)
+            self._n_indexed[victim] = 0
             active.pop(victim)
             self._preempted += 1
         if not active:
@@ -402,6 +529,8 @@ class Engine:
         for slot, req in active.items():
             n = int(nv[slot])
             self._pos[slot] += n
+            if self._prefix is not None:
+                self._register(slot, req)
             stream = self._stream.get(slot)
             if stream:
                 self._stream[slot] = stream[n:]
@@ -423,6 +552,8 @@ class Engine:
         self.sched.retire(slot)  # frees the slot's pages too
         self._ptab[slot] = -1
         self._stream.pop(slot, None)
+        self._ns.pop(slot, None)
+        self._n_indexed[slot] = 0
         req.t_done = time.perf_counter()
         self._finished.append(req)
 
@@ -552,6 +683,8 @@ def scenario_driver(name: str):
 def synthetic_requests(cfg, *, n: int, tokens: int, prompt_len: int,
                        scenario: str = "offline", seed: int = 0,
                        prompt_lens: Optional[Sequence[int]] = None,
+                       shared_prefix_len: int = 0, n_templates: int = 1,
+                       suffix_spread: Optional[Sequence[int]] = None,
                        ) -> List[Request]:
     """Synthetic workload with mixed prompt lengths; the server scenario
     staggers arrivals so admissions interleave with in-flight decodes.
@@ -560,27 +693,50 @@ def synthetic_requests(cfg, *, n: int, tokens: int, prompt_len: int,
     the ``n`` requests) — serve benchmarks and tests pass a wide spread
     so ragged batches are the default exercise; ``None`` keeps the
     seeded random spread in ``[prompt_len // 2, prompt_len]``. Enc-dec
-    archs get encoder frames, VLM archs get vision patches."""
+    archs get encoder frames, VLM archs get vision patches.
+
+    ``shared_prefix_len > 0`` switches to the **shared-prefix** shape
+    real traffic has (system prompts / few-shot templates): request
+    ``i`` opens with template ``i % n_templates`` (each template is a
+    fixed ``shared_prefix_len``-token prefix) followed by a private
+    suffix — ``suffix_spread`` cycles explicit suffix lengths, else
+    every suffix is ``max(1, prompt_len - shared_prefix_len)`` tokens.
+    Same-template enc-dec requests also share their encoder media, so
+    the prefix cache's media-namespaced trie can match them."""
+    if shared_prefix_len < 0 or n_templates < 1:
+        raise ValueError("shared_prefix_len >= 0 and n_templates >= 1")
     rng = np.random.RandomState(seed)
+    templates = [rng.randint(0, cfg.vocab, size=shared_prefix_len).tolist()
+                 for _ in range(n_templates)] if shared_prefix_len else []
     reqs = []
     for i in range(n):
-        if prompt_lens:
-            p_len = max(1, int(prompt_lens[i % len(prompt_lens)]))
+        if shared_prefix_len:
+            if suffix_spread:
+                s_len = max(1, int(suffix_spread[i % len(suffix_spread)]))
+            else:
+                s_len = max(1, prompt_len - shared_prefix_len)
+            prompt = (templates[i % n_templates]
+                      + rng.randint(0, cfg.vocab, size=s_len).tolist())
         else:
-            lo = max(1, min(prompt_len // 2, prompt_len))
-            p_len = int(rng.randint(lo, max(lo + 1, prompt_len + 1)))
+            if prompt_lens:
+                p_len = max(1, int(prompt_lens[i % len(prompt_lens)]))
+            else:
+                lo = max(1, min(prompt_len // 2, prompt_len))
+                p_len = int(rng.randint(lo, max(lo + 1, prompt_len + 1)))
+            prompt = rng.randint(0, cfg.vocab, size=p_len).tolist()
         req = Request(
-            prompt=rng.randint(0, cfg.vocab, size=p_len).tolist(),
+            prompt=prompt,
             max_new_tokens=tokens,
             arrival_step=0 if scenario == "offline" else int(i * 2),
         )
+        media_key = i % n_templates if shared_prefix_len else i
         if cfg.is_encdec:
             req.media = np.asarray(jax.random.normal(
-                jax.random.PRNGKey(seed + i),
+                jax.random.PRNGKey(seed + media_key),
                 (cfg.enc_source_len, cfg.d_model)))
         elif cfg.frontend == "vision_patches":
             req.media = np.asarray(jax.random.normal(
-                jax.random.PRNGKey(seed + i),
+                jax.random.PRNGKey(seed + media_key),
                 (cfg.n_media_tokens, cfg.d_model)))
         reqs.append(req)
     return reqs

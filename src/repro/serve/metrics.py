@@ -46,6 +46,11 @@ class ServeReport:
     steps: List[StepTrace]
     elapsed_s: float
     preemptions: int = 0         # paged engine: pool-pressure evictions
+    # -- cross-request prefix cache (paged engine, serve.prefix) -------- #
+    prefix_hit_rate: Optional[float] = None  # skipped / total prefill toks
+    pages_shared: int = 0        # cached pages mapped into admitted slots
+    prefill_tokens_skipped: int = 0  # prompt tokens served from cache
+    cow_copies: int = 0          # shared pages privatized before a write
 
     # ------------------------------------------------------------------ #
     @property
@@ -78,6 +83,13 @@ class ServeReport:
                 "pool_util_mean": round(sum(utils) / len(utils), 4),
                 "pool_util_peak": round(max(utils), 4),
             }
+        if self.prefix_hit_rate is not None:
+            extra.update(
+                prefix_hit_rate=round(self.prefix_hit_rate, 4),
+                pages_shared=self.pages_shared,
+                prefill_tokens_skipped=self.prefill_tokens_skipped,
+                cow_copies=self.cow_copies,
+            )
         return {
             **extra,
             "requests": len(self.requests),

@@ -121,14 +121,26 @@ class PagedScheduler(Scheduler):
     blocks everyone behind it (strict FIFO — no starvation). Decode-time
     growth is allocated lazily by the engine, which preempts
     youngest-first via :meth:`Scheduler.preempt` when the pool runs dry.
+
+    With the cross-request prefix cache on, the engine passes
+    ``acquire(slot, req) -> bool`` instead of ``cost``: acquisition
+    looks the stream up in the prefix index, maps the cached pages into
+    the slot (``pool.share``) and charges the budget only for the *new*
+    pages the uncached tail needs — still all-or-nothing (a failed
+    acquire rolls every mapping back before returning False).
     """
 
-    def __init__(self, max_batch: int, pool, cost):
+    def __init__(self, max_batch: int, pool, cost=None, acquire=None):
+        if (cost is None) == (acquire is None):
+            raise ValueError("pass exactly one of cost / acquire")
         super().__init__(max_batch)
         self.pool = pool
         self._cost = cost
+        self._acquire = acquire
 
     def _can_admit(self, slot: int, req: Request) -> bool:
+        if self._acquire is not None:
+            return self._acquire(slot, req)
         return self.pool.alloc(slot, self._cost(req))
 
     def preempt(self, slot: int) -> Request:

@@ -1,0 +1,500 @@
+"""Cross-request KV prefix cache (PR 6): refcounted ``PagePool``
+invariants under randomized share/cache/cow/defrag sequences, the radix
+``PrefixIndex`` against a brute-force oracle, token identity of the
+cache-on vs cache-off paged engine (incl. enc-dec cross-attn slab
+interplay, preemption pressure and a mid-run defrag), and the
+resume-through-index regression (a preempted request's surviving pages
+are rediscovered, not recomputed)."""
+import random
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.dist import Rules, split_tree, use_rules
+from repro.launch.mesh import single_device_mesh
+from repro.serve import (
+    Engine,
+    PagePool,
+    PagedScheduler,
+    PrefixIndex,
+    Request,
+    ServeConfig,
+    run_offline,
+    run_server,
+)
+from repro.serve.engine import synthetic_requests
+from repro.train.steps import ModelAPI
+
+
+# --------------------------------------------------------------------------- #
+# PagePool refcount/share/cow semantics (pure python).
+# --------------------------------------------------------------------------- #
+def _check_refcounted_pool(pool: PagePool) -> None:
+    """Full-state invariants of the sharing-aware allocator."""
+    table_refs = [0] * pool.n_pages
+    for slot, pages in pool._slots.items():
+        for p in pages:
+            table_refs[p] += 1
+    for p in range(pool.n_pages):
+        assert pool.refcount(p) == table_refs[p], (
+            f"page {p}: refcount {pool.refcount(p)} != "
+            f"{table_refs[p]} table occurrences")
+    free = set(pool._free)
+    assert len(free) == len(pool._free), "free list has duplicates"
+    for p in free:
+        assert pool.refcount(p) == 0 and not pool.is_cached(p), (
+            f"page {p} free while referenced/cached")
+    # every non-free page is accounted for: referenced or cached
+    for p in set(range(pool.n_pages)) - free:
+        assert pool.refcount(p) > 0 or pool.is_cached(p), (
+            f"page {p} leaked: not free, not referenced, not cached")
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_page_pool_refcount_randomized(seed):
+    """Random alloc/share/cache/uncache/cow/free/defrag sequences keep
+    refcounts equal to page-table occurrences, never free a page that a
+    slot or the index can still see, and keep the free list duplicate-
+    free; defrag preserves every slot's logical page order and all
+    sharing (two slots mapping one physical page still map one page)."""
+    rng = random.Random(seed)
+    pool = PagePool(n_pages=12, page_size=4)
+    slots = list(range(4))
+    cached_by_us: set = set()
+    for _ in range(300):
+        op = rng.choice(["alloc", "share", "cache", "uncache", "cow",
+                         "free", "defrag"])
+        slot = rng.choice(slots)
+        if op == "alloc":
+            before = pool.free_pages
+            ok = pool.alloc(slot, rng.randint(0, 4))
+            if not ok:
+                assert pool.free_pages == before, "partial grant leaked"
+        elif op == "share":
+            donor = rng.choice(slots)
+            donor_pages = pool.slot_pages(donor)
+            if donor_pages:
+                take = donor_pages[: rng.randint(1, len(donor_pages))]
+                pool.share(slot, take)
+        elif op == "cache":
+            pages = pool.slot_pages(slot)
+            if pages:
+                pool.cache(pages[: rng.randint(1, len(pages))])
+                cached_by_us.update(pool._cached)
+        elif op == "uncache":
+            if pool._cached:
+                pick = rng.sample(sorted(pool._cached),
+                                  rng.randint(1, len(pool._cached)))
+                pool.uncache(pick)
+        elif op == "cow":
+            pages = pool.slot_pages(slot)
+            if pages and pool.free_pages > 0:
+                logical = rng.randrange(len(pages))
+                src = pages[logical]
+                shared = pool.is_shared(src)
+                out = pool.cow(slot, logical)
+                if shared:
+                    sp, dp = out
+                    assert sp == src and dp != src
+                    assert pool.slot_pages(slot)[logical] == dp
+                    assert pool.refcount(dp) == 1
+                else:
+                    assert out is None, "private page copied needlessly"
+        elif op == "free":
+            pool.free_slot(slot)
+        elif op == "defrag":
+            before = {s: pool.slot_pages(s) for s in slots}
+            shared_pairs = {
+                (a, b): [i for i in before[a] if i in before[b]]
+                for a in slots for b in slots if a < b
+            }
+            perm = pool.defrag()
+            after = {s: pool.slot_pages(s) for s in slots}
+            remap = PagePool.remap_from_perm(perm)
+            for s in slots:
+                assert after[s] == [remap[p] for p in before[s]], (
+                    "defrag broke a page table")
+            for (a, b), common in shared_pairs.items():
+                still = [i for i in after[a] if i in after[b]]
+                assert len(still) >= len(common), "defrag broke sharing"
+            # free list is the contiguous tail
+            assert sorted(pool._free) == list(
+                range(pool.n_pages - pool.free_pages, pool.n_pages))
+        _check_refcounted_pool(pool)
+
+
+def test_page_pool_share_cache_guardrails():
+    pool = PagePool(n_pages=4, page_size=2)
+    with pytest.raises(ValueError):
+        pool.share(0, [1])  # free page
+    with pytest.raises(ValueError):
+        pool.cache([2])     # free page
+    assert pool.alloc(0, 2)
+    p0, p1 = pool.slot_pages(0)
+    pool.cache([p0])
+    pool.free_slot(0)
+    # cached page survived free_slot; the other went back
+    assert pool.refcount(p0) == 0 and pool.is_cached(p0)
+    assert p1 in pool._free and p0 not in pool._free
+    assert pool.uncache([p0]) == 1
+    assert p0 in pool._free
+
+
+def test_page_pool_cow_exhaustion_raises():
+    pool = PagePool(n_pages=2, page_size=2)
+    assert pool.alloc(0, 2)
+    pool.share(1, pool.slot_pages(0)[:1])  # page now shared
+    with pytest.raises(RuntimeError):
+        pool.cow(0, 0)  # no free page for the copy
+
+
+def test_paged_scheduler_needs_exactly_one_policy():
+    pool = PagePool(4, 2)
+    with pytest.raises(ValueError):
+        PagedScheduler(2, pool)
+    with pytest.raises(ValueError):
+        PagedScheduler(2, pool, cost=lambda r: 1, acquire=lambda s, r: True)
+
+
+# --------------------------------------------------------------------------- #
+# Radix index vs brute-force oracle.
+# --------------------------------------------------------------------------- #
+def _insert_chain(pool, index, slot, tokens, ps):
+    """Back a token chain with freshly allocated pages and index it the
+    way the engine does (pages stay cached after the slot frees)."""
+    k = len(tokens) // ps
+    assert pool.alloc(slot, k)
+    pages = pool.slot_pages(slot)[-k:]
+    index.insert(tokens[: k * ps], pages)
+    return pages
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_prefix_index_matches_bruteforce_oracle(seed):
+    """lookup() returns exactly the longest page-aligned prefix shared
+    with ANY inserted stream (the trie's root paths are the prefix
+    closure of the inserted chains), and first-writer-wins keeps the
+    original page for every overlapping node."""
+    rng = random.Random(seed)
+    ps = 4
+    pool = PagePool(n_pages=64, page_size=ps)
+    index = PrefixIndex(pool, ps)
+    inserted = []  # (tokens, pages)
+    page_of_path = {}  # tuple(prefix tokens) -> physical page
+    for i in range(8):
+        if inserted and rng.random() < 0.5:
+            # branch off an existing stream at a page boundary
+            base, _ = rng.choice(inserted)
+            cut = ps * rng.randint(0, len(base) // ps)
+            tokens = list(base[:cut]) + [rng.randint(0, 9)
+                                         for _ in range(rng.randint(1, 10))]
+        else:
+            tokens = [rng.randint(0, 9) for _ in range(rng.randint(1, 14))]
+        pages = _insert_chain(pool, index, slot=i, tokens=tokens, ps=ps)
+        inserted.append((tokens, pages))
+        for j in range(len(tokens) // ps):
+            path = tuple(tokens[: (j + 1) * ps])
+            page_of_path.setdefault(path, pages[j])  # first writer
+        pool.free_slot(i)
+
+    for _ in range(50):
+        if rng.random() < 0.6 and inserted:
+            base, _ = rng.choice(inserted)
+            cut = rng.randint(0, len(base))
+            query = list(base[:cut]) + [rng.randint(0, 9)
+                                        for _ in range(rng.randint(0, 6))]
+        else:
+            query = [rng.randint(0, 9) for _ in range(rng.randint(0, 14))]
+        got = index.lookup(query)
+        oracle = 0
+        for tokens, _ in inserted:
+            k = 0
+            while ((k + 1) * ps <= min(len(tokens), len(query))
+                   and tokens[: (k + 1) * ps] == query[: (k + 1) * ps]):
+                k += 1
+            oracle = max(oracle, k)
+        assert len(got) == oracle, (query, got, oracle)
+        assert got == [page_of_path[tuple(query[: (j + 1) * ps])]
+                       for j in range(oracle)], "first-writer-wins violated"
+
+
+def test_prefix_index_namespaces_and_page_size_guard():
+    ps = 2
+    pool = PagePool(8, ps)
+    with pytest.raises(ValueError):
+        PrefixIndex(pool, ps + 1)
+    index = PrefixIndex(pool, ps)
+    assert pool.alloc(0, 2)
+    pages = pool.slot_pages(0)
+    index.insert([1, 2, 3, 4], pages, namespace=b"media-a")
+    assert index.lookup([1, 2, 3, 4], namespace=b"media-a") == pages
+    assert index.lookup([1, 2, 3, 4], namespace=b"media-b") == []
+    assert index.lookup([1, 2, 3, 4]) == []  # None namespace distinct
+
+
+def test_prefix_index_lru_leaf_eviction():
+    """Only refcount-0 leaves are evictable, LRU first; evicting a leaf
+    exposes its parent; pages flow back to the free list."""
+    ps = 2
+    pool = PagePool(8, ps)
+    index = PrefixIndex(pool, ps)
+    assert pool.alloc(0, 2)
+    chain_a = pool.slot_pages(0)
+    index.insert([1, 2, 3, 4], chain_a)        # a0 -> a1
+    assert pool.alloc(1, 1)
+    index.insert([5, 6], pool.slot_pages(1))   # b0
+    index.lookup([1, 2, 3, 4])                 # chain A is now most recent
+    pool.free_slot(0)
+    # b0's page is still slot-referenced: not evictable
+    assert index.evict(8) == 2                 # a1 then a0 (leaf first)
+    assert index.n_entries == 1
+    assert all(p in pool._free for p in chain_a)
+    pool.free_slot(1)
+    assert index.evict(8) == 1                 # now b0 can go
+    assert index.n_entries == 0
+    assert pool.free_pages == pool.n_pages
+
+
+def test_prefix_index_remap_follows_defrag():
+    ps = 2
+    pool = PagePool(8, ps)
+    index = PrefixIndex(pool, ps)
+    assert pool.alloc(0, 1) and pool.alloc(1, 2)
+    tokens = [7, 8, 9, 10]
+    index.insert(tokens, pool.slot_pages(1))
+    pool.free_slot(0)
+    perm = pool.defrag()
+    index.remap(PagePool.remap_from_perm(perm))
+    assert index.lookup(tokens) == pool.slot_pages(1), (
+        "index pages diverged from the defragged pool")
+
+
+# --------------------------------------------------------------------------- #
+# Engine: cache-on == cache-off, token for token.
+# --------------------------------------------------------------------------- #
+def _params_for(cfg):
+    api = ModelAPI(cfg)
+    params, _ = split_tree(api.init(cfg, jax.random.PRNGKey(0)))
+    return params
+
+
+def _tokens_by_order(report):
+    return [list(r.tokens) for r in
+            sorted(report.requests, key=lambda r: r.id)]
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch,mode", [("gemma-7b", "tp2d"),
+                                       ("whisper-medium", "replicated")])
+def test_prefix_cache_token_identity(arch, mode):
+    """Greedy outputs of the prefix-cached paged engine are identical to
+    the cache-off engine on a shared-prefix workload, the one-compiled-
+    chunk-program contract holds, and the cache measurably fires (pages
+    shared, prefill tokens skipped). Whisper runs the same check with
+    its dense cross-attn slab in play: same-media requests share decoder
+    pages, media is digest-namespaced."""
+    cfg = get_config(arch).reduced()
+    params = _params_for(cfg)
+    mesh = single_device_mesh()
+    rules = Rules(mesh, mode)
+
+    def workload():
+        return synthetic_requests(
+            cfg, n=6, tokens=5, prompt_len=12, scenario="server",
+            seed=3, shared_prefix_len=8, n_templates=2)
+
+    base = dict(max_batch=3, max_len=40, kv_layout="paged",
+                page_size=4, prefill_chunk=4)
+    with mesh, use_rules(rules):
+        off = Engine(cfg, params, rules, ServeConfig(**base))
+        want = _tokens_by_order(run_server(off, workload()))
+        eng = Engine(cfg, params, rules,
+                     ServeConfig(**base, prefix_cache=True))
+        report = run_server(eng, workload())
+    assert _tokens_by_order(report) == want
+    assert report.prefix_hit_rate is not None and report.prefix_hit_rate > 0
+    assert report.pages_shared > 0
+    assert report.prefill_tokens_skipped > 0
+    programs = {"chunk": 1, "encode": 1} if cfg.is_encdec else {"chunk": 1}
+    assert eng.compiled_programs() == programs, (
+        "prefix cache must not add compiled specializations")
+
+
+@pytest.mark.slow
+def test_prefix_cache_identity_under_preemption_and_defrag():
+    """Pool pressure (preemptions), LRU index eviction, a mid-run defrag
+    with live shared pages, and full-prompt-match COW all compose
+    without changing a single greedy token — and the chunk program still
+    compiles exactly once."""
+    cfg = get_config("gemma-7b").reduced()
+    params = _params_for(cfg)
+
+    def workload():
+        reqs = synthetic_requests(
+            cfg, n=6, tokens=8, prompt_len=12, scenario="offline",
+            seed=9, shared_prefix_len=8, n_templates=2)
+        # exact-duplicate prompt: a full-prompt match exercises COW
+        dup = Request(prompt=list(reqs[0].prompt), max_new_tokens=8)
+        return reqs + [dup]
+
+    base = dict(max_batch=3, max_len=32, kv_layout="paged",
+                page_size=4, prefill_chunk=4, n_pages=12)
+    off = Engine(cfg, params, None, ServeConfig(**base))
+    want = _tokens_by_order(run_offline(off, workload()))
+
+    eng = Engine(cfg, params, None, ServeConfig(**base, prefix_cache=True))
+    for r in workload():
+        r.arrival_step = 0
+        eng.submit(r)
+    for _ in range(6):
+        eng.step()
+    eng.defrag()  # compact mid-flight with shared + cached pages live
+    while eng._arrivals or eng.sched.has_work:
+        eng.step()
+    got = [list(r.tokens) for r in
+           sorted(eng._finished, key=lambda r: r.id)]
+    assert got == want
+    assert eng.compiled_programs() == {"chunk": 1}
+
+
+@pytest.mark.slow
+def test_full_prompt_match_cow_token_identity():
+    """An exact-duplicate prompt is a full-prompt match: every page is
+    served from the index, the final page is copy-on-written, and only
+    the last token is re-fed — with greedy output identical to the
+    cache-off engine and the shared source page left untouched for its
+    other holders."""
+    cfg = get_config("gemma-7b").reduced()
+    params = _params_for(cfg)
+    rng = np.random.RandomState(2)
+    prompt = rng.randint(0, cfg.vocab, size=8).tolist()  # 2 pages exactly
+
+    def workload():
+        return [Request(prompt=list(prompt), max_new_tokens=5)
+                for _ in range(3)]
+
+    # max_batch=1 serializes admissions: every later duplicate sees the
+    # warm index and full-matches
+    base = dict(max_batch=1, max_len=32, kv_layout="paged",
+                page_size=4, prefill_chunk=4)
+    off = Engine(cfg, params, None, ServeConfig(**base))
+    want = _tokens_by_order(run_offline(off, workload()))
+
+    eng = Engine(cfg, params, None, ServeConfig(**base, prefix_cache=True))
+    report = run_offline(eng, workload())
+    assert _tokens_by_order(report) == want
+    assert report.cow_copies == 2, "both duplicates should full-match"
+    assert report.pages_shared == 4
+    # per duplicate: 7 of 8 prompt tokens skipped (last token re-fed)
+    assert report.prefill_tokens_skipped == 14
+
+
+@pytest.mark.slow
+def test_preemption_resume_reuses_surviving_pages():
+    """Satellite regression: a preempted-then-resumed request re-enters
+    through the prefix index, so every one of its surviving full pages
+    is rediscovered (the resume lookup covers the full page-aligned
+    stream — zero redundant prefill) and greedy output is unchanged."""
+    cfg = get_config("gemma-7b").reduced()
+    params = _params_for(cfg)
+
+    def workload():
+        rng = np.random.RandomState(4)
+        # two DISTINCT prompts: any prefill skipping must come from the
+        # victim's own surviving pages, not cross-request sharing
+        return [Request(prompt=rng.randint(0, cfg.vocab, size=9).tolist(),
+                        max_new_tokens=10),
+                Request(prompt=rng.randint(0, cfg.vocab, size=10).tolist(),
+                        max_new_tokens=10)]
+
+    base = dict(max_batch=2, max_len=32, kv_layout="paged",
+                page_size=4, prefill_chunk=4, n_pages=8)
+    off = Engine(cfg, params, None, ServeConfig(**base))
+    r_off = run_offline(off, workload())
+    want = _tokens_by_order(r_off)
+    assert r_off.preemptions > 0, "workload must force a preemption"
+
+    eng = Engine(cfg, params, None, ServeConfig(**base, prefix_cache=True))
+    lookups = []
+    orig_lookup = eng._prefix.lookup
+
+    def spy(tokens, namespace=None):
+        out = orig_lookup(tokens, namespace)
+        lookups.append((len(tokens), len(out)))
+        return out
+
+    eng._prefix.lookup = spy
+    report = run_offline(eng, workload())
+    assert _tokens_by_order(report) == want
+    assert report.preemptions > 0
+    ps = base["page_size"]
+    resumes = [(n, k) for n, k in lookups if k > 0]
+    assert resumes, "the resumed request never hit the index"
+    # zero redundant prefill: the resume lookup found EVERY full page of
+    # the stream it was about to re-prefill
+    assert any(k == n // ps for n, k in resumes), (
+        f"no lookup achieved full page coverage: {lookups}")
+    assert report.prefill_tokens_skipped > 0
+
+
+# --------------------------------------------------------------------------- #
+# Workload generator + spec/CLI surface.
+# --------------------------------------------------------------------------- #
+def test_shared_prefix_workload_generator():
+    cfg = get_config("gemma-7b").reduced()
+    reqs = synthetic_requests(cfg, n=6, tokens=4, prompt_len=16, seed=0,
+                              shared_prefix_len=10, n_templates=2)
+    t0, t1 = reqs[0].prompt[:10], reqs[1].prompt[:10]
+    assert t0 != t1
+    for i, r in enumerate(reqs):
+        assert r.prompt[:10] == (t0 if i % 2 == 0 else t1)
+        assert len(r.prompt) == 16
+    suffixes = {tuple(r.prompt[10:]) for r in reqs}
+    assert len(suffixes) == 6, "private suffixes must differ"
+    spread = synthetic_requests(cfg, n=4, tokens=4, prompt_len=16, seed=0,
+                                shared_prefix_len=10, n_templates=2,
+                                suffix_spread=(2, 5))
+    assert [len(r.prompt) for r in spread] == [12, 15, 12, 15]
+    with pytest.raises(ValueError):
+        synthetic_requests(cfg, n=2, tokens=2, prompt_len=8,
+                           shared_prefix_len=-1)
+
+    wcfg = get_config("whisper-medium").reduced()
+    wreqs = synthetic_requests(wcfg, n=4, tokens=2, prompt_len=8, seed=0,
+                               shared_prefix_len=4, n_templates=2)
+    assert np.array_equal(wreqs[0].media, wreqs[2].media), (
+        "same-template enc-dec requests must share media")
+    assert not np.array_equal(wreqs[0].media, wreqs[1].media)
+
+
+def test_prefix_cache_rejects_slab_layout():
+    cfg = get_config("rwkv6-3b").reduced()  # recurrent -> slab only
+    params = _params_for(cfg)
+    with pytest.raises(ValueError):
+        Engine(cfg, params, None,
+               ServeConfig(kv_layout="slab", prefix_cache=True))
+    from repro.run.spec import ServeSection, SpecError
+    with pytest.raises(SpecError):
+        ServeSection(kv_layout="slab", prefix_cache=True)
+
+
+def test_bench_compare_treats_prefix_rows_as_new():
+    """A BENCH artifact that adds ``*_prefix_*`` serve rows diffs as
+    additions — never regressions — against a pre-prefix baseline."""
+    from repro.bench.compare import diff_rows
+
+    def artifact(names):
+        return {"tag": "x", "benchmarks": {"serve_decode": {
+            "status": "ok",
+            "records": [{"name": n, "wall_us": None} for n in names]}}}
+
+    old = artifact(["serve/g_offline", "serve/g_paged_offline"])
+    new = artifact(["serve/g_offline", "serve/g_paged_offline",
+                    "serve/g_prefix_offline", "serve/g_prefix_server"])
+    rows, regressions = diff_rows(old, new)
+    assert not regressions
+    status = {r["name"]: r["status"] for r in rows}
+    assert status["serve_decode:serve/g_prefix_offline"] == "new"
+    assert status["serve_decode:serve/g_prefix_server"] == "new"
