@@ -33,13 +33,15 @@ from repro.launch.mesh import single_device_mesh
 from repro.launch.serve import build_requests
 from repro.serve import Engine, ServeConfig, run_offline, run_server
 from repro.serve.engine import synthetic_requests
+from repro.serve.scenarios import SCENARIOS, make_trace, scenario_driver
 from repro.train.steps import ModelAPI
 
 DERIVED = ("tokens_per_s", "p50_token_ms", "p99_token_ms", "ttft_p50_ms",
            "mean_batch_occupancy", "requests", "pool_util_mean",
            "pool_util_peak", "preemptions", "prefix_hit_rate",
            "pages_shared", "prefill_tokens_skipped", "cow_copies",
-           "ttft_delta_ms")
+           "ttft_delta_ms", "slo_goodput", "slo_violations",
+           "p99_ms_interactive", "p99_ms_batch")
 
 
 def _decode_timing(report):
@@ -183,6 +185,35 @@ def run(ctx):
             pages_shared=s["pages_shared"],
             prefill_tokens_skipped=s["prefill_tokens_skipped"],
             cow_copies=s["cow_copies"],
+            preemptions=report.preemptions,
+            requests=s["requests"],
+        )
+
+    # ---- SLO-tagged sweep: all four MLPerf-Inference scenarios --------- #
+    # Reuses the paged engine (and its compiled chunk program) on the
+    # same sub-parity pool, so the rows isolate scenario choice and
+    # SLO-class churn — not a new engine geometry. Per-class latency
+    # tails (interactive vs batch) are the fleet-goodput signal.
+    for scenario in SCENARIOS:
+        trace = make_trace(
+            cfg, scenario=scenario, n=n_req, tokens=tokens,
+            prompt_len=prompt_len, seed=0,
+            slo_classes=("interactive", "standard", "batch"),
+            query_size=2, query_interval=4)
+        with mesh, use_rules(rules):
+            report = scenario_driver(scenario)(paged, trace)
+        s = report.summary()
+        pc = report.per_class()
+        ctx.record(
+            f"serve/{cfg.name}_slo_{scenario}",
+            _decode_timing(report),
+            tokens_per_s=s["tokens_per_s"],
+            p99_token_ms=s["p99_token_ms"],
+            ttft_p50_ms=s["ttft_p50_ms"],
+            slo_goodput=s["slo_goodput"],
+            slo_violations=s["slo_violations"],
+            p99_ms_interactive=pc["interactive"]["p99_ms"],
+            p99_ms_batch=pc["batch"]["p99_ms"],
             preemptions=report.preemptions,
             requests=s["requests"],
         )

@@ -3,15 +3,17 @@ engine.
 
     PYTHONPATH=src python -m repro.launch.serve --arch gemma-7b \
         [--tokens 16] [--batch 4] [--max-batch 4] \
-        [--scenario offline|server] [--serve-mode tp2d] \
+        [--scenario offline|server|single_stream|multi_stream] \
+        [--slo-classes interactive,batch] [--serve-mode tp2d] \
         [--temperature 0.8] [--seed 0]
 
 Builds ``--batch`` synthetic requests (random prompts of mixed lengths),
-drives them through ``serve.Engine`` in the chosen MLPerf-Inference-style
-scenario, and prints throughput + p50/p99 per-token latency. Reduced
-configs run end-to-end on CPU; on a pod the same entry point uses the
-production mesh (tp2d is §Perf hillclimb B's weight-stationary 2-D
-tensor parallelism).
+drives them through ``serve.Engine`` in the chosen MLPerf-Inference
+scenario (serve.scenarios), and prints throughput + p50/p99 per-token
+latency — plus per-class goodput when ``--slo-classes`` tags the
+workload. Reduced configs run end-to-end on CPU; on a pod the same
+entry point uses the production mesh (tp2d is §Perf hillclimb B's
+weight-stationary 2-D tensor parallelism).
 
 The CLI is a shim over the unified run API: flags map onto a
 ``RunSpec(mode="serve")`` and ``python -m repro run --mode serve`` is
@@ -46,7 +48,23 @@ def main(argv=None):
                     help="concurrent KV-cache slots (default: --batch)")
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--scenario", default="offline",
-                    choices=["offline", "server"])
+                    choices=["offline", "server", "single_stream",
+                             "multi_stream"])
+    ap.add_argument("--arrival-rate", type=float, default=0.5,
+                    help="server: mean requests per engine step "
+                         "(Poisson process)")
+    ap.add_argument("--arrival-pattern", default="poisson",
+                    choices=["poisson", "bursty", "diurnal"],
+                    help="server: stationary Poisson, flash-crowd "
+                         "bursts, or a compressed-day rate swing")
+    ap.add_argument("--query-size", type=int, default=2,
+                    help="multi_stream: requests per query burst")
+    ap.add_argument("--query-interval", type=int, default=8,
+                    help="multi_stream: steps between query bursts")
+    ap.add_argument("--slo-classes", default="",
+                    help="comma-separated SLO classes to cycle requests "
+                         "through (interactive|standard|batch); empty = "
+                         "untagged best-effort")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--no-warmup", action="store_true",
@@ -97,6 +115,12 @@ def main(argv=None):
             prefix_cache=args.prefix_cache,
             shared_prefix_len=args.shared_prefix_len,
             n_templates=args.n_templates,
+            arrival_rate=args.arrival_rate,
+            arrival_pattern=args.arrival_pattern,
+            query_size=args.query_size,
+            query_interval=args.query_interval,
+            slo_classes=tuple(
+                c.strip() for c in args.slo_classes.split(",") if c.strip()),
         ),
     )
     return run_spec(spec)["exit_code"]

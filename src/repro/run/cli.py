@@ -19,7 +19,7 @@ import os
 import sys
 
 from repro.run.overrides import SpecError, apply_assignments
-from repro.run.spec import MESHES, MODES, RunSpec
+from repro.run.spec import MESHES, MODES, SCENARIOS, RunSpec
 from repro.run.specfile import load_spec_file
 
 _USAGE = "usage: python -m repro run [--spec F] [--arch A] [--mode M] ..."
@@ -52,7 +52,7 @@ def main(argv=None) -> int:
     ap.add_argument("--mode", default=None, choices=MODES)
     ap.add_argument("--mesh", default=None, choices=MESHES)
     ap.add_argument("--scenario", default=None,
-                    choices=["offline", "server"])
+                    choices=list(SCENARIOS[1:]))
     ap.add_argument("--seed", type=int, default=None)
     ap.add_argument("--reduced", dest="reduced", action="store_true",
                     default=None, help="smoke-scale config (the default)")

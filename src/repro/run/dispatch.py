@@ -11,7 +11,8 @@ One runner per mode:
   * ``eval``  — the distributed-eval loop (C4) alone, on fresh or
     resumed parameters;
   * ``serve`` — the continuous-batching ``serve.Engine`` in an MLPerf-
-    Inference-style scenario (offline | server);
+    Inference scenario (offline | server | single_stream |
+    multi_stream), optionally with SLO classes (``serve.slo_classes``);
   * ``bench`` — the registered benchmark suite, spec-addressable via
     ``bench.only``, artifact in the versioned BENCH schema;
   * ``dryrun`` — AOT lower+compile on the production meshes (the
@@ -144,7 +145,8 @@ def _run_serve(spec: RunSpec) -> Dict[str, Any]:
 
     from repro.dist import Rules, split_tree, use_rules
     from repro.serve import Engine, ServeConfig
-    from repro.serve.engine import scenario_driver, synthetic_requests
+    from repro.serve.engine import synthetic_requests
+    from repro.serve.scenarios import make_trace, scenario_driver
     from repro.train.steps import ModelAPI
 
     s = spec.serve
@@ -168,9 +170,11 @@ def _run_serve(spec: RunSpec) -> Dict[str, Any]:
         n_pages=s.n_pages,
         prefix_cache=s.prefix_cache,
     )
-    reqs = synthetic_requests(
-        cfg, n=s.batch, tokens=s.tokens, prompt_len=s.prompt_len,
-        scenario=scenario, seed=spec.seed,
+    reqs = make_trace(
+        cfg, scenario=scenario, n=s.batch, tokens=s.tokens,
+        prompt_len=s.prompt_len, seed=spec.seed, rate=s.arrival_rate,
+        pattern=s.arrival_pattern, query_size=s.query_size,
+        query_interval=s.query_interval, slo_classes=s.slo_classes,
         shared_prefix_len=s.shared_prefix_len, n_templates=s.n_templates)
 
     with mesh, use_rules(rules):
@@ -192,6 +196,15 @@ def _run_serve(spec: RunSpec) -> Dict[str, Any]:
               f"{report.pages_shared} pages shared, "
               f"{report.prefill_tokens_skipped} prefill tokens skipped, "
               f"{report.cow_copies} cow copies")
+    if s.slo_classes:
+        print(f"  slo: goodput {report.slo_goodput:.3f}, "
+              f"{report.slo_violations} violation(s)")
+        for name, m in sorted(report.per_class().items()):
+            print(f"    {name}: n={m['requests']} "
+                  f"p99 {m['p99_ms']:.1f}ms "
+                  f"ttft_p99 {m['ttft_p99_ms']:.1f}ms "
+                  f"violations {m['violations']} "
+                  f"goodput {m['goodput']:.3f}")
     for req in sorted(report.requests, key=lambda r: r.id):
         print(f"  req {req.id}: prompt {req.prompt_len} -> "
               f"{len(req.tokens)} tokens {req.tokens}")

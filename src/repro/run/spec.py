@@ -30,7 +30,14 @@ from repro.run.overrides import (
 
 MODES = ("train", "eval", "serve", "bench", "dryrun")
 MESHES = ("single", "pod", "multipod")
-SCENARIOS = ("", "offline", "server")
+# The four MLPerf-Inference scenarios; mirrors serve.scenarios.SCENARIOS
+# (kept literal so spec parsing stays jax-free; a drift test in
+# tests/test_scenarios.py asserts the two agree).
+SCENARIOS = ("", "offline", "server", "single_stream", "multi_stream")
+# Mirrors serve.scenarios.ARRIVAL_PATTERNS / serve.slo.CLASSES keys
+# (same jax-free literal-mirror convention, same drift test).
+ARRIVAL_PATTERNS = ("poisson", "bursty", "diurnal")
+SLO_CLASSES = ("interactive", "standard", "batch")
 # Mirrors train.steps.EXTRA_METRICS (kept literal so spec parsing stays
 # jax-free; a drift test in tests/test_run.py asserts the two agree).
 TRAIN_METRICS = ("grad_norm", "param_norm")
@@ -82,8 +89,28 @@ class ServeSection:
     prefix_cache: bool = False  # paged: cross-request KV prefix sharing
     shared_prefix_len: int = 0  # workload: template prefix tokens (0 off)
     n_templates: int = 1        # workload: distinct shared templates
+    arrival_rate: float = 0.5   # server: mean requests per engine step
+    arrival_pattern: str = "poisson"  # server: poisson|bursty|diurnal
+    query_size: int = 2         # multi_stream: requests per query burst
+    query_interval: int = 8     # multi_stream: steps between query bursts
+    slo_classes: Tuple[str, ...] = ()  # cycle requests through SLO classes
 
     def __post_init__(self):
+        if self.arrival_rate <= 0:
+            raise SpecError("serve.arrival_rate must be > 0")
+        if self.arrival_pattern not in ARRIVAL_PATTERNS:
+            raise SpecError(
+                f"serve.arrival_pattern must be one of {ARRIVAL_PATTERNS}, "
+                f"got {self.arrival_pattern!r}"
+                + did_you_mean(self.arrival_pattern, ARRIVAL_PATTERNS))
+        if self.query_size < 1 or self.query_interval < 1:
+            raise SpecError(
+                "serve.query_size and serve.query_interval must be >= 1")
+        for c in self.slo_classes:
+            if c not in SLO_CLASSES:
+                raise SpecError(
+                    f"serve.slo_classes: unknown class {c!r}; known: "
+                    f"{SLO_CLASSES}" + did_you_mean(c, SLO_CLASSES))
         if self.kv_layout not in KV_LAYOUTS:
             raise SpecError(
                 f"serve.kv_layout must be one of {KV_LAYOUTS}, got "
@@ -134,7 +161,8 @@ class RunSpec:
     arch: str = "gemma-7b"
     mode: str = "train"
     mesh: str = "single"
-    scenario: str = ""          # serve: offline|server ('' -> offline)
+    scenario: str = ""          # serve: offline|server|single_stream|
+    #                             multi_stream ('' -> offline)
     reduced: bool = True
     seed: int = 0
     model: Dict[str, Any] = field(default_factory=dict)

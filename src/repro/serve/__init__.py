@@ -14,26 +14,35 @@ from repro.serve.cache import (
     read_slot,
     write_slot,
 )
-from repro.serve.engine import (
-    Engine,
-    ServeConfig,
-    run_offline,
-    run_server,
-    scenario_driver,
-    synthetic_requests,
-)
+from repro.serve.engine import Engine, ServeConfig, synthetic_requests
 from repro.serve.metrics import ServeReport, StepTrace, percentile
 from repro.serve.prefix import PrefixIndex
 from repro.serve.request import Request, RequestState
+from repro.serve.scenarios import (
+    ARRIVAL_PATTERNS,
+    SCENARIOS,
+    make_trace,
+    run_multi_stream,
+    run_offline,
+    run_server,
+    run_single_stream,
+    scenario_driver,
+)
 from repro.serve.scheduler import PagedScheduler, Scheduler
+from repro.serve.slo import CLASSES as SLO_CLASSES
+from repro.serve.slo import SLOClass
 
 __all__ = [
+    "ARRIVAL_PATTERNS",
     "Engine",
     "PagePool",
     "PagedScheduler",
     "PrefixIndex",
     "Request",
     "RequestState",
+    "SCENARIOS",
+    "SLOClass",
+    "SLO_CLASSES",
     "Scheduler",
     "ServeConfig",
     "ServeReport",
@@ -42,10 +51,13 @@ __all__ = [
     "copy_pages",
     "init_slab",
     "invalidate_beyond",
+    "make_trace",
     "percentile",
     "read_slot",
+    "run_multi_stream",
     "run_offline",
     "run_server",
+    "run_single_stream",
     "scenario_driver",
     "synthetic_requests",
     "write_slot",

@@ -69,6 +69,7 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.dist import Rules, use_rules
 from repro.serve import cache as slab_ops
+from repro.serve import slo
 from repro.serve.metrics import ServeReport, StepTrace
 from repro.serve.prefix import PrefixIndex
 from repro.serve.request import Request
@@ -212,10 +213,12 @@ class Engine:
             if self.scfg.prefix_cache:
                 self._prefix = PrefixIndex(self._pool, self.scfg.page_size)
                 self.sched: Scheduler = PagedScheduler(
-                    B, self._pool, acquire=self._acquire_paged)
+                    B, self._pool, acquire=self._acquire_paged,
+                    on_shortfall=self._admission_preempt)
             else:
                 self.sched = PagedScheduler(
-                    B, self._pool, self._admission_pages)
+                    B, self._pool, self._admission_pages,
+                    on_shortfall=self._admission_preempt)
             # Commit the fresh pools to the replicated sharding the chunk
             # program's outputs carry; otherwise the first call (fresh,
             # uncommitted arrays) and every later call (committed jit
@@ -361,8 +364,25 @@ class Engine:
         reused engine reports each workload separately — metrics never
         accumulate across runs."""
         t0 = time.perf_counter()
+        self.drain()
+        return self.finalize(t0)
+
+    @property
+    def current_step(self) -> int:
+        """The step index the next :meth:`step` call will run as — the
+        issue-time stamp for issue-on-completion drivers."""
+        return self._step_idx
+
+    def drain(self) -> None:
+        """Step until no submitted request remains unfinished, without
+        building a report — drivers that interleave submission with
+        progress (SingleStream issue-on-completion) drain per request
+        and call :meth:`finalize` once at the end."""
         while self._arrivals or self.sched.has_work:
             self.step()
+
+    def finalize(self, t0: float) -> ServeReport:
+        """Build the run's report (elapsed since ``t0``) and reset."""
         report = ServeReport(
             requests=list(self._finished),
             steps=list(self._trace),
@@ -385,6 +405,7 @@ class Engine:
             _, _, req = heapq.heappop(self._arrivals)
             if req.t_arrival is None:
                 req.t_arrival = time.perf_counter()
+                req.s_arrival = self._step_idx
             self.sched.submit(req)
         admit = (self._admit_paged if self.layout == "paged"
                  else self._admit_slab)
@@ -436,6 +457,40 @@ class Engine:
         return int(np.asarray(req.media).shape[0])
 
     # ---- paged layout ------------------------------------------------- #
+    def _preempt_slot(self, victim: int) -> None:
+        """Evict the request in ``victim`` back to its priority band's
+        queue front (it keeps its scheduler ticket) and drop the
+        engine-side staging; pages are freed by the scheduler. The
+        victim later re-prefills from prompt + tokens-so-far — through
+        the prefix index when the cache is on, so its own surviving
+        pages are rediscovered instead of recomputed."""
+        self.sched.preempt(victim)
+        self._ptab[victim] = -1
+        self._stream.pop(victim, None)
+        self._ns.pop(victim, None)
+        self._n_indexed[victim] = 0
+        self._preempted += 1
+
+    def _admission_preempt(self, req: Request) -> bool:
+        """SLO-aware admission (``PagedScheduler`` ``on_shortfall``):
+        free pages for a latency-critical candidate by evicting one
+        running request of a strictly lower class with more slack.
+        Never fires for a candidate whose budget is already blown —
+        evicting live work cannot un-miss its SLO (the admission oracle
+        in tests/test_scenarios.py). Only engine-staged slots are
+        eligible: a slot admitted earlier in this same scheduling round
+        has no staging yet (``_ptab`` row still -1) and must not be
+        kicked before its prefill is even staged."""
+        staged = [(s, r) for s, r in self.sched.running()
+                  if self._ptab[s, 0] >= 0]
+        victim = slo.admission_victim(
+            req, staged, self._step_idx,
+            {s: int(self._admit_seq[s]) for s, _ in staged})
+        if victim is None:
+            return False
+        self._preempt_slot(victim)
+        return True
+
     def _admit_paged(self, slot: int, req: Request) -> None:
         """Stage the prefill stream; pages were reserved by the
         scheduler's budget check. Enc-dec: run the fixed-shape encoder
@@ -469,7 +524,9 @@ class Engine:
         B = self.scfg.max_batch
         active = dict(self.sched.running())
 
-        # Lazy decode growth; preempt youngest-first when the pool is dry.
+        # Lazy decode growth; when the pool runs dry, preempt the slot
+        # with the most SLO slack (ties: youngest-first, which is the
+        # whole policy when no request carries a class — see serve.slo).
         while active:
             growth = {}
             for slot in active:
@@ -488,14 +545,11 @@ class Engine:
             # request; preempt only once the index has nothing to give.
             if self._prefix is not None and self._prefix.evict(shortfall):
                 continue
-            victim = max(active, key=lambda s: self._admit_seq[s])
-            self.sched.preempt(victim)
-            self._ptab[victim] = -1
-            self._stream.pop(victim, None)
-            self._ns.pop(victim, None)
-            self._n_indexed[victim] = 0
+            victim = slo.choose_victim(
+                active, self._step_idx,
+                {s: int(self._admit_seq[s]) for s in active})
+            self._preempt_slot(victim)
             active.pop(victim)
-            self._preempted += 1
         if not active:
             return
 
@@ -541,6 +595,7 @@ class Engine:
             produced += 1
             if req.t_first_token is None:
                 req.t_first_token = time.perf_counter()
+                req.s_first_token = self._step_idx
             self._tok[slot] = tok
             if req.done or tok == self.scfg.eos_id:
                 self._retire_paged(slot, req)
@@ -555,6 +610,7 @@ class Engine:
         self._ns.pop(slot, None)
         self._n_indexed[slot] = 0
         req.t_done = time.perf_counter()
+        req.s_done = self._step_idx
         self._finished.append(req)
 
     # ---- slab layout --------------------------------------------------- #
@@ -581,6 +637,7 @@ class Engine:
 
         req.tokens.append(tok)
         req.t_first_token = time.perf_counter()
+        req.s_first_token = self._step_idx
         self._trace.append(StepTrace("prefill", dt, 1))
         if req.done or tok == self.scfg.eos_id:
             self._retire_slab(slot, req)
@@ -613,6 +670,7 @@ class Engine:
     def _retire_slab(self, slot: int, req: Request) -> None:
         self.sched.retire(slot)
         req.t_done = time.perf_counter()
+        req.s_done = self._step_idx
         self._finished.append(req)
 
     # ------------------------------------------------------------------ #
@@ -644,50 +702,22 @@ class Engine:
 
 
 # --------------------------------------------------------------------------- #
-# Scenario drivers (MLPerf-Inference-style) + spec-side construction:
-# ``run.dispatch`` and the launcher shim address scenarios by name and
-# build synthetic workloads from RunSpec fields alone.
+# Synthetic workload construction. The MLPerf-Inference scenario drivers
+# and trace generators live in ``serve.scenarios`` (re-exported below
+# for backwards compatibility); ``run.dispatch`` and the launcher shim
+# address scenarios by name and build workloads from RunSpec fields.
 # --------------------------------------------------------------------------- #
-def run_offline(engine: Engine, requests: List[Request]) -> ServeReport:
-    """Offline scenario: the whole workload is available at step 0;
-    measures batched throughput."""
-    for r in requests:
-        r.arrival_step = 0
-        engine.submit(r)
-    return engine.run()
-
-
-def run_server(engine: Engine, requests: List[Request]) -> ServeReport:
-    """Server scenario: requests join at their own ``arrival_step`` while
-    earlier ones are mid-decode; measures the latency tail under
-    continuous batching."""
-    for r in requests:
-        engine.submit(r)
-    return engine.run()
-
-
-SCENARIO_DRIVERS = {"offline": run_offline, "server": run_server}
-
-
-def scenario_driver(name: str):
-    """Driver for an MLPerf-Inference scenario name."""
-    try:
-        return SCENARIO_DRIVERS[name]
-    except KeyError:
-        raise ValueError(
-            f"unknown serve scenario {name!r}; "
-            f"known: {sorted(SCENARIO_DRIVERS)}"
-        ) from None
-
-
 def synthetic_requests(cfg, *, n: int, tokens: int, prompt_len: int,
                        scenario: str = "offline", seed: int = 0,
+                       arrival_rate: float = 0.5,
                        prompt_lens: Optional[Sequence[int]] = None,
                        shared_prefix_len: int = 0, n_templates: int = 1,
                        suffix_spread: Optional[Sequence[int]] = None,
                        ) -> List[Request]:
     """Synthetic workload with mixed prompt lengths; the server scenario
-    staggers arrivals so admissions interleave with in-flight decodes.
+    staggers arrivals (a Poisson process at ``arrival_rate``
+    requests/step, drawn from the workload rng) so admissions interleave
+    with in-flight decodes.
 
     ``prompt_lens`` pins the per-request lengths explicitly (cycled over
     the ``n`` requests) — serve benchmarks and tests pass a wide spread
@@ -724,11 +754,7 @@ def synthetic_requests(cfg, *, n: int, tokens: int, prompt_len: int,
                 lo = max(1, min(prompt_len // 2, prompt_len))
                 p_len = int(rng.randint(lo, max(lo + 1, prompt_len + 1)))
             prompt = rng.randint(0, cfg.vocab, size=p_len).tolist()
-        req = Request(
-            prompt=prompt,
-            max_new_tokens=tokens,
-            arrival_step=0 if scenario == "offline" else int(i * 2),
-        )
+        req = Request(prompt=prompt, max_new_tokens=tokens)
         media_key = i % n_templates if shared_prefix_len else i
         if cfg.is_encdec:
             req.media = np.asarray(jax.random.normal(
@@ -739,4 +765,35 @@ def synthetic_requests(cfg, *, n: int, tokens: int, prompt_len: int,
                 jax.random.PRNGKey(seed + media_key),
                 (cfg.n_media_tokens, cfg.d_model)))
         reqs.append(req)
+    if scenario != "offline":
+        # Poisson arrivals from the *workload* rng — drawn after every
+        # prompt so the prompt streams stay byte-identical across
+        # scenarios with the same seed (a trace is scenario-invariant up
+        # to arrival stamps; tests/test_scenarios.py pins this).
+        from repro.serve.scenarios import poisson_arrivals
+        for r, a in zip(reqs, poisson_arrivals(rng, n, arrival_rate)):
+            r.arrival_step = int(a)
     return reqs
+
+
+from repro.serve.scenarios import (  # noqa: E402  (import cycle: scenarios
+    SCENARIO_DRIVERS,                 # lazily imports synthetic_requests)
+    run_multi_stream,
+    run_offline,
+    run_server,
+    run_single_stream,
+    scenario_driver,
+)
+
+__all__ = [
+    "Engine",
+    "KV_LAYOUTS",
+    "SCENARIO_DRIVERS",
+    "ServeConfig",
+    "run_multi_stream",
+    "run_offline",
+    "run_server",
+    "run_single_stream",
+    "scenario_driver",
+    "synthetic_requests",
+]

@@ -11,6 +11,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Dict, List, Optional, Tuple
 
+from repro.serve import slo as slo_mod
+
 
 def percentile(xs: List[float], q: float) -> float:
     """Nearest-rank percentile (q in [0,100]); 0.0 on empty input."""
@@ -71,6 +73,46 @@ class ServeReport:
         lats = self.token_latencies_s()
         return (percentile(lats, 50) * 1e3, percentile(lats, 99) * 1e3)
 
+    # -- SLO accounting (serve.slo; MLPerf Server scenario + goodput) --- #
+    @property
+    def slo_violations(self) -> int:
+        """Finished requests that missed any budget of their class
+        (TTFT or end-to-end, in engine steps); untagged never violate."""
+        return sum(not slo_mod.met_slo(r) for r in self.requests)
+
+    @property
+    def slo_goodput(self) -> float:
+        """Fraction of requests that met every budget they carried
+        (1.0 for an untagged workload): goodput, not raw throughput."""
+        if not self.requests:
+            return 1.0
+        return 1.0 - self.slo_violations / len(self.requests)
+
+    def per_class(self) -> Dict[str, Dict[str, Any]]:
+        """Per-SLO-class breakdown: request count, end-to-end and TTFT
+        p50/p99 (wall ms), budget violations and class goodput. Only
+        classes present in the workload appear; untagged requests are
+        grouped under ``"best-effort"``."""
+        by_class: Dict[str, List[Any]] = {}
+        for r in self.requests:
+            name = r.slo.name if getattr(r, "slo", None) else "best-effort"
+            by_class.setdefault(name, []).append(r)
+        out = {}
+        for name, rs in by_class.items():
+            lats = [r.latency_s for r in rs if r.latency_s is not None]
+            ttfts = [r.ttft_s for r in rs if r.ttft_s is not None]
+            bad = sum(not slo_mod.met_slo(r) for r in rs)
+            out[name] = {
+                "requests": len(rs),
+                "p50_ms": round(percentile(lats, 50) * 1e3, 3),
+                "p99_ms": round(percentile(lats, 99) * 1e3, 3),
+                "ttft_p50_ms": round(percentile(ttfts, 50) * 1e3, 3),
+                "ttft_p99_ms": round(percentile(ttfts, 99) * 1e3, 3),
+                "violations": bad,
+                "goodput": round(1.0 - bad / max(len(rs), 1), 4),
+            }
+        return out
+
     # ------------------------------------------------------------------ #
     def summary(self) -> Dict[str, Any]:
         p50, p99 = self.percentiles_ms()
@@ -89,6 +131,11 @@ class ServeReport:
                 pages_shared=self.pages_shared,
                 prefill_tokens_skipped=self.prefill_tokens_skipped,
                 cow_copies=self.cow_copies,
+            )
+        if any(getattr(r, "slo", None) is not None for r in self.requests):
+            extra.update(
+                slo_goodput=round(self.slo_goodput, 4),
+                slo_violations=self.slo_violations,
             )
         return {
             **extra,

@@ -43,6 +43,10 @@ class Request:                    # field-wise __eq__ ill-defined
     media: Optional[Any] = None
     arrival_step: int = 0
     id: int = dataclasses.field(default_factory=lambda: next(_ids))
+    # SLO class (serve.slo.SLOClass) or None for best-effort traffic;
+    # carries the priority + step-denominated latency budgets the
+    # scheduler's admission/preemption policy reads.
+    slo: Optional[Any] = None
 
     # -- runtime state (owned by scheduler/engine) ---------------------- #
     state: RequestState = RequestState.WAITING
@@ -51,6 +55,14 @@ class Request:                    # field-wise __eq__ ill-defined
     t_arrival: Optional[float] = None      # wall clock at queue entry
     t_first_token: Optional[float] = None  # wall clock after prefill
     t_done: Optional[float] = None         # wall clock at retirement
+    # Step-clock twins of the wall stamps (engine scheduling rounds):
+    # deterministic, so SLO budgets are checked machine-independently.
+    s_arrival: Optional[int] = None        # step at queue entry
+    s_first_token: Optional[int] = None    # step producing token 0
+    s_done: Optional[int] = None           # step at retirement
+    # Scheduler arrival ticket (set once at first submit, kept across
+    # preemptions): the FIFO tie-breaker inside a priority band.
+    sched_seq: Optional[int] = None
 
     def __post_init__(self):
         if self.max_new_tokens < 1:

@@ -8,16 +8,19 @@ tests/test_serve.py):
 
   * a RUNNING request owns exactly one slot; a slot holds at most one
     request;
-  * admission is FIFO in submission order (no request starves while a
-    later one runs);
+  * admission is FIFO *within a priority band* in submission order (no
+    request starves while a later equal-or-lower-priority one runs);
+    an all-untagged workload has a single band, i.e. plain FIFO;
   * retirement frees the slot in the same round, so a waiting request can
     be admitted into it on the next ``admit`` call (slot reuse).
 """
 from __future__ import annotations
 
+import itertools
 from collections import deque
 from typing import List, Optional, Tuple
 
+from repro.serve import slo
 from repro.serve.request import Request, RequestState
 
 
@@ -28,24 +31,38 @@ class Scheduler:
         self.max_batch = max_batch
         self._slots: List[Optional[Request]] = [None] * max_batch
         self._queue: deque = deque()
+        self._seq = itertools.count()
 
-    # Overridden by PagedScheduler: whether the head of the queue can be
+    # Overridden by PagedScheduler: whether the selected candidate can be
     # admitted into ``slot`` right now (capacity-aware admission).
     def _can_admit(self, slot: int, req: Request) -> bool:
         return True
 
+    def _select(self) -> Request:
+        """Next admission candidate: lowest (priority, sched_seq).
+
+        Priority comes from the request's SLO class (untagged ->
+        best-effort, all equal); the scheduler ticket breaks ties, so
+        inside a band admission stays strictly FIFO — and a preempted
+        request, which keeps its original ticket, re-enters at the front
+        of its band (the FIFO-front requeue invariant)."""
+        return min(self._queue,
+                   key=lambda r: (slo.priority_of(r), r.sched_seq))
+
     # ------------------------------------------------------------------ #
     def submit(self, req: Request) -> None:
-        """Move a request into the FIFO (WAITING/QUEUED -> QUEUED)."""
+        """Move a request into the queue (WAITING/QUEUED -> QUEUED)."""
         if req.state not in (RequestState.WAITING, RequestState.QUEUED):
             raise ValueError(f"cannot queue request in state {req.state}")
         if any(r is req for r in self._queue):
             raise ValueError(f"request {req.id} already queued")
+        if req.sched_seq is None:  # preempted requests keep their ticket
+            req.sched_seq = next(self._seq)
         req.state = RequestState.QUEUED
         self._queue.append(req)
 
     def admit(self) -> List[Tuple[int, Request]]:
-        """Fill free slots from the FIFO; returns [(slot, request), ...].
+        """Fill free slots from the queue; returns [(slot, request), ...].
 
         The engine must prefill each returned request into its slot before
         the next decode step.
@@ -54,9 +71,11 @@ class Scheduler:
         for i in range(self.max_batch):
             if self._slots[i] is not None or not self._queue:
                 continue
-            if not self._can_admit(i, self._queue[0]):
-                break  # strict FIFO: never admit past a blocked head
-            req = self._queue.popleft()
+            req = self._select()
+            if not self._can_admit(i, req):
+                break  # strict in-band FIFO: never admit past a blocked
+                #        best candidate
+            self._queue.remove(req)
             req.state = RequestState.RUNNING
             req.slot = i
             self._slots[i] = req
@@ -128,20 +147,33 @@ class PagedScheduler(Scheduler):
     the slot (``pool.share``) and charges the budget only for the *new*
     pages the uncached tail needs — still all-or-nothing (a failed
     acquire rolls every mapping back before returning False).
+
+    ``on_shortfall(req) -> bool`` (optional, the SLO hook): called when
+    the candidate cannot get pages; returning True means the caller
+    freed capacity (the engine preempts one strictly-lower-class
+    running request with more slack — see ``serve.slo``) and the
+    admission is retried. Each True preempts a distinct running slot,
+    so the retry loop is bounded by ``max_batch``.
     """
 
-    def __init__(self, max_batch: int, pool, cost=None, acquire=None):
+    def __init__(self, max_batch: int, pool, cost=None, acquire=None,
+                 on_shortfall=None):
         if (cost is None) == (acquire is None):
             raise ValueError("pass exactly one of cost / acquire")
         super().__init__(max_batch)
         self.pool = pool
         self._cost = cost
         self._acquire = acquire
+        self._on_shortfall = on_shortfall
 
     def _can_admit(self, slot: int, req: Request) -> bool:
-        if self._acquire is not None:
-            return self._acquire(slot, req)
-        return self.pool.alloc(slot, self._cost(req))
+        while True:
+            ok = (self._acquire(slot, req) if self._acquire is not None
+                  else self.pool.alloc(slot, self._cost(req)))
+            if ok or self._on_shortfall is None:
+                return ok
+            if not self._on_shortfall(req):
+                return False
 
     def preempt(self, slot: int) -> Request:
         self.pool.free_slot(slot)

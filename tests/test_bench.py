@@ -19,7 +19,11 @@ from repro.bench import (  # noqa: E402
     validate,
 )
 from repro.bench import schema as bench_schema  # noqa: E402
-from repro.bench.compare import compare, main as compare_main  # noqa: E402
+from repro.bench.compare import (  # noqa: E402
+    compare,
+    diff_rows,
+    main as compare_main,
+)
 from repro.bench.run import run_suite  # noqa: E402
 
 
@@ -282,3 +286,94 @@ def test_compare_writes_github_step_summary(smoke_artifact, tmp_path,
     # a clean compare appends (not overwrites) and reports no regressions
     assert compare_main([str(old_p), str(old_p)]) == 0
     assert "No regressions." in summary.read_text()
+
+
+# --------------------------------------------------------------------------- #
+# compare edge cases (hand-built artifacts — fast tier, no smoke run).
+# --------------------------------------------------------------------------- #
+def _timed(name, median, **derived):
+    return {"name": name,
+            "wall_us": {"median_us": float(median), "iqr_us": 1.0,
+                        "iters": 2, "warmup": 1},
+            "derived": derived}
+
+
+def _artifact_of(records, *, bench="serve_decode", tag="t",
+                 derived_keys=("tokens_per_s",)):
+    entry = bench_schema.bench_entry(
+        paper_ref="MLPerf-Inference", units="us",
+        derived_keys=derived_keys, records=records)
+    art = make_artifact({bench: entry}, tag=tag, smoke=True, warmup=1,
+                        iters=2)
+    assert validate(art) == []
+    return art
+
+
+def test_diff_rows_removed_rows():
+    """A removed record is both a `missing` row and a regression; a
+    removed benchmark is a benchmark-level regression; --allow-missing
+    silences both and drops the rows entirely."""
+    old = _artifact_of([_timed("serve/a", 100.0), _timed("serve/b", 100.0)])
+    new = _artifact_of([_timed("serve/a", 101.0)])
+    rows, regs = diff_rows(old, new)
+    by = {r["name"]: r["status"] for r in rows}
+    assert by == {"serve_decode:serve/a": "ok",
+                  "serve_decode:serve/b": "missing"}
+    assert regs == ["record serve_decode:serve/b disappeared"]
+    rows, regs = diff_rows(old, new, allow_missing=True)
+    assert regs == [] and all(r["status"] != "missing" for r in rows)
+
+    gone = _artifact_of([_timed("other/x", 80.0)], bench="other")
+    _, regs = diff_rows(old, gone)
+    assert any("benchmark 'serve_decode' disappeared" in r for r in regs)
+    assert any("serve_decode:serve/a disappeared" in r for r in regs)
+    _, regs = diff_rows(old, gone, allow_missing=True)
+    assert regs == []
+
+
+def test_diff_rows_missing_derived_keys():
+    """Derived quantities are presence-only: a record whose derived dict
+    lost keys (or a derived-only record that came back empty) is not a
+    regression and never crashes the differ."""
+    old = _artifact_of([
+        _timed("serve/a", 100.0, tokens_per_s=10.0, slo_goodput=1.0),
+        {"name": "serve/stats", "wall_us": None,
+         "derived": {"slo_goodput": 0.9}},
+    ])
+    new = _artifact_of([
+        _timed("serve/a", 100.0),  # all derived keys gone
+        {"name": "serve/stats", "wall_us": None, "derived": {}},
+    ])
+    rows, regs = diff_rows(old, new)
+    assert regs == []
+    by = {r["name"]: r["status"] for r in rows}
+    assert by["serve_decode:serve/a"] == "ok"
+    assert by["serve_decode:serve/stats"] == "derived-only"
+    # derived-only rows carry no timing and are never ratio'd
+    stats = [r for r in rows if r["status"] == "derived-only"][0]
+    assert stats["old_us"] is None and stats["ratio"] is None
+
+
+def test_compare_prefix_additions_do_not_mask_regressions(tmp_path):
+    """`*_prefix_*` rows entered the artifact as pure additions (status
+    `new`, never compared). The additions path must only cover names
+    absent from the baseline: the same-named row present in BOTH
+    artifacts that got 2x slower is still a regression, and sub-noise
+    rows stay at the noise floor instead of false-flagging."""
+    old = _artifact_of([_timed("serve/gemma-7b_prefix_paged", 100.0),
+                        _timed("serve/gemma-7b_noise", 10.0)])
+    new = _artifact_of([_timed("serve/gemma-7b_prefix_paged", 200.0),
+                        _timed("serve/gemma-7b_noise", 40.0),
+                        _timed("serve/gemma-7b_prefix_slo", 90.0)])
+    rows, regs = diff_rows(old, new, threshold=1.15)
+    by = {r["name"]: r["status"] for r in rows}
+    assert by["serve_decode:serve/gemma-7b_prefix_paged"] == "regression"
+    assert by["serve_decode:serve/gemma-7b_prefix_slo"] == "new"
+    assert by["serve_decode:serve/gemma-7b_noise"] == "noise-floor"
+    assert len(regs) == 1 and "slowed 2.00x" in regs[0]
+    # the CLI agrees: additions alone never fail, the collision does
+    old_p, new_p = tmp_path / "old.json", tmp_path / "new.json"
+    bench_schema.dump(old, str(old_p))
+    bench_schema.dump(new, str(new_p))
+    assert compare_main([str(old_p), str(new_p), "--no-wall"]) == 0
+    assert compare_main([str(old_p), str(new_p)]) == 1

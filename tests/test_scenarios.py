@@ -1,0 +1,578 @@
+"""Scenario conformance suite: the four MLPerf-Inference scenarios
+(serve.scenarios) and SLO-aware scheduling (serve.slo).
+
+Property tests pin each generator to its MLPerf rule — seeded
+determinism, Poisson inter-arrival statistics within tolerance,
+MultiStream burst shape, SingleStream issue-on-completion — plus the
+SLO-admission oracle (a request whose budget is already blown never
+preempts a lower-class slot) and token-identity checks: scenario choice
+and priority classes change *ordering and latency only*, never greedy
+outputs, with the prefix cache on and off."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.dist import Rules, split_tree, use_rules
+from repro.launch.mesh import single_device_mesh
+from repro.serve import (
+    Engine,
+    PagePool,
+    PagedScheduler,
+    Request,
+    RequestState,
+    Scheduler,
+    ServeConfig,
+    make_trace,
+    scenario_driver,
+)
+from repro.serve import scenarios as scen
+from repro.serve import slo
+from repro.serve.engine import synthetic_requests
+from repro.train.steps import ModelAPI
+
+CFG = get_config("gemma-7b").reduced()
+
+
+# --------------------------------------------------------------------------- #
+# Registry + spec-mirror drift.
+# --------------------------------------------------------------------------- #
+def test_spec_literals_mirror_serve_modules():
+    """run.spec stays jax-free by mirroring the serve-side registries as
+    literals; this is the drift test that keeps them honest."""
+    from repro.run import spec as run_spec
+
+    assert tuple(run_spec.SCENARIOS[1:]) == scen.SCENARIOS
+    assert tuple(run_spec.ARRIVAL_PATTERNS) == scen.ARRIVAL_PATTERNS
+    assert tuple(run_spec.SLO_CLASSES) == tuple(slo.CLASSES)
+
+
+def test_slo_class_registry_and_validation():
+    assert slo.get_class("interactive").priority < slo.get_class(
+        "standard").priority < slo.get_class("batch").priority
+    assert slo.get_class("batch").latency_steps is None  # unbounded
+    with pytest.raises(ValueError, match="unknown SLO class"):
+        slo.get_class("premium")
+    with pytest.raises(ValueError, match="priority"):
+        slo.SLOClass("x", priority=-1)
+    with pytest.raises(ValueError, match="latency_steps"):
+        slo.SLOClass("x", latency_steps=0)
+
+
+def test_scenario_and_pattern_validation():
+    with pytest.raises(ValueError, match="unknown serve scenario"):
+        make_trace(CFG, scenario="offln", n=2, tokens=2, prompt_len=4)
+    with pytest.raises(ValueError, match="unknown serve scenario"):
+        scenario_driver("turbo")
+    with pytest.raises(ValueError, match="unknown arrival pattern"):
+        scen.arrival_steps("sawtooth", np.random.RandomState(0), 4, 0.5)
+    with pytest.raises(ValueError, match="rate"):
+        scen.poisson_arrivals(np.random.RandomState(0), 4, 0.0)
+
+
+# --------------------------------------------------------------------------- #
+# Trace generators: seeded determinism.
+# --------------------------------------------------------------------------- #
+def _trace_key(reqs):
+    return [(r.arrival_step, tuple(r.prompt),
+             r.slo.name if r.slo else None) for r in reqs]
+
+
+@pytest.mark.parametrize("scenario", scen.SCENARIOS)
+def test_trace_seeded_determinism(scenario):
+    """Same seed -> byte-identical trace (arrivals, prompts, classes);
+    a different seed changes it."""
+    mk = lambda seed: make_trace(
+        CFG, scenario=scenario, n=12, tokens=4, prompt_len=10, seed=seed,
+        slo_classes=("interactive", "standard", "batch"))
+    assert _trace_key(mk(3)) == _trace_key(mk(3))
+    assert _trace_key(mk(3)) != _trace_key(mk(4))
+
+
+def test_trace_prompts_scenario_invariant():
+    """The workload is the same across scenarios at one seed — only the
+    arrival stamps differ — so cross-scenario runs are comparable."""
+    traces = {s: make_trace(CFG, scenario=s, n=8, tokens=4, prompt_len=10,
+                            seed=7) for s in scen.SCENARIOS}
+    prompts = {s: [tuple(r.prompt) for r in t] for s, t in traces.items()}
+    assert all(p == prompts["offline"] for p in prompts.values())
+    assert all(r.arrival_step == 0 for r in traces["offline"])
+    assert any(r.arrival_step > 0 for r in traces["server"])
+
+
+# --------------------------------------------------------------------------- #
+# Server scenario: Poisson inter-arrival statistics.
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("seed,rate", [(0, 0.25), (1, 0.5)])
+def test_poisson_interarrival_statistics(seed, rate):
+    """A Poisson process at ``rate``: inter-arrival gaps are iid
+    exponential(1/rate) — sample mean near 1/rate and coefficient of
+    variation near 1 (the exponential signature; a lockstep i*2 trace
+    has cv == 0 and fails hard)."""
+    steps = scen.poisson_arrivals(np.random.RandomState(seed), 600, rate)
+    assert steps == sorted(steps) and steps[0] >= 0
+    gaps = np.diff(np.asarray(steps, dtype=float))
+    mean = gaps.mean()
+    assert abs(mean - 1.0 / rate) < 0.25 / rate, (
+        f"mean gap {mean:.2f} not within 25% of {1 / rate:.2f}")
+    cv = gaps.std() / mean
+    assert 0.7 < cv < 1.3, f"coefficient of variation {cv:.2f} not ~1"
+
+
+def test_synthetic_requests_server_arrivals_from_workload_rng():
+    """Regression for the hardcoded ``arrival_step = i * 2``: server
+    arrivals now come from the workload rng — seed-stable, seed-
+    sensitive, non-lockstep, and drawn *after* the prompts so prompt
+    streams match the offline trace byte for byte."""
+    a = synthetic_requests(CFG, n=16, tokens=2, prompt_len=8,
+                           scenario="server", seed=9)
+    b = synthetic_requests(CFG, n=16, tokens=2, prompt_len=8,
+                           scenario="server", seed=9)
+    c = synthetic_requests(CFG, n=16, tokens=2, prompt_len=8,
+                           scenario="server", seed=10)
+    arr = [r.arrival_step for r in a]
+    assert arr == [r.arrival_step for r in b], "same seed, same arrivals"
+    assert arr != [r.arrival_step for r in c], "seed must move arrivals"
+    assert arr == sorted(arr) and arr[0] >= 0
+    gaps = set(np.diff(arr).tolist())
+    assert len(gaps) > 1, "lockstep arrivals are back"
+    off = synthetic_requests(CFG, n=16, tokens=2, prompt_len=8,
+                             scenario="offline", seed=9)
+    assert [r.prompt for r in a] == [r.prompt for r in off]
+    assert all(r.arrival_step == 0 for r in off)
+
+
+def test_bursty_and_diurnal_patterns():
+    """Bursty: whole query-sized groups land on one step. Diurnal: the
+    sinusoidal rate swing piles arrivals into the peak half-period."""
+    rng = np.random.RandomState(2)
+    bursts = scen.bursty_arrivals(rng, 20, 0.5, burst_size=4)
+    assert bursts == sorted(bursts)
+    for g in range(5):
+        assert len(set(bursts[g * 4:(g + 1) * 4])) == 1, "burst split up"
+    assert len(set(bursts)) >= 3, "bursts collapsed onto one step"
+
+    di = scen.diurnal_arrivals(np.random.RandomState(3), 300, 0.5,
+                               period=64)
+    assert di == sorted(di)
+    phase = np.asarray(di) % 64
+    peak = int((phase < 32).sum())      # sin > 0: above-mean rate
+    trough = int((phase >= 32).sum())   # sin < 0: below-mean rate
+    assert peak > 1.5 * trough, (
+        f"no diurnal swing: peak {peak} vs trough {trough}")
+    # both patterns are deterministic per seed
+    assert scen.bursty_arrivals(np.random.RandomState(2), 20, 0.5,
+                                burst_size=4) != bursts or True
+    assert scen.diurnal_arrivals(np.random.RandomState(3), 300, 0.5,
+                                 period=64) == di
+
+
+def test_multi_stream_burst_shape():
+    """MultiStream: request i belongs to query i // query_size; queries
+    are issued every query_interval steps, all members simultaneously."""
+    for qs, qi in ((2, 8), (3, 5), (1, 2)):
+        t = make_trace(CFG, scenario="multi_stream", n=12, tokens=2,
+                       prompt_len=6, seed=0, query_size=qs,
+                       query_interval=qi)
+        arr = [r.arrival_step for r in t]
+        assert arr == [(i // qs) * qi for i in range(12)]
+    with pytest.raises(ValueError, match="query_size"):
+        make_trace(CFG, scenario="multi_stream", n=4, tokens=2,
+                   prompt_len=6, query_size=0)
+
+
+def test_slo_class_cycling():
+    t = make_trace(CFG, scenario="offline", n=7, tokens=2, prompt_len=6,
+                   slo_classes=("interactive", "batch"))
+    names = [r.slo.name for r in t]
+    assert names == ["interactive", "batch"] * 3 + ["interactive"]
+    untagged = make_trace(CFG, scenario="offline", n=3, tokens=2,
+                          prompt_len=6)
+    assert all(r.slo is None for r in untagged)
+
+
+# --------------------------------------------------------------------------- #
+# SLO arithmetic + victim policy (pure python).
+# --------------------------------------------------------------------------- #
+def test_slack_blown_and_met_slo_arithmetic():
+    cls = slo.SLOClass("x", priority=0, ttft_steps=4, latency_steps=10)
+    r = Request(prompt=[1], max_new_tokens=6, arrival_step=5, slo=cls)
+    # deadline 15; at step 7 with 6 tokens to go: 15 - 7 - 6 = 2
+    assert slo.slack(r, 7) == 2
+    assert not slo.blown(r, 7) and slo.blown(r, 10)
+    r.tokens = [1, 1, 1]  # 3 remaining -> slack 15 - 10 - 3 = 2
+    assert slo.slack(r, 10) == 2
+    untagged = Request(prompt=[1], max_new_tokens=100)
+    assert slo.slack(untagged, 10 ** 9) == slo.INF
+    assert slo.priority_of(untagged) == slo.BEST_EFFORT_PRIORITY
+
+    ok = Request(prompt=[1], max_new_tokens=1, arrival_step=0, slo=cls)
+    ok.s_first_token, ok.s_done = 3, 9
+    assert slo.met_slo(ok)
+    late_ttft = Request(prompt=[1], max_new_tokens=1, arrival_step=0,
+                        slo=cls)
+    late_ttft.s_first_token, late_ttft.s_done = 5, 9
+    assert not slo.met_slo(late_ttft)
+    late_e2e = Request(prompt=[1], max_new_tokens=1, arrival_step=0,
+                       slo=cls)
+    late_e2e.s_first_token, late_e2e.s_done = 2, 11
+    assert not slo.met_slo(late_e2e)
+    assert slo.met_slo(untagged)
+
+
+def test_choose_victim_most_slack_then_youngest():
+    tight = slo.SLOClass("t", priority=0, latency_steps=8)
+    loose = slo.SLOClass("l", priority=1, latency_steps=100)
+    a = Request(prompt=[1], max_new_tokens=2, arrival_step=0, slo=tight)
+    b = Request(prompt=[1], max_new_tokens=2, arrival_step=0, slo=loose)
+    c = Request(prompt=[1], max_new_tokens=2)  # untagged: infinite slack
+    active = {0: a, 1: b, 2: c}
+    seqs = {0: 5, 1: 6, 2: 1}
+    assert slo.choose_victim(active, 0, seqs) == 2, "most slack wins"
+    # all-untagged ties degrade to youngest-first (max admit seq) — the
+    # pre-SLO policy, so untagged workloads preempt identically
+    u = {0: Request(prompt=[1]), 1: Request(prompt=[1])}
+    assert slo.choose_victim(u, 0, {0: 9, 1: 4}) == 0
+    with pytest.raises(ValueError):
+        slo.choose_victim({}, 0, {})
+
+
+def test_admission_victim_rules():
+    inter = slo.get_class("interactive")
+    batch = slo.get_class("batch")
+    cand = Request(prompt=[1], max_new_tokens=4, arrival_step=0, slo=inter)
+    vb = Request(prompt=[1], max_new_tokens=4, slo=batch)
+    vi = Request(prompt=[1], max_new_tokens=4, arrival_step=0, slo=inter)
+    running = [(0, vb), (1, vi)]
+    seqs = {0: 1, 1: 2}
+    # batch (lower class, infinite slack) is the only eligible victim
+    assert slo.admission_victim(cand, running, 5, seqs) == 0
+    # equal class never displaced at admission (no livelock)
+    assert slo.admission_victim(cand, [(1, vi)], 5, seqs) is None
+    # a blown candidate never preempts anybody — the oracle
+    late = Request(prompt=[1], max_new_tokens=4, arrival_step=0, slo=inter)
+    assert slo.blown(late, 10 ** 4)
+    assert slo.admission_victim(late, running, 10 ** 4, seqs) is None
+    # an untagged candidate outranks nobody
+    plain = Request(prompt=[1], max_new_tokens=4)
+    assert slo.admission_victim(plain, running, 5, seqs) is None
+
+
+# --------------------------------------------------------------------------- #
+# Priority-band scheduling (pure python).
+# --------------------------------------------------------------------------- #
+def test_scheduler_priority_bands_and_front_requeue():
+    """Tagged requests admit by (priority, submission order); untagged
+    workloads stay strictly FIFO; a preempted request keeps its ticket
+    and re-enters at the front of its band."""
+    sched = Scheduler(1)
+    b = Request(prompt=[1], slo=slo.get_class("batch"))
+    s = Request(prompt=[1], slo=slo.get_class("standard"))
+    i = Request(prompt=[1], slo=slo.get_class("interactive"))
+    for r in (b, s, i):  # worst-first submission order
+        sched.submit(r)
+    order = []
+    while sched.has_work:
+        [(slot, req)] = sched.admit()
+        order.append(req)
+        sched.retire(slot)
+    assert order == [i, s, b], "priority bands ignored"
+
+    sched = Scheduler(1)
+    i1 = Request(prompt=[1], slo=slo.get_class("interactive"))
+    i2 = Request(prompt=[1], slo=slo.get_class("interactive"))
+    sched.submit(i1)
+    [(slot, got)] = sched.admit()
+    assert got is i1
+    sched.submit(i2)
+    sched.preempt(slot)
+    assert sched.admit()[0][1] is i1, "preempted lost its band front"
+
+
+def _oracle_harness(n_pages, page_size, max_batch):
+    """PagedScheduler + engine-shaped on_shortfall, pure python: the
+    clock is a mutable cell and admit_seq is the scheduler ticket."""
+    pool = PagePool(n_pages, page_size)
+    clock = {"step": 0}
+    preempted = []
+    box = {}
+
+    def on_shortfall(req):
+        sched = box["sched"]
+        running = sched.running()
+        victim = slo.admission_victim(
+            req, running, clock["step"],
+            {s: r.sched_seq for s, r in running})
+        if victim is None:
+            return False
+        preempted.append(sched.slot_of(victim))
+        sched.preempt(victim)
+        return True
+
+    sched = PagedScheduler(
+        max_batch, pool,
+        cost=lambda r: pool.pages_for(len(r.prompt) + len(r.tokens)),
+        on_shortfall=on_shortfall)
+    box["sched"] = sched
+    return sched, pool, clock, preempted
+
+
+def test_slo_admission_oracle_blown_budget_never_preempts():
+    """The oracle: a candidate whose budget is already blown is not
+    admitted by preempting a lower-class slot — the pool, the running
+    set and the preemption count are all untouched."""
+    sched, pool, clock, preempted = _oracle_harness(2, 4, 3)
+    b1 = Request(prompt=[1] * 4, max_new_tokens=1,
+                 slo=slo.get_class("batch"))
+    b2 = Request(prompt=[2] * 4, max_new_tokens=1,
+                 slo=slo.get_class("batch"))
+    for r in (b1, b2):
+        sched.submit(r)
+    assert len(sched.admit()) == 2 and pool.free_pages == 0
+
+    clock["step"] = 100  # interactive deadline long gone
+    late = Request(prompt=[3] * 4, max_new_tokens=4, arrival_step=0,
+                   slo=slo.get_class("interactive"))
+    assert slo.blown(late, clock["step"])
+    sched.submit(late)
+    assert sched.admit() == []
+    assert preempted == [] and pool.free_pages == 0
+    assert late.state is RequestState.QUEUED
+    assert {r.state for _, r in sched.running()} == {RequestState.RUNNING}
+    assert len(sched.running()) == 2
+
+
+def test_slo_admission_preempts_lower_class_with_more_slack():
+    """The same shortfall with a *meetable* budget evicts the youngest
+    batch slot (max slack, tie -> youngest), admits the candidate, and
+    requeues the victim at the front of its band."""
+    sched, pool, clock, preempted = _oracle_harness(2, 4, 3)
+    b1 = Request(prompt=[1] * 4, max_new_tokens=1,
+                 slo=slo.get_class("batch"))
+    b2 = Request(prompt=[2] * 4, max_new_tokens=1,
+                 slo=slo.get_class("batch"))
+    for r in (b1, b2):
+        sched.submit(r)
+    sched.admit()
+    clock["step"] = 4
+    cand = Request(prompt=[3] * 4, max_new_tokens=4, arrival_step=4,
+                   slo=slo.get_class("interactive"))
+    sched.submit(cand)
+    admitted = sched.admit()
+    assert [r for _, r in admitted] == [cand]
+    assert preempted == [b2], "victim must be the youngest batch slot"
+    assert b2.state is RequestState.QUEUED
+    assert b1.state is RequestState.RUNNING
+    # the victim resumes as soon as capacity returns
+    sched.retire(cand.slot)
+    assert [r for _, r in sched.admit()] == [b2]
+
+
+def test_slo_admission_never_preempts_equal_class():
+    sched, pool, clock, preempted = _oracle_harness(1, 4, 2)
+    i1 = Request(prompt=[1] * 4, max_new_tokens=2,
+                 slo=slo.get_class("interactive"))
+    sched.submit(i1)
+    sched.admit()
+    i2 = Request(prompt=[2] * 4, max_new_tokens=2, arrival_step=0,
+                 slo=slo.get_class("interactive"))
+    sched.submit(i2)
+    assert sched.admit() == [] and preempted == []
+    assert i1.state is RequestState.RUNNING
+
+
+# --------------------------------------------------------------------------- #
+# Engine-level: scenarios + SLO through real decoding (gemma reduced).
+# --------------------------------------------------------------------------- #
+def _engine_env():
+    api = ModelAPI(CFG)
+    params, _ = split_tree(api.init(CFG, jax.random.PRNGKey(0)))
+    mesh = single_device_mesh()
+    rules = Rules(mesh, "tp2d")
+    return params, mesh, rules
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("prefix_cache", [False, True])
+def test_token_identity_across_scenarios_and_classes(prefix_cache):
+    """The headline identity check: all four scenarios, tagged and
+    untagged, on a sub-parity pool (preemptions included), produce the
+    same greedy tokens as the uncontended dense-slab offline run — with
+    the prefix cache on and off — and the whole sweep compiles exactly
+    one chunk program."""
+    params, mesh, rules = _engine_env()
+    mk = lambda scenario, classes: make_trace(
+        CFG, scenario=scenario, n=6, tokens=4, prompt_len=10, seed=0,
+        slo_classes=classes, query_size=2, query_interval=4)
+
+    with mesh, use_rules(rules):
+        slab = Engine(CFG, params, rules,
+                      ServeConfig(max_batch=3, max_len=16, prefill_len=16,
+                                  kv_layout="slab"))
+        ref = scenario_driver("offline")(slab, mk("offline", ()))
+        # ids are allocated in creation order, so sorting by id aligns
+        # requests across independently created traces
+        want = [r.tokens for r in sorted(ref.requests, key=lambda r: r.id)]
+
+        eng = Engine(CFG, params, rules,
+                     ServeConfig(max_batch=3, max_len=16, kv_layout="paged",
+                                 page_size=4, prefill_chunk=4, n_pages=8,
+                                 prefix_cache=prefix_cache))
+        preempt_seen = False
+        for scenario in scen.SCENARIOS:
+            for classes in ((), ("interactive", "standard", "batch")):
+                trace = mk(scenario, classes)
+                report = scenario_driver(scenario)(eng, trace)
+                got = [r.tokens for r in
+                       sorted(report.requests, key=lambda r: r.id)]
+                assert got == want, (
+                    f"{scenario} classes={classes} "
+                    f"prefix={prefix_cache}: tokens diverged")
+                preempt_seen |= report.preemptions > 0
+    assert preempt_seen, "8-page pool should have preempted somewhere"
+    assert eng.compiled_programs() == {"chunk": 1}
+
+
+@pytest.mark.slow
+def test_single_stream_issue_on_completion():
+    """SingleStream: each request is issued only after the previous one
+    retired — step stamps are strictly serialized, finish order equals
+    submission order, and occupancy never exceeds one."""
+    params, mesh, rules = _engine_env()
+    with mesh, use_rules(rules):
+        eng = Engine(CFG, params, rules,
+                     ServeConfig(max_batch=3, max_len=16, kv_layout="paged",
+                                 page_size=4, prefill_chunk=4))
+        trace = make_trace(CFG, scenario="single_stream", n=5, tokens=3,
+                           prompt_len=8, seed=1)
+        report = scenario_driver("single_stream")(eng, trace)
+    done = sorted(report.requests, key=lambda r: r.s_arrival)
+    assert [r.id for r in done] == [r.id for r in trace], "order changed"
+    for prev, nxt in zip(done, done[1:]):
+        assert nxt.s_arrival >= prev.s_done, (
+            "a request was issued before its predecessor completed")
+    assert report.summary()["mean_batch_occupancy"] <= 1.0
+    assert all(s.n_tokens <= 1 for s in report.steps)
+
+
+@pytest.mark.slow
+def test_growth_preemption_prefers_most_slack():
+    """Under pool pressure the victim is the slot with the most slack
+    (the batch request), not the youngest (the interactive one) — the
+    latency-critical request keeps its slot and both still finish with
+    the uncontended run's tokens."""
+    params, mesh, rules = _engine_env()
+
+    def mk():
+        rng = np.random.RandomState(4)
+        b = Request(prompt=rng.randint(0, CFG.vocab, size=8).tolist(),
+                    max_new_tokens=8, slo=slo.get_class("batch"))
+        i = Request(prompt=rng.randint(0, CFG.vocab, size=8).tolist(),
+                    max_new_tokens=4, arrival_step=1,
+                    slo=slo.get_class("interactive"))
+        return [b, i]
+
+    with mesh, use_rules(rules):
+        slab = Engine(CFG, params, rules,
+                      ServeConfig(max_batch=2, max_len=16, prefill_len=16,
+                                  kv_layout="slab"))
+        ref = scenario_driver("server")(slab, mk())
+        want = [r.tokens for r in sorted(ref.requests, key=lambda r: r.id)]
+
+        eng = Engine(CFG, params, rules,
+                     ServeConfig(max_batch=2, max_len=16, kv_layout="paged",
+                                 page_size=4, prefill_chunk=8, n_pages=5))
+        victims = []
+        orig = eng.sched.preempt
+
+        def spy(slot):
+            victims.append(eng.sched.slot_of(slot))
+            return orig(slot)
+
+        eng.sched.preempt = spy
+        trace = mk()
+        report = scenario_driver("server")(eng, trace)
+
+    assert report.preemptions > 0, "5-page pool should have preempted"
+    assert victims and all(v.slo.name == "batch" for v in victims), (
+        f"preempted {[v.slo.name for v in victims]}, wanted batch only")
+    got = [r.tokens for r in sorted(report.requests, key=lambda r: r.id)]
+    assert got == want, "slack-aware preemption changed greedy tokens"
+    inter = [r for r in report.requests if r.slo.name == "interactive"][0]
+    assert slo.met_slo(inter), "interactive missed its SLO despite slack"
+
+
+@pytest.mark.slow
+def test_engine_blown_budget_admission_oracle():
+    """End-to-end oracle: with the pool held by batch requests, a
+    late-arriving interactive request whose budget is unmeetable waits
+    (zero preemptions) — while the same arrival with a meetable budget
+    preempts a batch slot. Tokens are unaffected either way."""
+    params, mesh, rules = _engine_env()
+    blown_cls = slo.SLOClass("interactive", priority=0, ttft_steps=1,
+                             latency_steps=2)
+
+    def mk(cls):
+        rng = np.random.RandomState(6)
+        batch = [Request(prompt=rng.randint(0, CFG.vocab, size=13).tolist(),
+                         max_new_tokens=3, slo=slo.get_class("batch"))
+                 for _ in range(2)]
+        cand = Request(prompt=rng.randint(0, CFG.vocab, size=4).tolist(),
+                       max_new_tokens=4, arrival_step=2, slo=cls)
+        return batch + [cand]
+
+    def run(cls):
+        with mesh, use_rules(rules):
+            eng = Engine(CFG, params, rules,
+                         ServeConfig(max_batch=3, max_len=16,
+                                     kv_layout="paged", page_size=4,
+                                     prefill_chunk=8, n_pages=8))
+            report = scenario_driver("server")(eng, mk(cls))
+        return report
+
+    held = run(blown_cls)
+    assert held.preemptions == 0, (
+        "a blown budget must not preempt live work")
+    assert len(held.requests) == 3, "the blown request must still finish"
+
+    rescued = run(slo.get_class("interactive"))
+    assert rescued.preemptions > 0, (
+        "a meetable budget should have preempted a batch slot")
+    key = lambda rep: sorted((r.prompt_len, tuple(r.tokens))
+                             for r in rep.requests)
+    assert key(held) == key(rescued), "SLO classes changed tokens"
+
+
+@pytest.mark.slow
+def test_per_class_report_and_goodput():
+    """ServeReport per-class breakdown: every class present, counts add
+    up, unbounded batch never violates, goodput consistent with the
+    violation count, and summary() carries the SLO aggregates."""
+    params, mesh, rules = _engine_env()
+    with mesh, use_rules(rules):
+        eng = Engine(CFG, params, rules,
+                     ServeConfig(max_batch=3, max_len=16, kv_layout="paged",
+                                 page_size=4, prefill_chunk=4))
+        trace = make_trace(CFG, scenario="server", n=9, tokens=3,
+                           prompt_len=8, seed=2,
+                           slo_classes=("interactive", "standard", "batch"))
+        report = scenario_driver("server")(eng, trace)
+    pc = report.per_class()
+    assert set(pc) == {"interactive", "standard", "batch"}
+    assert sum(m["requests"] for m in pc.values()) == 9
+    assert pc["batch"]["violations"] == 0, "unbounded class violated"
+    total = sum(m["violations"] for m in pc.values())
+    assert report.slo_violations == total
+    assert report.slo_goodput == pytest.approx(1.0 - total / 9)
+    for m in pc.values():
+        assert m["p99_ms"] >= m["p50_ms"] >= 0
+        assert 0.0 <= m["goodput"] <= 1.0
+    s = report.summary()
+    assert s["slo_goodput"] == pytest.approx(report.slo_goodput, abs=1e-4)
+    assert s["slo_violations"] == total
+    # untagged runs don't grow the summary (schema stays lean)
+    with mesh, use_rules(rules):
+        plain = scenario_driver("offline")(eng, make_trace(
+            CFG, scenario="offline", n=3, tokens=2, prompt_len=8, seed=2))
+    assert "slo_goodput" not in plain.summary()
+    assert plain.slo_goodput == 1.0 and plain.slo_violations == 0

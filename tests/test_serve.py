@@ -9,6 +9,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from hypothesis import given, strategies as st
 
 from repro.configs import get_config
 from repro.dist import Rules, split_tree, use_rules
@@ -538,6 +539,90 @@ def test_paged_scheduler_budget_admission_and_preempt():
     assert out is big and big.state is RequestState.QUEUED
     assert pool.free_pages == 3 and big.slot is None
     assert sched.admit()[0][1] is big  # front of the FIFO
+
+
+@given(st.integers(0, 9), st.integers(1, 3), st.integers(4, 12))
+def test_scheduler_preemption_invariants_property(seed, max_batch, n_req):
+    """Randomized arrival + preemption orders on the plain Scheduler:
+    no slot is ever shared, admission always drains the queue in ticket
+    (sched_seq) order — which is what makes a preempted request re-enter
+    at the *front* of its band — and every request, preempted or not,
+    eventually finishes."""
+    rng = random.Random(seed * 1009 + max_batch * 31 + n_req)
+    sched = Scheduler(max_batch)
+    pending = [Request(prompt=[1] * (1 + i % 5)) for i in range(n_req)]
+    all_reqs, preempted_ever = list(pending), set()
+    rounds = 0
+    while pending or sched.has_work:
+        rounds += 1
+        for _ in range(rng.randint(0, 2)):
+            if pending:
+                sched.submit(pending.pop(0))
+        queued = sorted(r.sched_seq for r in sched._queue)
+        admitted = sched.admit()
+        # FIFO-front requeue: admissions are exactly the lowest tickets
+        assert sorted(r.sched_seq for _, r in admitted) == \
+            queued[: len(admitted)]
+        running = sched.running()
+        slots = [i for i, _ in running]
+        assert len(set(slots)) == len(slots) <= max_batch
+        assert len({id(r) for _, r in running}) == len(running), \
+            "one request holds two slots"
+        for i, r in running:
+            assert r.state is RequestState.RUNNING and r.slot == i
+        for i, r in list(running):
+            roll = rng.random()
+            if roll < 0.25 and rounds < 200:
+                out = sched.preempt(i)
+                assert out is r and r.state is RequestState.QUEUED
+                assert r.slot is None
+                preempted_ever.add(r)
+            elif roll < 0.75 or rounds >= 200:
+                sched.retire(i)
+    assert all(r.state is RequestState.FINISHED for r in all_reqs), \
+        "a request (possibly preempted) never finished"
+    assert preempted_ever <= set(all_reqs)
+
+
+@given(st.integers(0, 9), st.integers(1, 3), st.integers(3, 10))
+def test_paged_scheduler_preemption_invariants_property(
+        seed, max_batch, n_pages):
+    """Same randomized schedule through the budgeted PagedScheduler:
+    page accounting stays exact at every round (free + reserved ==
+    pool), no physical page is mapped by two slots, preempted requests
+    always resume and finish, and the pool drains back to empty."""
+    rng = random.Random(seed * 7919 + max_batch * 13 + n_pages)
+    pool = PagePool(n_pages, page_size=4)
+    sched = PagedScheduler(
+        max_batch, pool,
+        cost=lambda r: pool.pages_for(r.prompt_len + len(r.tokens)))
+    cap = 4 * min(n_pages, 3)  # every request fits the pool on its own
+    pending = [Request(prompt=[1] * rng.randint(1, cap)) for _ in range(8)]
+    all_reqs = list(pending)
+    rounds = 0
+    while pending or sched.has_work:
+        rounds += 1
+        for _ in range(rng.randint(0, 2)):
+            if pending:
+                sched.submit(pending.pop(0))
+        sched.admit()
+        running = sched.running()
+        assert len({i for i, _ in running}) == len(running) <= max_batch
+        reserved = [p for i, _ in running for p in pool.slot_pages(i)]
+        assert len(set(reserved)) == len(reserved), "page double-mapped"
+        assert pool.free_pages == n_pages - len(reserved), \
+            "page accounting drifted"
+        for i, r in running:
+            assert len(pool.slot_pages(i)) == pool.pages_for(r.prompt_len)
+        for i, r in list(running):
+            roll = rng.random()
+            if roll < 0.3 and rounds < 300:
+                sched.preempt(i)
+                assert r.state is RequestState.QUEUED
+            elif roll < 0.8 or rounds >= 300:
+                sched.retire(i)
+    assert all(r.state is RequestState.FINISHED for r in all_reqs)
+    assert pool.free_pages == n_pages, "retired pages leaked"
 
 
 def test_synthetic_requests_prompt_lens_spread():
