@@ -19,8 +19,13 @@ through the paged engine twice, cache off then on, and report the
 cache's effect directly: prefix hit rate, pages shared, prefill tokens
 skipped, and the TTFT delta vs the cache-off run of the *same*
 workload (``ttft_delta_ms`` < 0 means the cache cut time-to-first-
-token). All pre-existing rows keep their exact workloads, so committed
-BENCH_* trajectories stay comparable across PRs.
+token). The ``*_int8_*`` rows re-run the paged workloads on an int8
+quantized pool of identical geometry (``tokens_per_s_vs_bf16`` is the
+uplift against the paged twin), and the ``*_specdec_*`` rows turn on
+ngram speculative decoding against the same non-spec twin
+(``tokens_per_s_vs_plain``, accept rate, draft volume — outputs stay
+token-identical). All pre-existing rows keep their exact workloads, so
+committed BENCH_* trajectories stay comparable across PRs.
 
     PYTHONPATH=src python -m repro.bench.run --only serve_decode [--smoke]
 """
@@ -41,7 +46,8 @@ DERIVED = ("tokens_per_s", "p50_token_ms", "p99_token_ms", "ttft_p50_ms",
            "pool_util_peak", "preemptions", "prefix_hit_rate",
            "pages_shared", "prefill_tokens_skipped", "cow_copies",
            "ttft_delta_ms", "slo_goodput", "slo_violations",
-           "p99_ms_interactive", "p99_ms_batch")
+           "p99_ms_interactive", "p99_ms_batch", "tokens_per_s_vs_bf16",
+           "tokens_per_s_vs_plain", "spec_accept_rate", "draft_tokens")
 
 
 def _decode_timing(report):
@@ -120,6 +126,7 @@ def run(ctx):
         run_offline(paged, build_requests(  # compile the chunk program
             cfg, n=2, tokens=2, prompt_len=prompt_len,
             scenario="offline", seed=1))
+    paged_tps = {}  # bf16/non-spec twin tokens/s, keyed by scenario
     for scenario, driver in (("offline", run_offline),
                              ("server", run_server)):
         reqs = synthetic_requests(cfg, n=n_req, tokens=tokens,
@@ -128,6 +135,7 @@ def run(ctx):
         with mesh, use_rules(rules):
             report = driver(paged, reqs)
         s = report.summary()
+        paged_tps[scenario] = s["tokens_per_s"]
         ctx.record(
             f"serve/{cfg.name}_paged_{scenario}",
             _decode_timing(report),
@@ -137,6 +145,76 @@ def run(ctx):
             ttft_p50_ms=s["ttft_p50_ms"],
             pool_util_mean=s["pool_util_mean"],
             pool_util_peak=s["pool_util_peak"],
+            preemptions=report.preemptions,
+            requests=s["requests"],
+        )
+
+    # ---- quantized pool: int8 pages, identical geometry ---------------- #
+    # Same ragged workloads and the exact pool geometry of the paged rows
+    # above, so tokens_per_s_vs_bf16 isolates what storing the pool int8
+    # buys (halved decode-step KV bytes) — not a workload change. Token
+    # identity is not the quantized contract (bounded logit error is,
+    # tests/test_speculative.py); throughput and pool stats are.
+    qcfg = ServeConfig(**{**pcfg.__dict__, "kv_dtype": "int8"})
+    with mesh, use_rules(rules):
+        q8 = Engine(cfg, params, rules, qcfg)
+        run_offline(q8, build_requests(  # compile the quantized chunk
+            cfg, n=2, tokens=2, prompt_len=prompt_len,
+            scenario="offline", seed=1))
+    for scenario, driver in (("offline", run_offline),
+                             ("server", run_server)):
+        reqs = synthetic_requests(cfg, n=n_req, tokens=tokens,
+                                  prompt_len=prompt_len, scenario=scenario,
+                                  seed=0, prompt_lens=spread)
+        with mesh, use_rules(rules):
+            report = driver(q8, reqs)
+        s = report.summary()
+        ctx.record(
+            f"serve/{cfg.name}_int8_{scenario}",
+            _decode_timing(report),
+            tokens_per_s=s["tokens_per_s"],
+            tokens_per_s_vs_bf16=round(
+                s["tokens_per_s"] / max(paged_tps[scenario], 1e-9), 4),
+            p50_token_ms=s["p50_token_ms"],
+            p99_token_ms=s["p99_token_ms"],
+            ttft_p50_ms=s["ttft_p50_ms"],
+            pool_util_mean=s["pool_util_mean"],
+            pool_util_peak=s["pool_util_peak"],
+            preemptions=report.preemptions,
+            requests=s["requests"],
+        )
+
+    # ---- speculative decoding: ngram draft/verify, identical geometry -- #
+    # Non-spec twin = the paged rows above (same workload, same pool).
+    # Greedy outputs are token-identical by construction (verified in
+    # tests/test_speculative.py); the rows record the throughput side:
+    # accept rate, draft volume and tokens_per_s_vs_plain.
+    sconf = ServeConfig(**{**pcfg.__dict__,
+                           "spec_decode": "ngram", "draft_len": 3})
+    with mesh, use_rules(rules):
+        spec = Engine(cfg, params, rules, sconf)
+        run_offline(spec, build_requests(  # compile the full-logits chunk
+            cfg, n=2, tokens=2, prompt_len=prompt_len,
+            scenario="offline", seed=1))
+    for scenario, driver in (("offline", run_offline),
+                             ("server", run_server)):
+        reqs = synthetic_requests(cfg, n=n_req, tokens=tokens,
+                                  prompt_len=prompt_len, scenario=scenario,
+                                  seed=0, prompt_lens=spread)
+        with mesh, use_rules(rules):
+            report = driver(spec, reqs)
+        s = report.summary()
+        ctx.record(
+            f"serve/{cfg.name}_specdec_{scenario}",
+            _decode_timing(report),
+            tokens_per_s=s["tokens_per_s"],
+            tokens_per_s_vs_plain=round(
+                s["tokens_per_s"] / max(paged_tps[scenario], 1e-9), 4),
+            spec_accept_rate=report.spec_accept_rate,
+            draft_tokens=report.draft_tokens,
+            p50_token_ms=s["p50_token_ms"],
+            p99_token_ms=s["p99_token_ms"],
+            ttft_p50_ms=s["ttft_p50_ms"],
             preemptions=report.preemptions,
             requests=s["requests"],
         )

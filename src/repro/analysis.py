@@ -26,10 +26,10 @@ HW = {
     "hbm_cap": 16 * 2 ** 30,
 }
 
-_DT_BYTES = {"bfloat16": 2, "float32": 4, "int8": 1}
+_DT_BYTES = {"bfloat16": 2, "float32": 4, "int8": 1, "int4": 0.5}
 
 
-def _bytes(dtype: str) -> int:
+def _bytes(dtype: str) -> float:
     return _DT_BYTES[dtype]
 
 
@@ -139,7 +139,7 @@ def cache_bytes(cfg: ModelConfig, shape: InputShape) -> float:
     L = min(window or S, S)
     kvb = _bytes(cfg.kv_cache_dtype)
     total = census["attn"] * B * L * cfg.n_kv_heads * cfg.head_dim * 2 * kvb
-    if cfg.kv_cache_dtype == "int8":
+    if cfg.kv_cache_dtype in ("int8", "int4"):
         total += census["attn"] * B * L * cfg.n_kv_heads * 2 * 4  # scales
     total += census["attn"] * B * L * 4  # slot_pos
     if census["mamba"] and cfg.mamba:

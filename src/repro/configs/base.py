@@ -92,7 +92,8 @@ class ModelConfig:
     loss_chunk: int = 256          # CE computed in seq chunks of this size
     dtype: str = "bfloat16"        # activation/compute dtype
     param_dtype: str = "float32"   # master weights
-    kv_cache_dtype: str = "bfloat16"  # 'bfloat16' | 'int8' (quantized cache)
+    kv_cache_dtype: str = "bfloat16"  # 'bfloat16' | 'float32' | 'int8' |
+    #                                'int4' (quantized cache, paged layout)
     grad_dtype: str = "float32"    # gradient summation dtype (C7: fp32;
     #                                bf16 for the 300B+ configs, see DESIGN)
     moment_dtype: str = "float32"  # Adam moment dtype (bf16 for 300B+)

@@ -1,0 +1,108 @@
+"""Kernel dispatch registry: op name -> backend implementations +
+capability flags.
+
+This table replaces the per-op ``REPRO_USE_PALLAS`` env checks and
+if/else routing that used to live inline in ``kernels/ops.py``. Every
+compute hot-spot registers one :class:`OpSpec`:
+
+  * ``jnp`` — the always-available pure-JAX implementation (oracle-grade
+    on CPU, also what dry-run lowering cost-analyzes);
+  * ``pallas`` — a lazy ``"module:attr"`` reference to the Pallas kernel
+    (resolved on first use so CPU model execution never imports it),
+    runnable on TPU or anywhere under ``interpret=True``;
+
+plus the capability flags the shims consult before routing:
+
+  * ``supports_int8`` / ``supports_int4`` — the Pallas kernel dequantizes
+    per-page-scaled quantized operands in-kernel (fp32 accumulation);
+    without the flag a quantized call routes to jnp even on TPU;
+  * ``min_size`` — below this operand element count the kernel-launch
+    overhead exceeds the fused-update win and jnp is used (the LARS
+    small-tensor gate).
+
+Backend choice: ``REPRO_USE_PALLAS`` ('' auto-detect | '1'/'tpu' |
+'interpret') -> :func:`pallas_mode`; :func:`resolve` folds the mode and
+the capability flags into a single (impl, interpret) decision. New
+quantized or specialized variants slot in by declaring capabilities
+here — callers never grow another if/else ladder.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+import os
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+
+
+@dataclasses.dataclass(frozen=True)
+class OpSpec:
+    """One registered op: backend impls + routing capabilities."""
+
+    name: str
+    jnp: Callable
+    pallas: Optional[str] = None      # "module:attr", imported lazily
+    supports_int8: bool = False       # pallas impl dequantizes int8
+    supports_int4: bool = False       # pallas impl unpacks+dequantizes int4
+    min_size: int = 0                 # pallas only at/above this size
+
+    def pallas_impl(self) -> Callable:
+        mod, attr = self.pallas.split(":")
+        return getattr(importlib.import_module(mod), attr)
+
+    def backends(self) -> Tuple[str, ...]:
+        """Every cell a conformance test must cover for this op."""
+        return ("jnp",) + (("pallas",) if self.pallas else ())
+
+
+_REGISTRY: Dict[str, OpSpec] = {}
+
+
+def register(**kw) -> OpSpec:
+    spec = OpSpec(**kw)
+    if spec.name in _REGISTRY:
+        raise ValueError(f"kernel op {spec.name!r} registered twice")
+    _REGISTRY[spec.name] = spec
+    return spec
+
+
+def get(name: str) -> OpSpec:
+    return _REGISTRY[name]
+
+
+def registered() -> Dict[str, OpSpec]:
+    """Snapshot of the registry (tests sweep every op x backend cell)."""
+    return dict(_REGISTRY)
+
+
+def pallas_mode() -> Optional[str]:
+    """'tpu' | 'interpret' | None, from REPRO_USE_PALLAS + backend."""
+    env = os.environ.get("REPRO_USE_PALLAS", "")
+    if env in ("1", "tpu"):
+        return "tpu"
+    if env == "interpret":
+        return "interpret"
+    if jax.default_backend() == "tpu":
+        return "tpu"
+    return None
+
+
+def resolve(name: str, *, quantized: str = "",
+            size: Optional[int] = None) -> Tuple[Callable, Optional[bool]]:
+    """Pick the backend for one call site.
+
+    quantized: '' | 'int8' | 'int4' — the operand quantization this call
+    carries; size: operand element count for ``min_size``-gated ops.
+    Returns ``(impl, interpret)``: ``interpret`` is None for the jnp
+    impl (call it plain) and a bool for the Pallas impl (pass it as the
+    ``interpret=`` kwarg).
+    """
+    spec = _REGISTRY[name]
+    mode = pallas_mode()
+    if (mode is None or spec.pallas is None
+            or (quantized == "int8" and not spec.supports_int8)
+            or (quantized == "int4" and not spec.supports_int4)
+            or (size is not None and size < spec.min_size)):
+        return spec.jnp, None
+    return spec.pallas_impl(), mode == "interpret"

@@ -1,35 +1,32 @@
 """Public jit'd wrappers for the compute hot-spots.
 
-Backend selection: on TPU the Pallas kernels are used; on CPU (this
-container) the memory-safe pure-JAX implementations below are used for
-model execution and dry-run lowering (so ``cost_analysis`` reflects the
-real math), while the Pallas kernels are validated separately with
-``interpret=True`` against ``kernels/ref.py``.
+Backend selection lives in ``kernels/dispatch.py``: every op below
+registers an :class:`~repro.kernels.dispatch.OpSpec` naming its pure-JAX
+implementation, its (lazily imported) Pallas kernel, and capability
+flags — ``supports_int8``/``supports_int4`` for quantized operands,
+``min_size`` for launch-overhead gates. The public functions here are
+thin shims that keep the historical call signatures and route through
+``dispatch.resolve``.
 
-Set ``REPRO_USE_PALLAS=interpret`` to route model execution through the
-Pallas kernels in interpret mode (slow; used by kernel integration tests).
+On TPU the Pallas kernels are used; on CPU (this container) the
+memory-safe pure-JAX implementations are used for model execution and
+dry-run lowering (so ``cost_analysis`` reflects the real math), while
+the Pallas kernels are validated separately with ``interpret=True``
+against ``kernels/ref.py``. Set ``REPRO_USE_PALLAS=interpret`` to route
+model execution through the Pallas kernels in interpret mode (slow;
+used by kernel integration tests).
 """
 from __future__ import annotations
-
-import math
-import os
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import dispatch as _dispatch
+from repro.kernels import quant as _quant
 from repro.kernels import ref as _ref
 
-
-def _pallas_mode() -> Optional[str]:
-    env = os.environ.get("REPRO_USE_PALLAS", "")
-    if env in ("1", "tpu"):
-        return "tpu"
-    if env == "interpret":
-        return "interpret"
-    if jax.default_backend() == "tpu":
-        return "tpu"
-    return None
+# Back-compat alias (pre-registry callers peeked at the env directly).
+_pallas_mode = _dispatch.pallas_mode
 
 
 # --------------------------------------------------------------------------- #
@@ -41,17 +38,15 @@ def attention(q, k, v, *, causal=True, window=None, q_offset=0, k_offset=0,
 
     q: (B, Sq, H, D); k, v: (B, Sk, K, D). Softmax accumulators in fp32.
     """
-    mode = _pallas_mode()
-    if mode is not None:
-        from repro.kernels import flash_attention as fa
-
-        return fa.flash_attention(
+    impl, interpret = _dispatch.resolve("attention")
+    if interpret is None:
+        return impl(
             q, k, v, causal=causal, window=window, q_offset=q_offset,
-            k_offset=k_offset, scale=scale, interpret=(mode == "interpret"),
+            k_offset=k_offset, scale=scale, chunk=chunk,
         )
-    return _chunked_attention(
+    return impl(
         q, k, v, causal=causal, window=window, q_offset=q_offset,
-        k_offset=k_offset, scale=scale, chunk=chunk,
+        k_offset=k_offset, scale=scale, interpret=interpret,
     )
 
 
@@ -164,6 +159,13 @@ def decode_attention(q, k_cache, v_cache, slot_pos, *, pos, window=None,
     position (continuous-batching serving: every slot holds an independent
     sequence at an independent offset).
     """
+    impl, _ = _dispatch.resolve("decode_attention")
+    return impl(q, k_cache, v_cache, slot_pos, pos=pos, window=window,
+                scale=scale, k_scale=k_scale, v_scale=v_scale)
+
+
+def _decode_attention_jnp(q, k_cache, v_cache, slot_pos, *, pos, window,
+                          scale, k_scale, v_scale):
     B, _, H, D = q.shape
     _, L, K, _ = k_cache.shape
     G = H // K
@@ -193,26 +195,37 @@ def paged_attention(q, kp, vp, page_table, *, pos, n_valid, window=None,
 
     q: (B, C, H, D) — C tokens per row this step (decode rows feed 1,
     chunked-prefill rows up to C; ``n_valid`` masks the rest).
-    kp/vp: (P, page, K, hd) physical page pool in bf16 or int8; the new
-    tokens' K/V are already scattered into their pages
-    (``layers.paged_cache_insert`` runs before attention).
+    kp/vp: (P, page, K, hd) physical page pool — bf16, int8 (hd == D) or
+    int4-packed (hd == D // 2); the new tokens' K/V are already
+    scattered into their pages (``layers.paged_cache_insert`` runs
+    before attention).
     page_table: (B, max_pages) int32 physical page ids (-1 unmapped).
     pos: (B,) absolute position of each row's first token this step.
-    kp_scale/vp_scale: (P, page, K) dequant scales when the pool is int8
-    (served by the jnp path; the Pallas kernel handles bf16/fp32 pools).
+    kp_scale/vp_scale: (P, page, K) dequant scales for quantized pools;
+    both the Pallas kernel (dequant-in-kernel, fp32 accumulation) and
+    the jnp fallback consume them.
 
     On TPU (or REPRO_USE_PALLAS=interpret) the Pallas kernel visits only
     the pages each row occupies; the jnp fallback gathers the mapped
     pages and masks — O(max_len) per row, correctness-equal.
     """
-    mode = _pallas_mode()
-    if mode is not None and kp_scale is None:
-        from repro.kernels import paged_attention as pa
+    D = q.shape[-1]
+    if kp_scale is not None:
+        quantized = "int4" if kp.shape[-1] != D else "int8"
+    else:
+        quantized = ""
+    impl, interpret = _dispatch.resolve("paged_attention", quantized=quantized)
+    if interpret is None:
+        return impl(q, kp, vp, page_table, pos=pos, n_valid=n_valid,
+                    window=window, scale=scale, kp_scale=kp_scale,
+                    vp_scale=vp_scale)
+    return impl(q, kp, vp, page_table, pos=pos, n_valid=n_valid,
+                window=window, scale=scale, kp_scale=kp_scale,
+                vp_scale=vp_scale, interpret=interpret)
 
-        return pa.paged_attention(
-            q, kp, vp, page_table, pos=pos, n_valid=n_valid, window=window,
-            scale=scale, interpret=(mode == "interpret"),
-        )
+
+def _paged_attention_jnp(q, kp, vp, page_table, *, pos, n_valid, window,
+                         scale, kp_scale, vp_scale):
     B, C, H, D = q.shape
     P, page, K, hd = kp.shape
     G = H // K
@@ -220,14 +233,16 @@ def paged_attention(q, kp, vp, page_table, *, pos, n_valid, window=None,
     npg = page_table.shape[1]
     pt = jnp.asarray(page_table, jnp.int32)
     safe = jnp.clip(pt, 0, P - 1)
-    kf = kp[safe].astype(jnp.float32)  # (B, npg, page, K, hd)
-    vf = vp[safe].astype(jnp.float32)
     if kp_scale is not None:
-        kf = kf * kp_scale[safe][..., None].astype(jnp.float32)
-    if vp_scale is not None:
-        vf = vf * vp_scale[safe][..., None].astype(jnp.float32)
-    kf = kf.reshape(B, npg * page, K, hd)
-    vf = vf.reshape(B, npg * page, K, hd)
+        # int8 or int4-packed pool: dequantize the gathered pages
+        # (unpacks nibbles when hd == D // 2).
+        kf = _quant.dequantize(kp[safe], kp_scale[safe], D)
+        vf = _quant.dequantize(vp[safe], vp_scale[safe], D)
+    else:
+        kf = kp[safe].astype(jnp.float32)  # (B, npg, page, K, hd)
+        vf = vp[safe].astype(jnp.float32)
+    kf = kf.reshape(B, npg * page, K, D)
+    vf = vf.reshape(B, npg * page, K, D)
     qf = (q.astype(jnp.float32) * scale).reshape(B, C, K, G, D)
     logits = jnp.einsum("bckgd,blkd->bckgl", qf, kf)
     kpos = jnp.arange(npg * page, dtype=jnp.int32)
@@ -249,14 +264,10 @@ def paged_attention(q, kp, vp, page_table, *, pos, n_valid, window=None,
 # LSTM cell (GNMT hot spot, C9).
 # --------------------------------------------------------------------------- #
 def lstm_cell(x_proj, h_prev, c_prev, w_h, b):
-    mode = _pallas_mode()
-    if mode is not None:
-        from repro.kernels import lstm_cell as lk
-
-        return lk.lstm_cell(
-            x_proj, h_prev, c_prev, w_h, b, interpret=(mode == "interpret")
-        )
-    return _ref.lstm_cell(x_proj, h_prev, c_prev, w_h, b)
+    impl, interpret = _dispatch.resolve("lstm_cell")
+    if interpret is None:
+        return impl(x_proj, h_prev, c_prev, w_h, b)
+    return impl(x_proj, h_prev, c_prev, w_h, b, interpret=interpret)
 
 
 # --------------------------------------------------------------------------- #
@@ -264,26 +275,20 @@ def lstm_cell(x_proj, h_prev, c_prev, w_h, b):
 # --------------------------------------------------------------------------- #
 def lars_update(w, g, m, *, lr, weight_decay, momentum, eta, eps=1e-9,
                 scaled_momentum=True):
-    mode = _pallas_mode()
-    if mode is not None and w.ndim >= 1 and w.size >= 1024:
-        from repro.kernels import lars as lkr
-
-        return lkr.lars_update(
-            w, g, m, lr=lr, weight_decay=weight_decay, momentum=momentum,
-            eta=eta, eps=eps, scaled_momentum=scaled_momentum,
-            interpret=(mode == "interpret"),
-        )
-    return _ref.lars_update(
-        w, g, m, lr=lr, weight_decay=weight_decay, momentum=momentum,
-        eta=eta, eps=eps, scaled_momentum=scaled_momentum,
-    )
+    impl, interpret = _dispatch.resolve("lars_update", size=w.size)
+    kw = dict(lr=lr, weight_decay=weight_decay, momentum=momentum, eta=eta,
+              eps=eps, scaled_momentum=scaled_momentum)
+    if interpret is None:
+        return impl(w, g, m, **kw)
+    return impl(w, g, m, interpret=interpret, **kw)
 
 
 # --------------------------------------------------------------------------- #
 # MoE gating (top-k + capacity dispatch).
 # --------------------------------------------------------------------------- #
 def moe_gating(x, router_w, *, top_k, capacity):
-    return _ref.moe_gating(x, router_w, top_k=top_k, capacity=capacity)
+    impl, _ = _dispatch.resolve("moe_gating")
+    return impl(x, router_w, top_k=top_k, capacity=capacity)
 
 
 # --------------------------------------------------------------------------- #
@@ -294,13 +299,13 @@ def mamba_scan(u, dt, A, B, C, D):
 
     Shapes as in kernels.ref.mamba_scan. Returns (y, final_state).
     """
-    mode = _pallas_mode()
-    if mode is not None:
-        from repro.kernels import mamba as mk
+    impl, interpret = _dispatch.resolve("mamba_scan")
+    if interpret is None:
+        return impl(u, dt, A, B, C, D)
+    return impl(u, dt, A, B, C, D, interpret=interpret)
 
-        return mk.mamba_scan(
-            u, dt, A, B, C, D, interpret=(mode == "interpret")
-        )
+
+def _mamba_scan_jnp(u, dt, A, B, C, D):
     u32 = u.astype(jnp.float32)
     dt32 = dt.astype(jnp.float32)
     A32 = A.astype(jnp.float32)
@@ -343,3 +348,46 @@ def mamba_step(h, u_t, dt_t, A, B_t, C_t, D):
         jnp.float32
     ) * u_t.astype(jnp.float32)
     return h, y.astype(u_t.dtype)
+
+
+# --------------------------------------------------------------------------- #
+# Registry: one OpSpec per hot-spot. Capability flags route quantized
+# calls; min_size keeps tiny tensors off the kernel-launch path.
+# --------------------------------------------------------------------------- #
+_dispatch.register(
+    name="attention",
+    jnp=_chunked_attention,
+    pallas="repro.kernels.flash_attention:flash_attention",
+)
+_dispatch.register(
+    name="decode_attention",
+    jnp=_decode_attention_jnp,  # slab-cache decode; no kernel (paged is the
+                                # serving path, slab stays oracle-grade jnp)
+)
+_dispatch.register(
+    name="paged_attention",
+    jnp=_paged_attention_jnp,
+    pallas="repro.kernels.paged_attention:paged_attention",
+    supports_int8=True,
+    supports_int4=True,
+)
+_dispatch.register(
+    name="lstm_cell",
+    jnp=_ref.lstm_cell,
+    pallas="repro.kernels.lstm_cell:lstm_cell",
+)
+_dispatch.register(
+    name="lars_update",
+    jnp=_ref.lars_update,
+    pallas="repro.kernels.lars:lars_update",
+    min_size=1024,  # below this the fused-update win loses to launch cost
+)
+_dispatch.register(
+    name="moe_gating",
+    jnp=_ref.moe_gating,
+)
+_dispatch.register(
+    name="mamba_scan",
+    jnp=_mamba_scan_jnp,
+    pallas="repro.kernels.mamba:mamba_scan",
+)

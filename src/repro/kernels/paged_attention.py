@@ -16,10 +16,20 @@ tokens per row against *only the pages that row actually occupies*:
     unmapped pages skip their compute via ``pl.when`` — a ragged batch
     pays for the tokens it holds, not for ``max_len``.
 
+Quantized pools run through the same kernel: pass ``kp_scale`` /
+``vp_scale`` of shape ``(P, page, K)`` and the per-page scale blocks
+ride the identical page-table indirection as the K/V blocks. int8 pools
+carry ``(P, page, K, hd)`` values; int4 pools pack two dims per byte
+(``(P, page, K, hd // 2)``, halves layout — see ``kernels/quant.py``)
+and are unpacked in-kernel with pure integer ops. Dequantization
+happens on the page block just before the dots, and accumulation stays
+fp32 throughout, so quantization only narrows the HBM reads — which is
+the point: decode is bandwidth-bound and int8/int4 halves/quarters the
+bytes per step.
+
 GQA folds the query head onto its KV head in the index maps. The new
 tokens' K/V must already be written into their pages (the model layer
-scatters before attending, see ``layers.paged_cache_insert``). int8
-KV pools are served by the jnp fallback in ``kernels/ops.py``.
+scatters before attending, see ``layers.paged_cache_insert``).
 Validated against ``kernels/ref.paged_attention`` in interpret mode on
 CPU (tests/test_kernels.py).
 """
@@ -32,11 +42,20 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import quant
+
 NEG_INF = -1e30
 
 
-def _kernel(pt_ref, pos_ref, nv_ref, q_ref, k_ref, v_ref, o_ref, acc, m, l,
-            *, scale, window, page, n_pages, C):
+def _kernel(pt_ref, pos_ref, nv_ref, q_ref, k_ref, v_ref, *rest,
+            scale, window, page, n_pages, C, int4):
+    # Quantized calls carry two extra scale operands between the pool
+    # refs and the output ref; scratch always trails.
+    if len(rest) == 6:
+        ks_ref, vs_ref, o_ref, acc, m, l = rest
+    else:
+        ks_ref = vs_ref = None
+        o_ref, acc, m, l = rest
     b = pl.program_id(0)
     p = pl.program_id(2)
 
@@ -53,8 +72,16 @@ def _kernel(pt_ref, pos_ref, nv_ref, q_ref, k_ref, v_ref, o_ref, acc, m, l,
     @pl.when(used)
     def _update():
         qb = q_ref[0, :, 0, :].astype(jnp.float32) * scale  # (C, D)
-        kb = k_ref[0, :, 0, :].astype(jnp.float32)          # (page, D)
-        vb = v_ref[0, :, 0, :].astype(jnp.float32)
+        kraw = k_ref[0, :, 0, :]                            # (page, D|D//2)
+        vraw = v_ref[0, :, 0, :]
+        if int4:
+            kraw = quant.unpack_int4(kraw)                  # (page, D)
+            vraw = quant.unpack_int4(vraw)
+        kb = kraw.astype(jnp.float32)
+        vb = vraw.astype(jnp.float32)
+        if ks_ref is not None:
+            kb = kb * ks_ref[0, :, 0][:, None]              # per-row scale
+            vb = vb * vs_ref[0, :, 0][:, None]
         s = jax.lax.dot_general(
             qb, kb, (((1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32,
@@ -87,16 +114,28 @@ def _kernel(pt_ref, pos_ref, nv_ref, q_ref, k_ref, v_ref, o_ref, acc, m, l,
 
 
 def paged_attention(q, kp, vp, page_table, *, pos, n_valid, window=None,
-                    scale=None, interpret=False):
+                    scale=None, kp_scale=None, vp_scale=None,
+                    interpret=False):
     """q: (B, C, H, D); kp/vp: (P, page, K, hd) with H % K == 0.
 
     page_table: (B, max_pages) int32 physical page ids (-1 unmapped);
-    pos/n_valid: (B,) int32. Returns (B, C, H, D) in q.dtype.
+    pos/n_valid: (B,) int32. kp_scale/vp_scale: (P, page, K) fp32
+    per-row dequant scales for quantized pools — int8 pools have
+    hd == D, int4-packed pools hd == D // 2. Returns (B, C, H, D) in
+    q.dtype.
     """
     B, C, H, D = q.shape
     P, page, K, hd = kp.shape
-    if hd != D:
+    quantized = kp_scale is not None
+    int4 = quantized and hd != D
+    if int4 and hd != D // 2:
+        raise ValueError(
+            f"quantized pool trailing dim {hd} matches neither head_dim "
+            f"{D} (int8) nor head_dim//2 {D // 2} (int4-packed)")
+    if not quantized and hd != D:
         raise ValueError(f"head_dim mismatch: q {D} vs pool {hd}")
+    if quantized and (vp_scale is None) != (kp_scale is None):
+        raise ValueError("kp_scale and vp_scale must be passed together")
     G = H // K
     n_pages = page_table.shape[1]
     scale = scale if scale is not None else D ** -0.5
@@ -110,15 +149,28 @@ def paged_attention(q, kp, vp, page_table, *, pos, n_valid, window=None,
     def kv_map(b, h, p, pt_ref, pos_ref, nv_ref):
         return (jnp.maximum(pt_ref[b, p], 0), 0, h // G, 0)
 
+    def scale_map(b, h, p, pt_ref, pos_ref, nv_ref):
+        return (jnp.maximum(pt_ref[b, p], 0), 0, h // G)
+
+    in_specs = [
+        pl.BlockSpec((1, C, 1, D),
+                     lambda b, h, p, *refs: (b, 0, h, 0)),
+        pl.BlockSpec((1, page, 1, hd), kv_map),
+        pl.BlockSpec((1, page, 1, hd), kv_map),
+    ]
+    operands = [q, kp, vp]
+    if quantized:
+        in_specs += [
+            pl.BlockSpec((1, page, 1), scale_map),
+            pl.BlockSpec((1, page, 1), scale_map),
+        ]
+        operands += [kp_scale.astype(jnp.float32),
+                     vp_scale.astype(jnp.float32)]
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,
         grid=(B, H, n_pages),
-        in_specs=[
-            pl.BlockSpec((1, C, 1, D),
-                         lambda b, h, p, *refs: (b, 0, h, 0)),
-            pl.BlockSpec((1, page, 1, hd), kv_map),
-            pl.BlockSpec((1, page, 1, hd), kv_map),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, C, 1, D),
                                lambda b, h, p, *refs: (b, 0, h, 0)),
         scratch_shapes=[
@@ -129,11 +181,11 @@ def paged_attention(q, kp, vp, page_table, *, pos, n_valid, window=None,
     )
     kernel = functools.partial(
         _kernel, scale=scale, window=window, page=page, n_pages=n_pages,
-        C=C,
+        C=C, int4=int4,
     )
     return pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, C, H, D), q.dtype),
         interpret=interpret,
-    )(pt_safe, posv, nv, q, kp, vp)
+    )(pt_safe, posv, nv, *operands)

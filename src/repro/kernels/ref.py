@@ -43,7 +43,7 @@ def attention(q, k, v, *, causal=True, window=None, q_offset=0, k_offset=0,
 
 
 def paged_attention(q, kp, vp, page_table, *, pos, n_valid, window=None,
-                    scale=None):
+                    scale=None, kp_scale=None, vp_scale=None):
     """Naive paged-decode attention oracle.
 
     q: (B, C, H, D) — C new tokens per row (decode: C=1 valid; chunked
@@ -52,22 +52,32 @@ def paged_attention(q, kp, vp, page_table, *, pos, n_valid, window=None,
     page_table: (B, max_pages) int32 physical page ids, -1 unmapped.
     pos: (B,) absolute position of each row's first new token.
     n_valid: (B,) how many of the C tokens are real this step.
+    kp_scale/vp_scale: (P, page, K) per-row dequant scales for
+    quantized pools — int8 (hd == D) or int4-packed (hd == D // 2,
+    see ``kernels/quant.py``).
 
     Key at absolute position j is visible to query i (absolute qpos =
     pos + i) iff its page is mapped, j < pos + n_valid, j <= qpos and
     (window) j > qpos - window. Rows/queries beyond n_valid produce
     garbage the caller must ignore. Softmax in fp32.
     """
+    from repro.kernels import quant
+
     B, C, H, D = q.shape
     P, page, K, hd = kp.shape
     G = H // K
     scale = scale if scale is not None else D ** -0.5
     npg = page_table.shape[1]
     pt = jnp.asarray(page_table, jnp.int32)
-    kg = kp[jnp.clip(pt, 0, P - 1)].astype(jnp.float32)  # (B,npg,page,K,hd)
-    vg = vp[jnp.clip(pt, 0, P - 1)].astype(jnp.float32)
-    kg = kg.reshape(B, npg * page, K, hd)
-    vg = vg.reshape(B, npg * page, K, hd)
+    safe = jnp.clip(pt, 0, P - 1)
+    if kp_scale is not None:
+        kg = quant.dequantize(kp[safe], kp_scale[safe], D)
+        vg = quant.dequantize(vp[safe], vp_scale[safe], D)
+    else:
+        kg = kp[safe].astype(jnp.float32)  # (B,npg,page,K,hd)
+        vg = vp[safe].astype(jnp.float32)
+    kg = kg.reshape(B, npg * page, K, D)
+    vg = vg.reshape(B, npg * page, K, D)
     qf = (q.astype(jnp.float32) * scale).reshape(B, C, K, G, D)
     logits = jnp.einsum("bckgd,blkd->bckgl", qf, kg)  # (B,C,K,G,L)
     kpos = jnp.arange(npg * page, dtype=jnp.int32)

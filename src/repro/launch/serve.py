@@ -85,6 +85,17 @@ def main(argv=None):
     ap.add_argument("--prefix-cache", action="store_true",
                     help="paged: share KV pages across requests with a "
                          "radix prefix index (greedy outputs unchanged)")
+    ap.add_argument("--kv-dtype", default="",
+                    choices=["", "bfloat16", "float32", "int8", "int4"],
+                    help="KV pool storage dtype; int8/int4 quantize pages "
+                         "with per-page scales (default: model config)")
+    ap.add_argument("--spec-decode", default="off",
+                    choices=["off", "ngram"],
+                    help="speculative decoding: self-speculative n-gram "
+                         "drafting, greedy-token-identical")
+    ap.add_argument("--draft-len", type=int, default=4,
+                    help="speculative: draft tokens proposed per row "
+                         "(verified in one chunk step)")
     ap.add_argument("--shared-prefix-len", type=int, default=0,
                     help="workload: open every prompt with a template "
                          "prefix of this many tokens (0 = off)")
@@ -92,7 +103,7 @@ def main(argv=None):
                     help="workload: distinct template prefixes to cycle")
     args = ap.parse_args(argv)
 
-    from repro.run import RunSpec, ServeSection
+    from repro.run import KVCacheSpec, RunSpec, ServeSection
     from repro.run.dispatch import run_spec
 
     spec = RunSpec(
@@ -108,11 +119,16 @@ def main(argv=None):
             temperature=args.temperature,
             serve_mode=args.serve_mode or "",
             warmup=not args.no_warmup,
-            kv_layout=args.kv_layout,
-            page_size=args.page_size,
-            prefill_chunk=args.prefill_chunk,
-            n_pages=args.n_pages,
-            prefix_cache=args.prefix_cache,
+            kv=KVCacheSpec(
+                layout=args.kv_layout,
+                page_size=args.page_size,
+                prefill_chunk=args.prefill_chunk,
+                n_pages=args.n_pages,
+                prefix_cache=args.prefix_cache,
+                dtype=args.kv_dtype,
+                spec_decode=args.spec_decode,
+                draft_len=args.draft_len,
+            ),
             shared_prefix_len=args.shared_prefix_len,
             n_templates=args.n_templates,
             arrival_rate=args.arrival_rate,

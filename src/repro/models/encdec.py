@@ -229,9 +229,10 @@ def encode_cross(params, cfg: ModelConfig, frames):
 
 
 def decode_chunk(params, cfg: ModelConfig, tokens, cache, page_table, pos,
-                 n_valid, *, window=None):
+                 n_valid, *, window=None, full_logits=False):
     """C decoder tokens per row against paged self-attn KV + static cross
-    caches (see ``lm.decode_chunk`` for the batch contract)."""
+    caches (see ``lm.decode_chunk`` for the batch contract and the
+    ``full_logits`` speculative-verify variant)."""
     vals = split_tree(params)[0] if _is_tagged_tree(params) else params
     dt = jnp.dtype(cfg.dtype)
     B, C = tokens.shape
@@ -257,6 +258,9 @@ def decode_chunk(params, cfg: ModelConfig, tokens, cache, page_table, pos,
         block_fn, x, (vals["dec_blocks"], cache["self"], cache["cross"])
     )
     x = L.apply_norm(vals["dec_norm"], x, cfg)
+    if full_logits:
+        return _head(vals, cfg, x), {"self": new_self,
+                                     "cross": cache["cross"]}
     logits = _head(vals, cfg, L.gather_last(
         x, jnp.asarray(n_valid, jnp.int32) - 1))
     return logits[:, 0], {"self": new_self, "cross": cache["cross"]}

@@ -15,7 +15,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import MambaConfig, ModelConfig, RWKV6Config
 from repro.dist import constrain, p
-from repro.kernels import ops
+from repro.kernels import ops, quant
 
 
 def _cdtype(cfg: ModelConfig):
@@ -219,6 +219,10 @@ def attention_decode(params, x, cfg: ModelConfig, cache: Dict[str, Any], *,
 # ---- KV cache ------------------------------------------------------------- #
 def init_kv_cache(cfg: ModelConfig, B: int, length: int) -> Dict[str, Any]:
     K, hd = cfg.n_kv_heads, cfg.head_dim
+    if cfg.kv_cache_dtype == "int4":
+        raise ValueError(
+            "int4 KV is only supported by the paged layout "
+            "(kv_cache_dtype='int4' with a slab cache)")
     int8 = cfg.kv_cache_dtype == "int8"
     dt = jnp.int8 if int8 else _cdtype(cfg)
     cache = {
@@ -232,12 +236,25 @@ def init_kv_cache(cfg: ModelConfig, B: int, length: int) -> Dict[str, Any]:
     return cache
 
 
-def _quantize_kv(x):
-    """x: (B,K,hd) -> (int8 values, per-(B,K) scale)."""
-    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)  # (B,K)
-    scale = jnp.maximum(amax, 1e-6) / 127.0
-    q = jnp.round(x.astype(jnp.float32) / scale[..., None])
-    return jnp.clip(q, -127, 127).astype(jnp.int8), scale
+# Per-(row, K-head) symmetric int8 quantization over the head dim;
+# shared with the kernels/tests via kernels.quant.
+_quantize_kv = quant.quantize_int8
+
+
+def _check_insert_dtype(pool_dtype, new_dtype, where: str) -> None:
+    """Writes into an integer pool must come through the quantizer.
+
+    Without this, the fallback ``astype(pool.dtype)`` would silently
+    truncate float K/V into an int8/int4 pool whose scale entries are
+    missing — garbage attention, no error. Dtypes are static, so this
+    raises at trace time, not mid-step.
+    """
+    if (jnp.issubdtype(pool_dtype, jnp.integer)
+            and not jnp.issubdtype(new_dtype, jnp.integer)):
+        raise TypeError(
+            f"{where}: writing {new_dtype} values into a {pool_dtype} pool "
+            "without quantization scales — quantized caches must carry "
+            "k_scale/v_scale (slab) or kp_scale/vp_scale (paged) entries")
 
 
 def cache_insert(cache, k_new, v_new, pos):
@@ -265,6 +282,7 @@ def cache_insert(cache, k_new, v_new, pos):
         out["v_scale"] = jax.lax.dynamic_update_slice_in_dim(
             cache["v_scale"], vs[:, None], slot, axis=1)
     else:
+        _check_insert_dtype(cache["k"].dtype, k_new.dtype, "cache_insert")
         out["k"] = jax.lax.dynamic_update_slice_in_dim(
             cache["k"], k_new[:, None].astype(cache["k"].dtype), slot, axis=1)
         out["v"] = jax.lax.dynamic_update_slice_in_dim(
@@ -293,6 +311,7 @@ def _cache_insert_per_row(cache, k_new, v_new, posv):
         out["k_scale"] = put(cache["k_scale"], ks)
         out["v_scale"] = put(cache["v_scale"], vs)
     else:
+        _check_insert_dtype(cache["k"].dtype, k_new.dtype, "cache_insert")
         out["k"], out["v"] = put(cache["k"], k_new), put(cache["v"], v_new)
     out["slot_pos"] = jnp.where(hit, posv[:, None], cache["slot_pos"])
     return out
@@ -309,13 +328,19 @@ def init_paged_kv_cache(cfg: ModelConfig, n_pages: int, page: int):
     plus per-row lengths, not by a per-slot ``slot_pos`` map.
     """
     K, hd = cfg.n_kv_heads, cfg.head_dim
-    int8 = cfg.kv_cache_dtype == "int8"
-    dt = jnp.int8 if int8 else _cdtype(cfg)
+    quantized = cfg.kv_cache_dtype in ("int8", "int4")
+    store_hd = hd
+    if cfg.kv_cache_dtype == "int4":
+        if hd % 2:
+            raise ValueError(
+                f"int4 KV packs two dims per byte; head_dim {hd} is odd")
+        store_hd = hd // 2  # two nibbles per byte (kernels.quant layout)
+    dt = jnp.int8 if quantized else _cdtype(cfg)
     cache = {
-        "kp": jnp.zeros((n_pages + 1, page, K, hd), dt),
-        "vp": jnp.zeros((n_pages + 1, page, K, hd), dt),
+        "kp": jnp.zeros((n_pages + 1, page, K, store_hd), dt),
+        "vp": jnp.zeros((n_pages + 1, page, K, store_hd), dt),
     }
-    if int8:
+    if quantized:
         cache["kp_scale"] = jnp.zeros((n_pages + 1, page, K), jnp.float32)
         cache["vp_scale"] = jnp.zeros((n_pages + 1, page, K), jnp.float32)
     return cache
@@ -355,13 +380,17 @@ def paged_cache_insert(cache, k_new, v_new, page_table, pos, n_valid):
 
     out = dict(cache)
     if "kp_scale" in cache:
-        kq, ks = _quantize_kv(k_new.reshape(B * C, K, hd))
-        vq, vs = _quantize_kv(v_new.reshape(B * C, K, hd))
-        out["kp"] = put(cache["kp"], kq.reshape(B, C, K, hd))
-        out["vp"] = put(cache["vp"], vq.reshape(B, C, K, hd))
+        store_hd = cache["kp"].shape[-1]
+        qz = quant.quantize_int4 if store_hd != hd else quant.quantize_int8
+        kq, ks = qz(k_new.reshape(B * C, K, hd))
+        vq, vs = qz(v_new.reshape(B * C, K, hd))
+        out["kp"] = put(cache["kp"], kq.reshape(B, C, K, store_hd))
+        out["vp"] = put(cache["vp"], vq.reshape(B, C, K, store_hd))
         out["kp_scale"] = put(cache["kp_scale"], ks.reshape(B, C, K))
         out["vp_scale"] = put(cache["vp_scale"], vs.reshape(B, C, K))
     else:
+        _check_insert_dtype(cache["kp"].dtype, k_new.dtype,
+                            "paged_cache_insert")
         out["kp"] = put(cache["kp"], k_new)
         out["vp"] = put(cache["vp"], v_new)
     return out

@@ -336,14 +336,18 @@ def init_paged_cache(cfg: ModelConfig, n_pages: int, page: int):
 
 
 def decode_chunk(params, cfg: ModelConfig, tokens, cache, page_table, pos,
-                 n_valid, *, window=None):
+                 n_valid, *, window=None, full_logits=False):
     """C tokens per row against the paged cache — the serving engine's
     single compiled program (chunked prefill + batched decode mixed).
 
     tokens: (B, C) int32 — row b feeds ``n_valid[b]`` real tokens
     starting at absolute position ``pos[b]`` (decode rows feed 1, the
     rest padding). page_table: (B, max_pages) int32. Returns (logits of
-    each row's last valid token (B, vocab), new_cache).
+    each row's last valid token (B, vocab), new_cache) — or, with
+    ``full_logits``, the head over every fed position ((B, C, vocab);
+    positions past ``n_valid`` are garbage the caller masks). The
+    speculative verify step uses the full head: position i's logits
+    score the draft token fed at i+1.
     """
     vals = split_tree(params)[0] if _is_tagged_tree(params) else params
     x = _embed(vals, cfg, tokens)
@@ -371,6 +375,8 @@ def decode_chunk(params, cfg: ModelConfig, tokens, cache, page_table, pos,
 
     x, new_cache = jax.lax.scan(block_fn, x, (vals["blocks"], cache))
     x = L.apply_norm(vals["final_norm"], x, cfg)
+    if full_logits:
+        return _head(vals, cfg, x), new_cache
     logits = _head(vals, cfg, L.gather_last(x, jnp.asarray(
         n_valid, jnp.int32) - 1))
     return logits[:, 0], new_cache

@@ -18,6 +18,7 @@ from repro.run.spec import (
     MODES,
     BenchSection,
     DryrunSection,
+    KVCacheSpec,
     RunSpec,
     ServeSection,
     TrainerSection,
@@ -29,6 +30,7 @@ __all__ = [
     "MODES",
     "BenchSection",
     "DryrunSection",
+    "KVCacheSpec",
     "RunSpec",
     "ServeSection",
     "SpecError",

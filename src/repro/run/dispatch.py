@@ -158,17 +158,21 @@ def _run_serve(spec: RunSpec) -> Dict[str, Any]:
     params, _ = split_tree(api.init(cfg, jax.random.PRNGKey(spec.seed)))
 
     n_media = cfg.n_media_tokens if cfg.frontend == "vision_patches" else 0
+    kv = s.kv
     scfg = ServeConfig(
         max_batch=s.batch if s.max_batch is None else s.max_batch,
         max_len=n_media + s.prompt_len + s.tokens,
         prefill_len=s.prompt_len,
         temperature=s.temperature,
         seed=spec.seed,
-        kv_layout=s.kv_layout,
-        page_size=s.page_size,
-        prefill_chunk=s.prefill_chunk,
-        n_pages=s.n_pages,
-        prefix_cache=s.prefix_cache,
+        kv_layout=kv.layout,
+        page_size=kv.page_size,
+        prefill_chunk=kv.prefill_chunk,
+        n_pages=kv.n_pages,
+        prefix_cache=kv.prefix_cache,
+        kv_dtype=kv.dtype,
+        spec_decode=kv.spec_decode,
+        draft_len=kv.draft_len,
     )
     reqs = make_trace(
         cfg, scenario=scenario, n=s.batch, tokens=s.tokens,
@@ -190,12 +194,17 @@ def _run_serve(spec: RunSpec) -> Dict[str, Any]:
 
     print(f"{spec.arch} [{scenario}, mode="
           f"{s.serve_mode or cfg.param_sharding}, "
-          f"slots={scfg.max_batch}, kv={engine.layout}]: {report.format()}")
+          f"slots={scfg.max_batch}, "
+          f"kv={engine.layout}{'/' + kv.dtype if kv.dtype else ''}]: "
+          f"{report.format()}")
     if report.prefix_hit_rate is not None:
         print(f"  prefix cache: hit_rate {report.prefix_hit_rate:.3f}, "
               f"{report.pages_shared} pages shared, "
               f"{report.prefill_tokens_skipped} prefill tokens skipped, "
               f"{report.cow_copies} cow copies")
+    if report.spec_accept_rate is not None:
+        print(f"  speculative: accept_rate {report.spec_accept_rate:.3f}, "
+              f"{report.draft_tokens} draft tokens proposed")
     if s.slo_classes:
         print(f"  slo: goodput {report.slo_goodput:.3f}, "
               f"{report.slo_violations} violation(s)")

@@ -25,6 +25,7 @@ from __future__ import annotations
 import dataclasses
 import difflib
 import typing
+import warnings
 from typing import Any, Dict, Mapping, Sequence
 
 from repro.configs import base as config_base
@@ -164,16 +165,31 @@ def apply_assignments(spec, assignments: Sequence[str]):
     return spec
 
 
-def set_path(spec, dotted: str, raw: Any):
-    """Set one dotted path on a RunSpec (sections, model.*, top-level)."""
+def set_path(spec, dotted: str, raw: Any, *, _where: str = ""):
+    """Set one dotted path on a RunSpec (sections — arbitrarily nested —
+    plus ``model.*`` and top-level scalars). Deprecated flat spellings
+    declared in a section's ``LEGACY_KEYS`` warn and forward to their
+    nested home (``serve.kv_layout`` -> ``serve.kv.layout``)."""
     head, _, rest = dotted.partition(".")
     fields = config_base.resolved_field_types(type(spec))
+    legacy = getattr(type(spec), "LEGACY_KEYS", {})
+    level = _where or "run spec"
+    if head in legacy and head not in fields:
+        target = legacy[head]
+        warnings.warn(
+            f"{level}.{head} is deprecated; use {level}.{target}"
+            if _where else f"{head} is deprecated; use {target}",
+            DeprecationWarning, stacklevel=2)
+        if rest:
+            raise SpecError(
+                f"{head!r} is scalar; {dotted!r} does not exist")
+        return set_path(spec, target, raw, _where=_where)
     if head not in fields:
         raise SpecError(
-            f"run spec has no field {head!r}"
-            + did_you_mean(head, fields)
+            f"{level} has no field {head!r}"
+            + did_you_mean(head, list(fields) + list(legacy))
         )
-    if head == "model":
+    if head == "model" and not _where:
         if not rest:
             raise SpecError(
                 "set a concrete model field, e.g. model.param_sharding=wus"
@@ -190,22 +206,12 @@ def set_path(spec, dotted: str, raw: Any):
                 f"({', '.join(f.name for f in dataclasses.fields(typ))})"
             )
         section = getattr(spec, head)
-        sub_fields = config_base.resolved_field_types(typ)
-        sub_head, _, sub_rest = rest.partition(".")
-        if sub_head not in sub_fields:
-            raise SpecError(
-                f"{head} has no field {sub_head!r}"
-                + did_you_mean(sub_head, sub_fields)
-            )
-        if sub_rest:
-            raise SpecError(f"{dotted!r}: sections nest only one level")
-        value = coerce_value(raw, sub_fields[sub_head],
-                             where=f"{head}.{sub_head}")
-        return dataclasses.replace(
-            spec, **{head: dataclasses.replace(section, **{sub_head: value})}
-        )
+        sub = set_path(section, rest, raw,
+                       _where=f"{_where}.{head}" if _where else head)
+        return dataclasses.replace(spec, **{head: sub})
     if rest:
         raise SpecError(f"{head!r} is scalar; {dotted!r} does not exist")
+    where = f"{_where}.{head}" if _where else head
     return dataclasses.replace(
-        spec, **{head: coerce_value(raw, typ, where=head)}
+        spec, **{head: coerce_value(raw, typ, where=where)}
     )

@@ -17,8 +17,9 @@ defaults.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from dataclasses import dataclass, field
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, ClassVar, Dict, Optional, Tuple
 
 from repro.configs import base as config_base
 from repro.run.overrides import (
@@ -68,11 +69,82 @@ class TrainerSection:
 
 
 KV_LAYOUTS = ("auto", "slab", "paged")  # mirrors serve.engine.KV_LAYOUTS
+# Mirrors serve.engine.ServeConfig ('' -> inherit the model config dtype).
+KV_DTYPES = ("", "bfloat16", "float32", "int8", "int4")
+SPEC_DECODE_MODES = ("off", "ngram")  # mirrors serve.speculative.get_drafter
+
+
+@dataclass(frozen=True)
+class KVCacheSpec:
+    """The ``serve.kv`` sub-section: KV-cache geometry, storage dtype and
+    speculative decoding, as one typed unit (``--set serve.kv.page_size=32``).
+
+    Folds the flat serve keys the KV subsystem had accreted
+    (``serve.kv_layout``, ``serve.page_size``, ...) into a nested
+    dataclass; the old flat spellings still load through deprecation
+    shims (:attr:`ServeSection.LEGACY_KEYS`) that warn and forward.
+    """
+
+    layout: str = "auto"        # auto | slab | paged (auto: paged when the
+    #                             stack is attention-only, slab otherwise)
+    page_size: int = 16         # paged: tokens per KV page
+    prefill_chunk: int = 8      # paged: prompt tokens fed per chunk step
+    n_pages: Optional[int] = None  # paged pool size; None -> slab parity
+    prefix_cache: bool = False  # paged: cross-request KV prefix sharing
+    dtype: str = ""             # '' -> model cfg dtype; bfloat16|float32|
+    #                             int8|int4 (quantized paged pools)
+    spec_decode: str = "off"    # off | ngram (self-speculative drafting)
+    draft_len: int = 4          # spec decode: draft tokens proposed per row
+
+    def __post_init__(self):
+        if self.layout not in KV_LAYOUTS:
+            raise SpecError(
+                f"serve.kv.layout must be one of {KV_LAYOUTS}, got "
+                f"{self.layout!r}" + did_you_mean(self.layout, KV_LAYOUTS))
+        if self.page_size < 1 or self.prefill_chunk < 1:
+            raise SpecError(
+                "serve.kv.page_size and serve.kv.prefill_chunk must be >= 1")
+        if self.n_pages is not None and self.n_pages < 1:
+            raise SpecError("serve.kv.n_pages must be >= 1")
+        if self.prefix_cache and self.layout == "slab":
+            raise SpecError(
+                "serve.kv.prefix_cache shares paged-pool pages; it cannot "
+                "run with serve.kv.layout='slab'")
+        if self.dtype not in KV_DTYPES:
+            raise SpecError(
+                f"serve.kv.dtype must be one of {KV_DTYPES}, got "
+                f"{self.dtype!r}" + did_you_mean(self.dtype, KV_DTYPES))
+        if self.spec_decode not in SPEC_DECODE_MODES:
+            raise SpecError(
+                f"serve.kv.spec_decode must be one of {SPEC_DECODE_MODES}, "
+                f"got {self.spec_decode!r}"
+                + did_you_mean(self.spec_decode, SPEC_DECODE_MODES))
+        if self.draft_len < 1:
+            raise SpecError("serve.kv.draft_len must be >= 1")
+        if self.spec_decode != "off" and self.draft_len >= self.prefill_chunk:
+            raise SpecError(
+                "serve.kv.draft_len + 1 verified tokens must fit one chunk "
+                f"step: need draft_len < prefill_chunk, got "
+                f"{self.draft_len} >= {self.prefill_chunk}")
 
 
 @dataclass(frozen=True)
 class ServeSection:
     """Serve-mode knobs (mirrors the ``serve.Engine`` workload surface)."""
+
+    # Old flat KV keys -> their home in the nested ``kv`` sub-section.
+    # from_dict and --set accept them with a DeprecationWarning; to_dict
+    # always emits the nested form.
+    LEGACY_KEYS: ClassVar[Dict[str, str]] = {
+        "kv_layout": "kv.layout",
+        "page_size": "kv.page_size",
+        "prefill_chunk": "kv.prefill_chunk",
+        "n_pages": "kv.n_pages",
+        "prefix_cache": "kv.prefix_cache",
+        "kv_dtype": "kv.dtype",
+        "spec_decode": "kv.spec_decode",
+        "draft_len": "kv.draft_len",
+    }
 
     tokens: int = 16
     batch: int = 4
@@ -81,12 +153,7 @@ class ServeSection:
     temperature: float = 0.0
     serve_mode: str = ""        # '' -> cfg.param_sharding; tp2d|fsdp|wus|...
     warmup: bool = True         # pre-compile so metrics exclude XLA time
-    kv_layout: str = "auto"     # auto | slab | paged (auto: paged when the
-    #                             stack is attention-only, slab otherwise)
-    page_size: int = 16         # paged: tokens per KV page
-    prefill_chunk: int = 8      # paged: prompt tokens fed per chunk step
-    n_pages: Optional[int] = None  # paged pool size; None -> slab parity
-    prefix_cache: bool = False  # paged: cross-request KV prefix sharing
+    kv: KVCacheSpec = field(default_factory=KVCacheSpec)
     shared_prefix_len: int = 0  # workload: template prefix tokens (0 off)
     n_templates: int = 1        # workload: distinct shared templates
     arrival_rate: float = 0.5   # server: mean requests per engine step
@@ -111,20 +178,6 @@ class ServeSection:
                 raise SpecError(
                     f"serve.slo_classes: unknown class {c!r}; known: "
                     f"{SLO_CLASSES}" + did_you_mean(c, SLO_CLASSES))
-        if self.kv_layout not in KV_LAYOUTS:
-            raise SpecError(
-                f"serve.kv_layout must be one of {KV_LAYOUTS}, got "
-                f"{self.kv_layout!r}" + did_you_mean(self.kv_layout,
-                                                     KV_LAYOUTS))
-        if self.page_size < 1 or self.prefill_chunk < 1:
-            raise SpecError(
-                "serve.page_size and serve.prefill_chunk must be >= 1")
-        if self.n_pages is not None and self.n_pages < 1:
-            raise SpecError("serve.n_pages must be >= 1")
-        if self.prefix_cache and self.kv_layout == "slab":
-            raise SpecError(
-                "serve.prefix_cache shares paged-pool pages; it cannot "
-                "run with serve.kv_layout='slab'")
         if self.shared_prefix_len < 0 or self.n_templates < 1:
             raise SpecError(
                 "serve.shared_prefix_len must be >= 0 and "
@@ -238,11 +291,31 @@ def _section_from_dict(section_cls, d, *, where: str):
     if not isinstance(d, dict):
         raise SpecError(f"{where} must be an object")
     fields = config_base.resolved_field_types(section_cls)
+    legacy = getattr(section_cls, "LEGACY_KEYS", {})
+    d = dict(d)
+    for key in [k for k in d if k in legacy]:
+        target = legacy[key]
+        warnings.warn(
+            f"{where}.{key} is deprecated; use {where}.{target}",
+            DeprecationWarning, stacklevel=3)
+        sub, _, leaf = target.partition(".")
+        value = d.pop(key)
+        nested = d.get(sub, {})
+        if not isinstance(nested, dict):
+            raise SpecError(f"{where}.{sub} must be an object")
+        nested = dict(nested)
+        # an explicit nested key beats its deprecated flat spelling
+        nested.setdefault(leaf, value)
+        d[sub] = nested
     kwargs = {}
     for key, value in d.items():
         if key not in fields:
             raise SpecError(
                 f"{where} has no field {key!r}" + did_you_mean(key, fields)
             )
-        kwargs[key] = coerce_value(value, fields[key], where=f"{where}.{key}")
+        typ = fields[key]
+        if dataclasses.is_dataclass(typ):
+            kwargs[key] = _section_from_dict(typ, value, where=f"{where}.{key}")
+        else:
+            kwargs[key] = coerce_value(value, typ, where=f"{where}.{key}")
     return section_cls(**kwargs)

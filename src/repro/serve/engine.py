@@ -106,6 +106,10 @@ class ServeConfig:
     prefill_chunk: int = 8
     n_pages: Optional[int] = None
     prefix_cache: bool = False   # cross-request KV sharing (paged only)
+    kv_dtype: str = ""           # '' inherit model cfg | bfloat16 | float32
+                                 # | int8 | int4 (int4: paged only)
+    spec_decode: str = "off"     # off | ngram (paged layout, greedy only)
+    draft_len: int = 4           # tokens proposed per row per step
 
     def __post_init__(self):
         if self.kv_layout != "paged" and self.prefill_len > self.max_len:
@@ -120,6 +124,17 @@ class ServeConfig:
             raise ValueError("page_size and prefill_chunk must be >= 1")
         if self.n_pages is not None and self.n_pages < 1:
             raise ValueError("n_pages must be >= 1")
+        if self.kv_dtype not in ("", "bfloat16", "float32", "int8", "int4"):
+            raise ValueError(
+                f"kv_dtype must be '', 'bfloat16', 'float32', 'int8' or "
+                f"'int4', got {self.kv_dtype!r}")
+        if self.spec_decode not in ("off", "ngram"):
+            raise ValueError(
+                f"spec_decode must be 'off' or 'ngram', got "
+                f"{self.spec_decode!r} (model-based drafting passes a "
+                f"DraftModelDrafter to the Engine)")
+        if self.draft_len < 1:
+            raise ValueError("draft_len must be >= 1")
 
     @property
     def max_pages(self) -> int:
@@ -133,11 +148,15 @@ class ServeConfig:
 
 class Engine:
     def __init__(self, cfg: ModelConfig, params, rules: Optional[Rules] = None,
-                 serve: Optional[ServeConfig] = None):
+                 serve: Optional[ServeConfig] = None, drafter=None):
+        self.scfg = serve or ServeConfig()
+        if self.scfg.kv_dtype:
+            # The KV pool dtype is a serving knob: override the model
+            # config's kv_cache_dtype for cache construction + inserts.
+            cfg = dataclasses.replace(cfg, kv_cache_dtype=self.scfg.kv_dtype)
         self.cfg = cfg
         self.params = params
         self.rules = rules
-        self.scfg = serve or ServeConfig()
         self.api = ModelAPI(cfg)
         # Recurrent mixers carry prompt state -> exact-length prefill.
         self._exact = any(s.mixer != "attn" for s in cfg.block_pattern)
@@ -156,10 +175,44 @@ class Engine:
                 "prefix_cache shares pages of the paged KV pool; the slab "
                 "layout has no pages to share — use kv_layout='paged' "
                 "(or drop prefix_cache for this arch)")
+        # Unsupported dtype/layout combos fail HERE, at construction —
+        # not as a shape error in the middle of a serving step.
+        if cfg.kv_cache_dtype == "int4":
+            if layout != "paged":
+                raise ValueError(
+                    "kv_dtype='int4' packs pool pages two-dims-per-byte; "
+                    "only the paged layout supports it — use "
+                    "kv_layout='paged' or kv_dtype='int8'")
+            if cfg.head_dim % 2:
+                raise ValueError(
+                    f"kv_dtype='int4' needs an even head_dim; {cfg.name} "
+                    f"has head_dim={cfg.head_dim}")
+        self._drafter = drafter
+        if self._drafter is None and self.scfg.spec_decode != "off":
+            from repro.serve.speculative import get_drafter
+            self._drafter = get_drafter(self.scfg.spec_decode)
+        if self._drafter is not None:
+            if layout != "paged":
+                raise ValueError(
+                    "speculative decoding verifies drafts through the "
+                    "paged chunk program; use kv_layout='paged'")
+            if self.scfg.temperature > 0.0:
+                raise ValueError(
+                    "speculative decoding is greedy-only (acceptance "
+                    "compares against argmax); set temperature=0")
+            if self.scfg.draft_len + 1 > self.scfg.prefill_chunk:
+                raise ValueError(
+                    f"draft_len+1 ({self.scfg.draft_len + 1}) tokens must "
+                    f"fit one chunk; raise prefill_chunk "
+                    f"({self.scfg.prefill_chunk}) or lower draft_len")
         self.layout = layout
 
         if layout == "paged":
-            self._chunk_jit = jax.jit(make_serve_chunk_step(cfg, rules))
+            # With a drafter the one chunk program returns the head over
+            # all C positions (verify needs every draft's logits) — a
+            # different jit, but still exactly one compiled program.
+            self._chunk_jit = jax.jit(make_serve_chunk_step(
+                cfg, rules, full_logits=self._drafter is not None))
             if cfg.is_encdec:
                 api = self.api
 
@@ -207,6 +260,8 @@ class Engine:
         self._prefill_skipped = 0
         self._pages_shared = 0
         self._cow = 0
+        self._draft_total = 0     # draft tokens proposed (spec decode)
+        self._draft_accepted = 0  # draft tokens accepted by verification
         if self.layout == "paged":
             self._pool = slab_ops.PagePool(
                 self.scfg.pool_pages, self.scfg.page_size)
@@ -394,6 +449,10 @@ class Engine:
             pages_shared=self._pages_shared,
             prefill_tokens_skipped=self._prefill_skipped,
             cow_copies=self._cow,
+            spec_accept_rate=(
+                self._draft_accepted / max(self._draft_total, 1)
+                if self._drafter is not None else None),
+            draft_tokens=self._draft_total,
         )
         self.reset()
         return report
@@ -516,15 +575,53 @@ class Engine:
                 "encode", time.perf_counter() - t0, 0,
                 pool_util=self._pool.utilization()))
 
+    def _draft(self, active) -> dict:
+        """Propose up to ``draft_len`` tokens for each decode row.
+
+        A draft is capped so (1) the fed group [last_tok, d_1..d_k] fits
+        the chunk (k <= C-1) and (2) even full acceptance plus the bonus
+        token never exceeds the request's generation budget (k <=
+        remaining-1), so verified positions never outgrow the pages the
+        request was admitted for. Rows still prefilling, and rows whose
+        drafter returns nothing, decode plainly and contribute no
+        accounting."""
+        drafts = {}
+        k_max = min(self.scfg.draft_len, self.scfg.prefill_chunk - 1)
+        for slot in sorted(active):
+            if self._stream.get(slot):
+                continue
+            req = active[slot]
+            remaining = req.max_new_tokens - len(req.tokens)
+            k = min(k_max, remaining - 1)
+            if k <= 0:
+                continue
+            ctx = list(req.prompt) + list(req.tokens)
+            d = list(self._drafter.propose(ctx, k))[:k]
+            if d:
+                drafts[slot] = [int(t) for t in d]
+        return drafts
+
     def _chunk_once(self) -> None:
         """One mixed dispatch: every occupied slot advances — decode rows
-        by one token, prefilling rows by up to ``prefill_chunk`` prompt
-        tokens — through the single compiled chunk program."""
+        by one token (plus any speculative draft), prefilling rows by up
+        to ``prefill_chunk`` prompt tokens — through the single compiled
+        chunk program.
+
+        Speculative decode rides the same dispatch: a decode row feeds
+        [last_tok, d_1..d_k] with n_valid = 1+k; the full-logits head
+        gives argmax targets at every fed position, the accepted prefix
+        is the run of drafts matching those targets, and the row emits
+        accept+1 tokens (the +1 is the model's own next token — free,
+        and exactly what non-speculative greedy would produce next)."""
         C = self.scfg.prefill_chunk
         B = self.scfg.max_batch
         active = dict(self.sched.running())
+        spec = self._drafter is not None
+        drafts = self._draft(active) if spec else {}
 
-        # Lazy decode growth; when the pool runs dry, preempt the slot
+        # Lazy decode growth; when the pool runs dry, first shed drafts
+        # (verifying fewer tokens is strictly cheaper than evicting KV),
+        # then drop cold prefix-cache entries, then preempt the slot
         # with the most SLO slack (ties: youngest-first, which is the
         # whole policy when no request carries a class — see serve.slo).
         while active:
@@ -532,17 +629,22 @@ class Engine:
             for slot in active:
                 if self._stream.get(slot):
                     continue  # prefill pages were reserved at admission
-                need = (self._pool.pages_for(int(self._pos[slot]) + 1)
+                want = int(self._pos[slot]) + 1 + len(drafts.get(slot, ()))
+                need = (self._pool.pages_for(want)
                         - len(self._pool.slot_pages(slot)))
                 if need > 0:
                     growth[slot] = need
             shortfall = sum(growth.values()) - self._pool.free_pages
             if shortfall <= 0:
                 for slot in growth:
-                    self._pool.ensure(slot, int(self._pos[slot]) + 1)
+                    self._pool.ensure(
+                        slot,
+                        int(self._pos[slot]) + 1
+                        + len(drafts.get(slot, ())))
                 break
-            # Prefer dropping cold cache entries over evicting a live
-            # request; preempt only once the index has nothing to give.
+            if drafts:
+                drafts.pop(sorted(drafts)[0])  # degrade, deterministically
+                continue
             if self._prefix is not None and self._prefix.evict(shortfall):
                 continue
             victim = slo.choose_victim(
@@ -550,6 +652,7 @@ class Engine:
                 {s: int(self._admit_seq[s]) for s in active})
             self._preempt_slot(victim)
             active.pop(victim)
+            drafts.pop(victim, None)
         if not active:
             return
 
@@ -567,6 +670,10 @@ class Engine:
                 prefilling = True
             else:
                 toks[slot, 0] = self._tok[slot]
+                d = drafts.get(slot)
+                if d:
+                    toks[slot, 1:1 + len(d)] = d
+                    nv[slot] = 1 + len(d)
             self._ptab[slot] = self._pool.table_row(
                 slot, self.scfg.max_pages)
 
@@ -574,31 +681,62 @@ class Engine:
         logits, self._cache = self._chunk_jit(
             self.params, jnp.asarray(toks), self._cache,
             jnp.asarray(self._ptab), jnp.asarray(posb), jnp.asarray(nv))
-        # each row's sampled token sits right after its last fed token
-        next_tok = np.asarray(jax.block_until_ready(
-            self._sample(logits, self._rid, posb + nv)))
+        if spec:
+            # full-logits head: targets[b, i] is the model's next token
+            # after fed position i (greedy — spec mode is argmax-only).
+            nxt = np.asarray(jax.block_until_ready(jnp.argmax(logits, -1)))
+        else:
+            # each row's sampled token sits right after its last fed token
+            nxt = np.asarray(jax.block_until_ready(
+                self._sample(logits, self._rid, posb + nv)))
         dt = time.perf_counter() - t0
 
         produced = 0
         for slot, req in active.items():
             n = int(nv[slot])
-            self._pos[slot] += n
-            if self._prefix is not None:
-                self._register(slot, req)
             stream = self._stream.get(slot)
-            if stream:
-                self._stream[slot] = stream[n:]
-                if self._stream[slot]:
-                    continue  # mid-prompt: logits not sampled yet
-            tok = int(next_tok[slot])
-            req.tokens.append(tok)
-            produced += 1
-            if req.t_first_token is None:
-                req.t_first_token = time.perf_counter()
-                req.s_first_token = self._step_idx
-            self._tok[slot] = tok
-            if req.done or tok == self.scfg.eos_id:
-                self._retire_paged(slot, req)
+            d = drafts.get(slot)
+            if stream or not d:
+                # plain path: advance by the fed count, then maybe emit
+                # one token — byte-identical to the pre-speculative loop.
+                self._pos[slot] += n
+                if self._prefix is not None:
+                    self._register(slot, req)
+                if stream:
+                    self._stream[slot] = stream[n:]
+                    if self._stream[slot]:
+                        continue  # mid-prompt: logits not sampled yet
+                emit = [int(nxt[slot, n - 1] if spec else nxt[slot])]
+            else:
+                k = len(d)
+                a = 0
+                while a < k and d[a] == int(nxt[slot, a]):
+                    a += 1
+                emit = [int(nxt[slot, i]) for i in range(a + 1)]
+                self._draft_total += k
+                self._draft_accepted += a
+                # Rejected positions (pos+a+1 ..) hold stale draft KV;
+                # they sit past the new n_valid limit so attention never
+                # reads them, and the real tokens overwrite them when
+                # those positions are eventually fed.
+                self._pos[slot] += a + 1
+            alive = True
+            for tok in emit:
+                req.tokens.append(tok)
+                produced += 1
+                if req.t_first_token is None:
+                    req.t_first_token = time.perf_counter()
+                    req.s_first_token = self._step_idx
+                self._tok[slot] = tok
+                if req.done or tok == self.scfg.eos_id:
+                    self._retire_paged(slot, req)
+                    alive = False
+                    break
+            if d and not stream and alive and self._prefix is not None:
+                # register AFTER the accepted tokens joined req.tokens —
+                # the index slices (prompt + tokens)[:pos] and every
+                # position below _pos is now a verified token.
+                self._register(slot, req)
         self._trace.append(StepTrace(
             "mixed" if prefilling else "decode", dt, produced,
             pool_util=self._pool.utilization()))

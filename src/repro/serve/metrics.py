@@ -53,6 +53,9 @@ class ServeReport:
     pages_shared: int = 0        # cached pages mapped into admitted slots
     prefill_tokens_skipped: int = 0  # prompt tokens served from cache
     cow_copies: int = 0          # shared pages privatized before a write
+    # -- speculative decoding (paged engine, serve.speculative) --------- #
+    spec_accept_rate: Optional[float] = None  # accepted / proposed drafts
+    draft_tokens: int = 0        # draft tokens proposed across the run
 
     # ------------------------------------------------------------------ #
     @property
@@ -131,6 +134,11 @@ class ServeReport:
                 pages_shared=self.pages_shared,
                 prefill_tokens_skipped=self.prefill_tokens_skipped,
                 cow_copies=self.cow_copies,
+            )
+        if self.spec_accept_rate is not None:
+            extra.update(
+                spec_accept_rate=round(self.spec_accept_rate, 4),
+                draft_tokens=self.draft_tokens,
             )
         if any(getattr(r, "slo", None) is not None for r in self.requests):
             extra.update(

@@ -69,10 +69,10 @@ class ModelAPI:
         return self._m.init_paged_cache(self.cfg, n_pages, page)
 
     def decode_chunk(self, params, tokens, cache, page_table, pos, n_valid,
-                     *, window=None):
+                     *, window=None, full_logits=False):
         return self._m.decode_chunk(
             params, self.cfg, tokens, cache, page_table, pos, n_valid,
-            window=window,
+            window=window, full_logits=full_logits,
         )
 
     def encode_cross(self, params, frames):
@@ -343,19 +343,23 @@ def make_serve_prefill_step(cfg: ModelConfig, rules: Optional[Rules] = None,
 
 
 def make_serve_chunk_step(cfg: ModelConfig, rules: Optional[Rules] = None,
-                          *, window=None):
+                          *, window=None, full_logits=False):
     """The paged engine's single compiled program: C tokens per row
     against the paged KV pool — decode rows feed one real token,
     chunked-prefill rows up to C, in the same dispatch. Every prompt
     length maps onto the one (B, C) compile shape, so there are no
-    per-length prefill specializations to compile."""
+    per-length prefill specializations to compile.
+
+    ``full_logits`` returns the head over every fed position ((B, C,
+    vocab)) — the speculative engine's verify variant; it is still one
+    compiled program, the engine just always asks for the full head."""
     api = ModelAPI(cfg)
 
     def chunk_step(params, tokens, cache, page_table, pos, n_valid):
         with use_rules(rules):
             return api.decode_chunk(
                 params, tokens, cache, page_table, pos, n_valid,
-                window=window)
+                window=window, full_logits=full_logits)
 
     return chunk_step
 

@@ -142,3 +142,76 @@ def test_paged_cache_insert_int8_roundtrip():
         err = np.abs(deq[phys, off] - np.asarray(k)[0, i])
         step = np.asarray(out["kp_scale"])[phys, off][..., None]
         assert float((err - step).max()) < 1e-5
+
+
+# --------------------------------------------------------------------------- #
+# int4 pools + the silent-upcast bugfix.
+# --------------------------------------------------------------------------- #
+def test_paged_cache_insert_int4_roundtrip():
+    """int4 pools pack two head dims per byte (halves layout) with the
+    same per-(token, head) scales; dequantization reconstructs within
+    one quantization step."""
+    from repro.kernels import quant
+
+    cfg = _cfg("int4")
+    K, hd = cfg.n_kv_heads, cfg.head_dim
+    page, n_pages = 4, 3
+    cache = L.init_paged_kv_cache(cfg, n_pages, page)
+    assert cache["kp"].shape == (n_pages + 1, page, K, hd // 2)
+    assert cache["kp"].dtype == jnp.int8  # packed nibbles
+    pt = jnp.asarray([[1, 0]], jnp.int32)
+    k = jax.random.normal(KEY, (1, 4, K, hd)) * 3.0
+    out = L.paged_cache_insert(
+        cache, k, k, pt, jnp.asarray([2], jnp.int32),
+        jnp.asarray([4], jnp.int32))
+    deq = np.asarray(quant.dequantize(out["kp"], out["kp_scale"], hd))
+    for i, (phys, off) in enumerate(((1, 2), (1, 3), (0, 0), (0, 1))):
+        err = np.abs(deq[phys, off] - np.asarray(k)[0, i])
+        step = np.asarray(out["kp_scale"])[phys, off][..., None]
+        assert float((err - step).max()) < 1e-5
+
+
+def test_int4_slab_cache_rejected():
+    cfg = _cfg("int4")
+    try:
+        L.init_kv_cache(cfg, 1, 4)
+    except ValueError as e:
+        assert "paged" in str(e)
+    else:
+        raise AssertionError("int4 slab cache should be rejected")
+
+
+def test_insert_refuses_silent_upcast_into_integer_pool():
+    """The old fallback path quietly did astype(int8) on float K/V when
+    a quantized pool was missing its scale entries — garbage attention
+    with no error. Now it raises at trace time."""
+    import pytest
+
+    cfg = _cfg("int8")
+    K, hd = cfg.n_kv_heads, cfg.head_dim
+
+    # slab: strip the scale entries to simulate the broken pre-fix cache
+    cache = L.init_kv_cache(cfg, 1, 4)
+    bare = {k: v for k, v in cache.items()
+            if k not in ("k_scale", "v_scale")}
+    knew = jnp.ones((1, K, hd))
+    with pytest.raises(TypeError, match="quantization scales"):
+        L.cache_insert(bare, knew, knew, 0)
+    with pytest.raises(TypeError, match="quantization scales"):
+        L.cache_insert(bare, knew, knew, jnp.zeros((1,), jnp.int32))
+    # the intact quantized cache accepts the same write
+    L.cache_insert(cache, knew, knew, 0)
+
+    # paged: same contract
+    pcache = L.init_paged_kv_cache(cfg, 2, 4)
+    pbare = {k: v for k, v in pcache.items()
+             if k not in ("kp_scale", "vp_scale")}
+    pt = jnp.asarray([[0, 1]], jnp.int32)
+    kc = jnp.ones((1, 2, K, hd))
+    with pytest.raises(TypeError, match="quantization scales"):
+        L.paged_cache_insert(pbare, kc, kc, pt,
+                             jnp.asarray([0], jnp.int32),
+                             jnp.asarray([2], jnp.int32))
+    L.paged_cache_insert(pcache, kc, kc, pt,
+                         jnp.asarray([0], jnp.int32),
+                         jnp.asarray([2], jnp.int32))

@@ -1,0 +1,116 @@
+"""Kernel dispatch registry: every registered op x backend cell resolves
+to the declared implementation, capability flags gate quantized calls,
+and the legacy ops.py shims still route through the table."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import dispatch, ops, ref
+
+OPS = sorted(dispatch.registered())
+CELLS = [(name, backend)
+         for name in OPS
+         for backend in dispatch.get(name).backends()]
+
+
+def test_registry_covers_every_public_op():
+    """The ops.py surface and the registry agree (a new public kernel
+    entry point must register an OpSpec)."""
+    assert set(OPS) == {
+        "attention", "decode_attention", "paged_attention", "lstm_cell",
+        "lars_update", "moe_gating", "mamba_scan",
+    }
+
+
+@pytest.mark.parametrize("name,backend", CELLS,
+                         ids=[f"{n}-{b}" for n, b in CELLS])
+def test_every_op_backend_cell_resolves(name, backend, monkeypatch):
+    """Each (op, backend) cell yields a callable: jnp under '' (CPU),
+    pallas under 'interpret'; the returned interpret flag matches."""
+    spec = dispatch.get(name)
+    if backend == "jnp":
+        monkeypatch.setenv("REPRO_USE_PALLAS", "")
+        impl, interp = dispatch.resolve(name)
+        assert impl is spec.jnp and interp is None
+    else:
+        monkeypatch.setenv("REPRO_USE_PALLAS", "interpret")
+        size = max(spec.min_size, 1)
+        impl, interp = dispatch.resolve(name, size=size)
+        assert impl is spec.pallas_impl() and interp is True
+        monkeypatch.setenv("REPRO_USE_PALLAS", "tpu")
+        impl, interp = dispatch.resolve(name, size=size)
+        assert impl is spec.pallas_impl() and interp is False
+
+
+def test_quantized_capability_gating(monkeypatch):
+    """Ops without supports_int8/int4 fall back to jnp for quantized
+    calls even when Pallas is forced on; paged_attention declares both."""
+    monkeypatch.setenv("REPRO_USE_PALLAS", "interpret")
+    pa = dispatch.get("paged_attention")
+    assert pa.supports_int8 and pa.supports_int4
+    for q in ("int8", "int4"):
+        impl, interp = dispatch.resolve("paged_attention", quantized=q)
+        assert impl is pa.pallas_impl() and interp is True
+    att = dispatch.get("attention")
+    assert not att.supports_int8
+    impl, interp = dispatch.resolve("attention", quantized="int8")
+    assert impl is att.jnp and interp is None
+
+
+def test_min_size_gating(monkeypatch):
+    """LARS routes small tensors to jnp regardless of mode."""
+    monkeypatch.setenv("REPRO_USE_PALLAS", "interpret")
+    spec = dispatch.get("lars_update")
+    assert spec.min_size > 0
+    impl, interp = dispatch.resolve("lars_update", size=spec.min_size - 1)
+    assert impl is spec.jnp and interp is None
+    impl, interp = dispatch.resolve("lars_update", size=spec.min_size)
+    assert impl is spec.pallas_impl() and interp is True
+
+
+def test_duplicate_registration_rejected():
+    spec = dispatch.get("attention")
+    with pytest.raises(ValueError, match="registered twice"):
+        dispatch.register(name="attention", jnp=spec.jnp)
+
+
+def test_pallas_mode_env_values(monkeypatch):
+    for env, want in [("", None), ("1", "tpu"), ("tpu", "tpu"),
+                      ("interpret", "interpret")]:
+        monkeypatch.setenv("REPRO_USE_PALLAS", env)
+        got = dispatch.pallas_mode()
+        if env == "" and jax.default_backend() == "tpu":
+            want = "tpu"
+        assert got == want, env
+
+
+def test_shim_attention_routes_by_mode(monkeypatch):
+    """ops.attention (the legacy signature) returns the same numbers on
+    both sides of the dispatch table."""
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (1, 64, 2, 32))
+    k = jax.random.normal(ks[1], (1, 64, 1, 32))
+    v = jax.random.normal(ks[2], (1, 64, 1, 32))
+    want = ref.attention(q, k, v, causal=True)
+    monkeypatch.setenv("REPRO_USE_PALLAS", "")
+    got_jnp = ops.attention(q, k, v, causal=True)
+    monkeypatch.setenv("REPRO_USE_PALLAS", "interpret")
+    got_pl = ops.attention(q, k, v, causal=True)
+    np.testing.assert_allclose(got_jnp, want, rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(got_pl, want, rtol=2e-5, atol=2e-5)
+
+
+def test_shim_lars_small_tensor_stays_jnp(monkeypatch):
+    """The ops.lars_update shim passes the operand size through, so a
+    sub-threshold tensor never pays kernel launch overhead — and the
+    numbers agree either way."""
+    monkeypatch.setenv("REPRO_USE_PALLAS", "interpret")
+    w = jnp.ones((8, 8))
+    g = jnp.full((8, 8), 0.5)
+    m = jnp.zeros((8, 8))
+    kw = dict(lr=0.1, weight_decay=1e-4, momentum=0.9, eta=0.001)
+    w1, m1 = ops.lars_update(w, g, m, **kw)
+    w2, m2 = ref.lars_update(w, g, m, **kw)
+    np.testing.assert_allclose(w1, w2, rtol=1e-6, atol=1e-7)
+    np.testing.assert_allclose(m1, m2, rtol=1e-6, atol=1e-7)

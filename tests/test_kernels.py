@@ -265,3 +265,103 @@ def test_paged_attention_matches_dense_decode():
         n_valid=jnp.ones((B,), jnp.int32))
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=2e-5, atol=2e-5)
+
+
+# --------------------------------------------------------------------------- #
+# Quantized paged pools: pack/unpack round-trips and kernel parity.
+# --------------------------------------------------------------------------- #
+from repro.kernels import quant
+
+
+def test_int4_pack_unpack_roundtrip():
+    """Halves-layout nibble packing is lossless over the int4 range."""
+    rng = np.random.RandomState(0)
+    q = jnp.asarray(rng.randint(-8, 8, size=(5, 3, 16)), jnp.int8)
+    packed = quant.pack_int4(q)
+    assert packed.shape == (5, 3, 8) and packed.dtype == jnp.int8
+    np.testing.assert_array_equal(np.asarray(quant.unpack_int4(packed)), q)
+    with pytest.raises(ValueError, match="even"):
+        quant.pack_int4(q[..., :15])
+
+
+@pytest.mark.parametrize("qz,lim", [(quant.quantize_int8, 127),
+                                    (quant.quantize_int4, 7)])
+def test_quantize_bounded_error(qz, lim):
+    """Symmetric per-(row, head) quantization: codes live in [-lim, lim]
+    and dequantization reconstructs within one scale step."""
+    x = jax.random.normal(KEY, (12, 2, 32)) * 3.0
+    code, scale = qz(x)
+    assert scale.shape == (12, 2) and scale.dtype == jnp.float32
+    deq = quant.dequantize(code, scale, 32)
+    amax = np.abs(np.asarray(x)).max(axis=-1)
+    assert np.all(np.abs(np.asarray(deq)) <= amax[..., None] + 1e-6)
+    np.testing.assert_allclose(np.asarray(deq), np.asarray(x),
+                               atol=float(scale.max()) * 0.51 + 1e-6)
+
+
+def _quantize_pool(kp, vp, qz):
+    P, page, K, D = kp.shape
+    kq, ks = qz(kp.reshape(P * page, K, D))
+    vq, vs = qz(vp.reshape(P * page, K, D))
+    sh = kq.shape[-1]
+    return (kq.reshape(P, page, K, sh), vq.reshape(P, page, K, sh),
+            ks.reshape(P, page, K), vs.reshape(P, page, K))
+
+
+@pytest.mark.parametrize("qdtype", ["int8", "int4"])
+@pytest.mark.parametrize("window", [None, 5])
+def test_paged_attention_quantized_kernel_vs_ref(qdtype, window):
+    """Quantized-pool Pallas kernel (in-kernel dequant, fp32 accumulation)
+    == the scale-aware oracle on the valid region of a ragged mixed
+    batch, for both int8 and packed-int4 pools."""
+    from repro.kernels import paged_attention as pa
+
+    qz = quant.quantize_int8 if qdtype == "int8" else quant.quantize_int4
+    lens, nvs = [13, 6, 2], [1, 4, 2]
+    q, kp, vp, pt, pos, nv = _paged_case(
+        3, 3, 4, 4, 2, 32, 4, 12, 8, lens, nvs, jnp.float32)
+    kpq, vpq, ks, vs = _quantize_pool(kp, vp, qz)
+    want = ref.paged_attention(q, kpq, vpq, pt, pos=pos, n_valid=nv,
+                               window=window, kp_scale=ks, vp_scale=vs)
+    got = pa.paged_attention(q, kpq, vpq, pt, pos=pos, n_valid=nv,
+                             window=window, kp_scale=ks, vp_scale=vs,
+                             interpret=True)
+    for b, n in enumerate(nvs):
+        np.testing.assert_allclose(
+            np.asarray(got[b, :n], np.float32),
+            np.asarray(want[b, :n], np.float32), rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("qdtype", ["int8", "int4"])
+def test_paged_attention_quantized_ops_fallback_vs_ref(qdtype):
+    """The jnp fallback dequantizes identically (the shim infers int4
+    from the packed trailing dim, so legacy call sites need no flag)."""
+    qz = quant.quantize_int8 if qdtype == "int8" else quant.quantize_int4
+    lens, nvs = [9, 1], [3, 1]
+    q, kp, vp, pt, pos, nv = _paged_case(
+        5, 2, 3, 4, 1, 16, 2, 10, 6, lens, nvs, jnp.float32)
+    kpq, vpq, ks, vs = _quantize_pool(kp, vp, qz)
+    want = ref.paged_attention(q, kpq, vpq, pt, pos=pos, n_valid=nv,
+                               kp_scale=ks, vp_scale=vs)
+    got = ops.paged_attention(q, kpq, vpq, pt, pos=pos, n_valid=nv,
+                              kp_scale=ks, vp_scale=vs)
+    for b, n in enumerate(nvs):
+        np.testing.assert_allclose(
+            np.asarray(got[b, :n]), np.asarray(want[b, :n]),
+            rtol=2e-5, atol=2e-5)
+
+
+def test_paged_attention_quantized_close_to_fp32():
+    """End-to-end quantization error on the attention output is small:
+    int8 pools track the fp32 pool tightly, int4 more loosely."""
+    lens, nvs = [13, 6, 2], [1, 4, 2]
+    q, kp, vp, pt, pos, nv = _paged_case(
+        7, 3, 4, 4, 2, 32, 4, 12, 8, lens, nvs, jnp.float32)
+    want = ref.paged_attention(q, kp, vp, pt, pos=pos, n_valid=nv)
+    for qz, tol in [(quant.quantize_int8, 0.02), (quant.quantize_int4, 0.25)]:
+        kpq, vpq, ks, vs = _quantize_pool(kp, vp, qz)
+        got = ref.paged_attention(q, kpq, vpq, pt, pos=pos, n_valid=nv,
+                                  kp_scale=ks, vp_scale=vs)
+        for b, n in enumerate(nvs):
+            np.testing.assert_allclose(
+                np.asarray(got[b, :n]), np.asarray(want[b, :n]), atol=tol)

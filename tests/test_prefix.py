@@ -475,9 +475,9 @@ def test_prefix_cache_rejects_slab_layout():
     with pytest.raises(ValueError):
         Engine(cfg, params, None,
                ServeConfig(kv_layout="slab", prefix_cache=True))
-    from repro.run.spec import ServeSection, SpecError
+    from repro.run.spec import KVCacheSpec, SpecError
     with pytest.raises(SpecError):
-        ServeSection(kv_layout="slab", prefix_cache=True)
+        KVCacheSpec(layout="slab", prefix_cache=True)
 
 
 def test_bench_compare_treats_prefix_rows_as_new():

@@ -116,6 +116,83 @@ def test_set_grammar_rejects(assignment, fragment):
         apply_assignments(RunSpec(), [assignment])
 
 
+def test_nested_kv_section_set_and_from_dict():
+    """The serve.kv sub-section takes typed nested --set paths and nested
+    spec-file tables, and round-trips through to_dict/from_dict."""
+    spec = apply_assignments(RunSpec(mode="serve"), [
+        "serve.kv.layout=paged",
+        "serve.kv.page_size=4",
+        "serve.kv.n_pages=12",
+        "serve.kv.dtype=int8",
+        "serve.kv.spec_decode=ngram",
+        "serve.kv.draft_len=3",
+    ])
+    kv = spec.serve.kv
+    assert (kv.layout, kv.page_size, kv.n_pages) == ("paged", 4, 12)
+    assert (kv.dtype, kv.spec_decode, kv.draft_len) == ("int8", "ngram", 3)
+    assert RunSpec.from_dict(spec.to_dict()) == spec
+    d = {"mode": "serve", "serve": {"kv": {"layout": "paged", "dtype": "int4"}}}
+    assert RunSpec.from_dict(d).serve.kv.dtype == "int4"
+
+
+@pytest.mark.parametrize("assignment,fragment", [
+    ("serve.kv=paged", "is a section"),
+    ("serve.kv.laout=paged", "did you mean 'layout'"),
+    ("serve.kv.page_size=zz", "expected an int"),
+    ("serve.kv.page_size.x=1", "does not exist"),
+    ("serve.kv.dtype=fp8", "serve.kv.dtype must be one of"),
+    ("serve.kv.spec_decode=medusa", "spec_decode must be one of"),
+])
+def test_nested_kv_set_grammar_rejects(assignment, fragment):
+    with pytest.raises(SpecError, match=fragment):
+        apply_assignments(RunSpec(), [assignment])
+
+
+def test_legacy_flat_kv_keys_warn_and_forward():
+    """The pre-KVCacheSpec flat spellings still work everywhere they
+    used to — --set and spec files — but raise DeprecationWarning and
+    land on the nested field."""
+    with pytest.warns(DeprecationWarning, match="serve.kv.layout"):
+        spec = apply_assignments(RunSpec(mode="serve"),
+                                 ["serve.kv_layout=paged"])
+    assert spec.serve.kv.layout == "paged"
+    with pytest.warns(DeprecationWarning, match="serve.kv.page_size"):
+        spec = RunSpec.from_dict(
+            {"mode": "serve", "serve": {"page_size": 4, "n_pages": 8}})
+    assert spec.serve.kv.page_size == 4 and spec.serve.kv.n_pages == 8
+    # an explicit nested key beats its deprecated flat twin
+    with pytest.warns(DeprecationWarning):
+        spec = RunSpec.from_dict(
+            {"mode": "serve",
+             "serve": {"page_size": 4, "kv": {"page_size": 16}}})
+    assert spec.serve.kv.page_size == 16
+    # every legacy key maps to a real nested field
+    from repro.configs import base as config_base
+    from repro.run.spec import KVCacheSpec, ServeSection
+
+    kv_fields = config_base.resolved_field_types(KVCacheSpec)
+    for flat, target in ServeSection.LEGACY_KEYS.items():
+        section, _, leaf = target.partition(".")
+        assert section == "kv" and leaf in kv_fields, flat
+    # to_dict never emits the flat spellings
+    d = RunSpec(mode="serve").to_dict()
+    assert "kv" in d["serve"]
+    assert not set(ServeSection.LEGACY_KEYS) & set(d["serve"])
+
+
+def test_kv_section_validation():
+    from repro.run.spec import KVCacheSpec
+
+    with pytest.raises(SpecError, match="serve.kv.layout"):
+        KVCacheSpec(layout="ragged")
+    with pytest.raises(SpecError, match="draft_len"):
+        KVCacheSpec(draft_len=0)
+    with pytest.raises(SpecError, match="prefill_chunk"):
+        KVCacheSpec(spec_decode="ngram", draft_len=8, prefill_chunk=8)
+    with pytest.raises(SpecError, match="n_pages"):
+        KVCacheSpec(n_pages=0)
+
+
 def test_trainer_metrics_validated_at_spec_build_time():
     """A typo'd metric name fails in the grammar, not at first compile;
     TRAIN_METRICS must not drift from what the train step supports."""
