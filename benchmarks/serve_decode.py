@@ -24,8 +24,14 @@ quantized pool of identical geometry (``tokens_per_s_vs_bf16`` is the
 uplift against the paged twin), and the ``*_specdec_*`` rows turn on
 ngram speculative decoding against the same non-spec twin
 (``tokens_per_s_vs_plain``, accept rate, draft volume — outputs stay
-token-identical). All pre-existing rows keep their exact workloads, so
-committed BENCH_* trajectories stay comparable across PRs.
+token-identical). The ``*_fleet_*`` rows (PR 9) run a shared-prefix
+workload over **two** fleet replicas of the exact paged-row pool
+geometry with one seeded mid-run replica kill — fleet tokens/s,
+prefix-affinity routing hit-rate, the goodput fraction charging the
+kill's lost decode work, and ``tokens_per_s_vs_1rep`` against a
+clean single-replica fleet on the same workload. All pre-existing rows
+keep their exact workloads, so committed BENCH_* trajectories stay
+comparable across PRs.
 
     PYTHONPATH=src python -m repro.bench.run --only serve_decode [--smoke]
 """
@@ -47,7 +53,9 @@ DERIVED = ("tokens_per_s", "p50_token_ms", "p99_token_ms", "ttft_p50_ms",
            "pages_shared", "prefill_tokens_skipped", "cow_copies",
            "ttft_delta_ms", "slo_goodput", "slo_violations",
            "p99_ms_interactive", "p99_ms_batch", "tokens_per_s_vs_bf16",
-           "tokens_per_s_vs_plain", "spec_accept_rate", "draft_tokens")
+           "tokens_per_s_vs_plain", "spec_accept_rate", "draft_tokens",
+           "goodput", "routing_hit_rate", "lost_tokens", "reroutes",
+           "fleet_replicas", "tokens_per_s_vs_1rep")
 
 
 def _decode_timing(report):
@@ -83,6 +91,14 @@ def run(ctx):
     # rows keep the original seeded workload so the committed BENCH_*
     # trajectory stays comparable across PRs.
     spread = tuple(max(1, prompt_len - 3 * i) for i in range(n_req))
+
+    def ragged_workload(scenario):
+        """The one ragged workload every paged-pool row family (paged /
+        int8 / specdec) replays — same prompts, same spread, so their
+        rows differ only in the engine knob under test."""
+        return synthetic_requests(cfg, n=n_req, tokens=tokens,
+                                  prompt_len=prompt_len, scenario=scenario,
+                                  seed=0, prompt_lens=spread)
 
     with mesh, use_rules(rules):
         engine = Engine(cfg, params, rules, scfg)
@@ -129,9 +145,7 @@ def run(ctx):
     paged_tps = {}  # bf16/non-spec twin tokens/s, keyed by scenario
     for scenario, driver in (("offline", run_offline),
                              ("server", run_server)):
-        reqs = synthetic_requests(cfg, n=n_req, tokens=tokens,
-                                  prompt_len=prompt_len, scenario=scenario,
-                                  seed=0, prompt_lens=spread)
+        reqs = ragged_workload(scenario)
         with mesh, use_rules(rules):
             report = driver(paged, reqs)
         s = report.summary()
@@ -163,9 +177,7 @@ def run(ctx):
             scenario="offline", seed=1))
     for scenario, driver in (("offline", run_offline),
                              ("server", run_server)):
-        reqs = synthetic_requests(cfg, n=n_req, tokens=tokens,
-                                  prompt_len=prompt_len, scenario=scenario,
-                                  seed=0, prompt_lens=spread)
+        reqs = ragged_workload(scenario)
         with mesh, use_rules(rules):
             report = driver(q8, reqs)
         s = report.summary()
@@ -198,9 +210,7 @@ def run(ctx):
             scenario="offline", seed=1))
     for scenario, driver in (("offline", run_offline),
                              ("server", run_server)):
-        reqs = synthetic_requests(cfg, n=n_req, tokens=tokens,
-                                  prompt_len=prompt_len, scenario=scenario,
-                                  seed=0, prompt_lens=spread)
+        reqs = ragged_workload(scenario)
         with mesh, use_rules(rules):
             report = driver(spec, reqs)
         s = report.summary()
@@ -293,6 +303,52 @@ def run(ctx):
             p99_ms_interactive=pc["interactive"]["p99_ms"],
             p99_ms_batch=pc["batch"]["p99_ms"],
             preemptions=report.preemptions,
+            requests=s["requests"],
+        )
+
+    # ---- fleet: 2 replicas vs 1, identical per-replica pool geometry --- #
+    # The same shared-prefix workload runs through a single-replica fleet
+    # (clean) and a two-replica fleet with one seeded mid-run kill: the
+    # row reports fleet tokens/s, the router's warm-cache hit rate, and
+    # the goodput fraction charging the kill's abandoned decode tokens.
+    # Each replica reuses the exact pcfg pool geometry of the paged rows,
+    # so tokens_per_s_vs_1rep isolates fan-out + failover — not a pool
+    # change. Completed outputs stay token-identical across all three
+    # runs (tests/test_fleet.py pins this).
+    from repro.fleet import ChaosEvent, ChaosPlan, Fleet
+
+    def fleet_workload(scenario):
+        return synthetic_requests(
+            cfg, n=2 * n_req, tokens=tokens, prompt_len=prompt_len,
+            scenario=scenario, seed=0, shared_prefix_len=shared,
+            n_templates=2)
+
+    with mesh, use_rules(rules):
+        mate = Engine(cfg, params, rules, pcfg)  # paged's fleet twin
+        run_offline(mate, build_requests(
+            cfg, n=2, tokens=2, prompt_len=prompt_len,
+            scenario="offline", seed=1))
+    for scenario in ("offline", "server"):
+        with mesh, use_rules(rules):
+            solo = Fleet([paged]).run(fleet_workload(scenario))
+            duo = Fleet([paged, mate], chaos=ChaosPlan(
+                [ChaosEvent(step=6, kind="kill")], seed=0),
+            ).run(fleet_workload(scenario))
+        s = duo.summary()
+        ctx.record(
+            f"serve/{cfg.name}_fleet_{scenario}",
+            _decode_timing(duo.merged),
+            tokens_per_s=s["tokens_per_s"],
+            tokens_per_s_vs_1rep=round(
+                s["tokens_per_s"] / max(solo.tokens_per_s, 1e-9), 4),
+            goodput=s["goodput"],
+            routing_hit_rate=s["routing_hit_rate"],
+            lost_tokens=s["lost_tokens"],
+            reroutes=s["reroutes"],
+            fleet_replicas=s["replicas"],
+            p50_token_ms=s["p50_token_ms"],
+            p99_token_ms=s["p99_token_ms"],
+            ttft_p50_ms=s["ttft_p50_ms"],
             requests=s["requests"],
         )
 

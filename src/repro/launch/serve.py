@@ -101,9 +101,22 @@ def main(argv=None):
                          "prefix of this many tokens (0 = off)")
     ap.add_argument("--n-templates", type=int, default=1,
                     help="workload: distinct template prefixes to cycle")
+    ap.add_argument("--n-replicas", type=int, default=0,
+                    help="fleet: data-parallel engine replicas behind "
+                         "the prefix-affinity router (0 = single engine)")
+    ap.add_argument("--routing", default="prefix",
+                    choices=["prefix", "least_loaded"],
+                    help="fleet: consistent-hash on the prefix-template "
+                         "key (warm caches) or pure least-loaded")
+    ap.add_argument("--chaos", default="",
+                    choices=["", "kill", "stall"],
+                    help="fleet: inject one seeded fault mid-run "
+                         "(completed outputs stay token-identical)")
+    ap.add_argument("--chaos-step", type=int, default=8,
+                    help="fleet: fleet step at which the fault fires")
     args = ap.parse_args(argv)
 
-    from repro.run import KVCacheSpec, RunSpec, ServeSection
+    from repro.run import FleetSection, KVCacheSpec, RunSpec, ServeSection
     from repro.run.dispatch import run_spec
 
     spec = RunSpec(
@@ -137,6 +150,12 @@ def main(argv=None):
             query_interval=args.query_interval,
             slo_classes=tuple(
                 c.strip() for c in args.slo_classes.split(",") if c.strip()),
+        ),
+        fleet=FleetSection(
+            n_replicas=args.n_replicas,
+            routing=args.routing,
+            chaos=args.chaos,
+            chaos_step=args.chaos_step,
         ),
     )
     return run_spec(spec)["exit_code"]

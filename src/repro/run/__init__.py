@@ -18,6 +18,7 @@ from repro.run.spec import (
     MODES,
     BenchSection,
     DryrunSection,
+    FleetSection,
     KVCacheSpec,
     RunSpec,
     ServeSection,
@@ -30,6 +31,7 @@ __all__ = [
     "MODES",
     "BenchSection",
     "DryrunSection",
+    "FleetSection",
     "KVCacheSpec",
     "RunSpec",
     "ServeSection",

@@ -181,6 +181,9 @@ def _run_serve(spec: RunSpec) -> Dict[str, Any]:
         query_interval=s.query_interval, slo_classes=s.slo_classes,
         shared_prefix_len=s.shared_prefix_len, n_templates=s.n_templates)
 
+    if spec.fleet.n_replicas >= 1:
+        return _run_fleet(spec, cfg, mesh, rules, params, scfg, reqs)
+
     with mesh, use_rules(rules):
         engine = Engine(cfg, params, rules, scfg)
         if s.warmup:
@@ -218,6 +221,52 @@ def _run_serve(spec: RunSpec) -> Dict[str, Any]:
         print(f"  req {req.id}: prompt {req.prompt_len} -> "
               f"{len(req.tokens)} tokens {req.tokens}")
     return {"report": report, "engine": engine}
+
+
+def _run_fleet(spec: RunSpec, cfg, mesh, rules, params, scfg,
+               reqs) -> Dict[str, Any]:
+    """Serve-mode fleet path: the same workload over ``fleet.n_replicas``
+    identical engines behind the prefix-affinity router, with the spec's
+    seeded chaos plan (if any) injected mid-run."""
+    from repro.dist import use_rules
+    from repro.fleet import ChaosPlan, Fleet, FleetConfig
+    from repro.serve import Engine
+    from repro.serve.engine import synthetic_requests
+
+    f = spec.fleet
+    s = spec.serve
+    chaos = ChaosPlan.from_spec(
+        f.chaos, chaos_step=f.chaos_step, stall_steps=f.stall_steps,
+        seed=spec.seed)
+    fcfg = FleetConfig(routing=f.routing,
+                       heartbeat_timeout=f.heartbeat_timeout)
+    with mesh, use_rules(rules):
+        engines = [Engine(cfg, params, rules, scfg)
+                   for _ in range(f.n_replicas)]
+        if s.warmup:
+            from repro.serve.scenarios import scenario_driver
+            for e in engines:
+                scenario_driver("offline")(e, synthetic_requests(
+                    cfg, n=min(2, scfg.max_batch), tokens=2,
+                    prompt_len=s.prompt_len, scenario="offline",
+                    seed=spec.seed + 1))
+        fleet = Fleet(engines, fcfg, chaos)
+        report = fleet.run(reqs)
+
+    print(f"{spec.arch} [fleet x{f.n_replicas}, routing={f.routing}"
+          f"{', chaos=' + f.chaos if f.chaos else ''}, "
+          f"slots={scfg.max_batch}/replica, kv={engines[0].layout}]: "
+          f"{report.format()}")
+    if s.slo_classes:
+        for name, m in sorted(report.per_class().items()):
+            print(f"    {name}: n={m['requests']} "
+                  f"p99 {m['p99_ms']:.1f}ms "
+                  f"violations {m['violations']} "
+                  f"goodput {m['goodput']:.3f}")
+    for req in sorted(report.merged.requests, key=lambda r: r.id):
+        print(f"  req {req.id}: prompt {req.prompt_len} -> "
+              f"{len(req.tokens)} tokens {req.tokens}")
+    return {"report": report, "fleet": fleet}
 
 
 # --------------------------------------------------------------------------- #
@@ -260,6 +309,22 @@ def _run_bench(spec: RunSpec) -> Dict[str, Any]:
 def _run_dryrun(spec: RunSpec) -> Dict[str, Any]:
     import json
     import os
+
+    if spec.fleet.n_replicas >= 1:
+        # A fleet dryrun renders Kubernetes manifests (pure dicts, no
+        # cluster, no jax, no placeholder devices) instead of AOT
+        # compiling — the deploy-side twin of the serve-mode fleet.
+        from repro.launch import k8s
+
+        text = k8s.render(spec)
+        if spec.fleet.k8s_out:
+            with open(spec.fleet.k8s_out, "w") as fh:
+                fh.write(text)
+            print(f"k8s manifests ({spec.fleet.n_replicas} replica(s)) "
+                  f"-> {spec.fleet.k8s_out}")
+        else:
+            print(text, end="")
+        return {"manifests": k8s.render_manifests(spec), "yaml": text}
 
     from repro.configs import INPUT_SHAPES, list_archs
     from repro.launch import dryrun as D

@@ -184,6 +184,55 @@ class ServeSection:
                 "serve.n_templates >= 1")
 
 
+# Mirrors fleet.router.ROUTING_POLICIES / fleet.chaos.CHAOS_MODES (same
+# jax-free literal-mirror convention; drift test in tests/test_fleet.py).
+ROUTING_POLICIES = ("prefix", "least_loaded")
+CHAOS_MODES = ("", "kill", "stall")
+
+
+@dataclass(frozen=True)
+class FleetSection:
+    """Multi-replica serving knobs (``repro.fleet``; ``--set fleet.*``).
+
+    ``n_replicas=0`` keeps the single-engine serve path; ``>= 1`` runs
+    the workload through a :class:`repro.fleet.Fleet` of that many
+    identical engines behind the prefix-affinity router. ``chaos``
+    injects one seeded fault mid-run (the chaos-failover conformance
+    knob). In ``dryrun`` mode a fleet spec renders Kubernetes manifests
+    (``launch.k8s``) instead of AOT-compiling.
+    """
+
+    n_replicas: int = 0          # 0 = fleet layer off (single engine)
+    routing: str = "prefix"      # prefix | least_loaded
+    chaos: str = ""              # '' | kill | stall (one seeded fault)
+    chaos_step: int = 8          # fleet step at which the fault fires
+    stall_steps: int = 12        # stall: fleet steps the victim freezes
+    heartbeat_timeout: int = 4   # missed beats before a replica is dead
+    k8s_out: str = ""            # dryrun: write rendered manifests here
+    image: str = "repro:latest"  # k8s: container image for serve pods
+    port: int = 8000             # k8s: router service port
+
+    def __post_init__(self):
+        if self.n_replicas < 0:
+            raise SpecError("fleet.n_replicas must be >= 0")
+        if self.routing not in ROUTING_POLICIES:
+            raise SpecError(
+                f"fleet.routing must be one of {ROUTING_POLICIES}, got "
+                f"{self.routing!r}"
+                + did_you_mean(self.routing, ROUTING_POLICIES))
+        if self.chaos not in CHAOS_MODES:
+            raise SpecError(
+                f"fleet.chaos must be one of {CHAOS_MODES}, got "
+                f"{self.chaos!r}" + did_you_mean(self.chaos, CHAOS_MODES))
+        if self.chaos_step < 0:
+            raise SpecError("fleet.chaos_step must be >= 0")
+        if self.stall_steps < 1 or self.heartbeat_timeout < 1:
+            raise SpecError(
+                "fleet.stall_steps and fleet.heartbeat_timeout must be >= 1")
+        if not 1 <= self.port <= 65535:
+            raise SpecError("fleet.port must be in [1, 65535]")
+
+
 @dataclass(frozen=True)
 class BenchSection:
     """Bench-mode knobs (mirrors ``repro.bench.run``)."""
@@ -221,6 +270,7 @@ class RunSpec:
     model: Dict[str, Any] = field(default_factory=dict)
     trainer: TrainerSection = field(default_factory=TrainerSection)
     serve: ServeSection = field(default_factory=ServeSection)
+    fleet: FleetSection = field(default_factory=FleetSection)
     bench: BenchSection = field(default_factory=BenchSection)
     dryrun: DryrunSection = field(default_factory=DryrunSection)
 

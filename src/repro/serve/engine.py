@@ -428,6 +428,14 @@ class Engine:
         issue-time stamp for issue-on-completion drivers."""
         return self._step_idx
 
+    @property
+    def finished(self) -> List[Request]:
+        """Requests retired so far in the current run (grows as steps
+        drain; cleared by :meth:`finalize`/:meth:`reset`). Incremental
+        drivers — the fleet replica harvest loop — read it between
+        steps instead of waiting for the report."""
+        return self._finished
+
     def drain(self) -> None:
         """Step until no submitted request remains unfinished, without
         building a report — drivers that interleave submission with
@@ -885,14 +893,20 @@ def synthetic_requests(cfg, *, n: int, tokens: int, prompt_len: int,
                 s_len = max(1, prompt_len - shared_prefix_len)
             prompt = (templates[i % n_templates]
                       + rng.randint(0, cfg.vocab, size=s_len).tolist())
+            # The template tokens themselves are the routing key: the
+            # fleet router hashes it so same-template requests land on
+            # the replica whose prefix cache already holds these pages.
+            template = tuple(templates[i % n_templates])
         else:
+            template = None
             if prompt_lens:
                 p_len = max(1, int(prompt_lens[i % len(prompt_lens)]))
             else:
                 lo = max(1, min(prompt_len // 2, prompt_len))
                 p_len = int(rng.randint(lo, max(lo + 1, prompt_len + 1)))
             prompt = rng.randint(0, cfg.vocab, size=p_len).tolist()
-        req = Request(prompt=prompt, max_new_tokens=tokens)
+        req = Request(prompt=prompt, max_new_tokens=tokens,
+                      template=template)
         media_key = i % n_templates if shared_prefix_len else i
         if cfg.is_encdec:
             req.media = np.asarray(jax.random.normal(

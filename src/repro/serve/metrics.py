@@ -91,6 +91,27 @@ class ServeReport:
             return 1.0
         return 1.0 - self.slo_violations / len(self.requests)
 
+    @property
+    def goodput(self) -> float:
+        """Top-level goodput: the per-class goodputs weighted by each
+        class's request count — one number per report, so fleet-level
+        aggregation (``repro.fleet.FleetReport``) never re-derives class
+        structure. Equals the single class's goodput when the workload
+        carries one class, and 1.0 when it carries none (untagged
+        requests never violate)."""
+        by_class: Dict[str, List[Any]] = {}
+        for r in self.requests:
+            name = r.slo.name if getattr(r, "slo", None) else "best-effort"
+            by_class.setdefault(name, []).append(r)
+        total = sum(len(rs) for rs in by_class.values())
+        if not total:
+            return 1.0
+        weighted = sum(
+            (1.0 - sum(not slo_mod.met_slo(r) for r in rs) / len(rs))
+            * len(rs)
+            for rs in by_class.values())
+        return weighted / total
+
     def per_class(self) -> Dict[str, Dict[str, Any]]:
         """Per-SLO-class breakdown: request count, end-to-end and TTFT
         p50/p99 (wall ms), budget violations and class goodput. Only
@@ -142,6 +163,7 @@ class ServeReport:
             )
         if any(getattr(r, "slo", None) is not None for r in self.requests):
             extra.update(
+                goodput=round(self.goodput, 4),
                 slo_goodput=round(self.slo_goodput, 4),
                 slo_violations=self.slo_violations,
             )

@@ -47,6 +47,11 @@ class Request:                    # field-wise __eq__ ill-defined
     # carries the priority + step-denominated latency budgets the
     # scheduler's admission/preemption policy reads.
     slo: Optional[Any] = None
+    # Prefix-template key: any hashable identifying the shared prompt
+    # template this request opens with (None = untemplated traffic).
+    # The fleet router consistent-hashes on it so same-template requests
+    # land on the replica whose prefix cache already holds the template.
+    template: Optional[Any] = None
 
     # -- runtime state (owned by scheduler/engine) ---------------------- #
     state: RequestState = RequestState.WAITING

@@ -1,0 +1,698 @@
+"""repro.fleet: consistent-hash router invariants (join/leave moves
+only ~K/N keys, same-template affinity), replica health state machine,
+chaos kill/stall failover with request-id conservation and greedy
+token identity, fleet goodput charging lost work, the hoisted
+``ServeReport.goodput``, the RunSpec fleet section, and deterministic
+RunSpec -> k8s manifest rendering (golden file)."""
+import itertools
+import json
+import pathlib
+import time
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.bench import make_artifact, validate
+from repro.bench import schema as bench_schema
+from repro.bench.compare import diff_rows, main as compare_main
+from repro.configs import get_config
+from repro.dist import split_tree, use_rules
+from repro.fleet import (
+    CHAOS_MODES,
+    ChaosEvent,
+    ChaosPlan,
+    Fleet,
+    FleetConfig,
+    HashRing,
+    ROUTING_POLICIES,
+    Replica,
+    ReplicaState,
+    Router,
+    reset_for_retry,
+)
+from repro.fleet.router import stable_hash
+from repro.launch import k8s
+from repro.launch.mesh import single_device_mesh
+from repro.serve import Engine, Request, RequestState, ServeConfig
+from repro.serve.engine import synthetic_requests
+from repro.serve.metrics import ServeReport
+from repro.serve.slo import get_class
+from repro.run import RunSpec, apply_assignments, load_spec_file
+from repro.run import spec as run_spec_mod
+from repro.train.steps import ModelAPI
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+
+
+# --------------------------------------------------------------------------- #
+# Consistent-hash ring (pure python).
+# --------------------------------------------------------------------------- #
+def _keys(n=200, seed=0):
+    rng = np.random.RandomState(seed)
+    return [tuple(rng.randint(0, 1000, size=4).tolist()) for _ in range(n)]
+
+
+def test_stable_hash_is_process_stable_and_spread():
+    """md5-based ring positions: deterministic for equal keys (unlike
+    salted ``hash``), distinct for distinct keys in practice."""
+    assert stable_hash(("a", 1)) == stable_hash(("a", 1))
+    vals = {stable_hash(k) for k in _keys(200)}
+    assert len(vals) == 200
+
+
+def test_hash_ring_lookup_deterministic_and_member():
+    ring = HashRing(vnodes=32)
+    for n in range(4):
+        ring.add(n)
+    keys = _keys()
+    first = [ring.lookup(k) for k in keys]
+    assert first == [ring.lookup(k) for k in keys]
+    assert set(first) <= {0, 1, 2, 3}
+    # every node owns some arc with 32 vnodes and 200 keys
+    assert set(first) == {0, 1, 2, 3}
+
+
+@given(st.integers(min_value=2, max_value=6),
+       st.integers(min_value=0, max_value=3))
+def test_hash_ring_leave_moves_only_departed_keys(n_nodes, seed):
+    """Removing one node relocates exactly the keys it owned — every
+    other key keeps its node (the consistent-hashing contract). Re-adding
+    it restores the original assignment bit-for-bit."""
+    ring = HashRing(vnodes=32)
+    for n in range(n_nodes):
+        ring.add(n)
+    keys = _keys(150, seed=seed)
+    before = {k: ring.lookup(k) for k in keys}
+    gone = seed % n_nodes
+    ring.remove(gone)
+    after = {k: ring.lookup(k) for k in keys}
+    for k in keys:
+        if before[k] != gone:
+            assert after[k] == before[k], "a surviving node's key moved"
+        else:
+            assert after[k] != gone
+    ring.add(gone)
+    assert {k: ring.lookup(k) for k in keys} == before
+
+
+def test_hash_ring_join_leave_moves_about_k_over_n():
+    """~K/N keys move on a single leave: strictly partial reshuffle,
+    loosely around the 1/N expectation (md5 spread, 32 vnodes)."""
+    router = Router("prefix", vnodes=32)
+    for n in range(4):
+        router.add_replica(n)
+    keys = _keys(400)
+    moved = router.moved_keys(keys, without=2)
+    owned = sum(router.ring.lookup(k) == 2 for k in keys)
+    assert moved == owned, "moved set must be exactly the departed arc"
+    assert 0.05 * len(keys) <= moved <= 0.6 * len(keys)
+    # moved_keys is a dry run: the ring still has all four nodes
+    assert router.ring.nodes == [0, 1, 2, 3]
+
+
+def test_hash_ring_validation():
+    with pytest.raises(ValueError):
+        HashRing(vnodes=0)
+    with pytest.raises(LookupError):
+        HashRing().lookup("anything")
+
+
+# --------------------------------------------------------------------------- #
+# Router policy + affinity telemetry (pure python).
+# --------------------------------------------------------------------------- #
+def _treq(template):
+    return Request(prompt=[1, 2, 3], max_new_tokens=2, template=template)
+
+
+def test_router_same_template_same_replica():
+    router = Router("prefix")
+    for n in range(3):
+        router.add_replica(n)
+    eligible = {0: 0, 1: 0, 2: 0}
+    key = (7, 8, 9)
+    homes = {router.route(_treq(key), eligible) for _ in range(5)}
+    assert len(homes) == 1
+    assert homes == {router.ring.lookup(key)}
+
+
+def test_router_untemplated_falls_back_least_loaded():
+    router = Router("prefix")
+    for n in range(3):
+        router.add_replica(n)
+    assert router.route(_treq(None), {0: 4, 1: 1, 2: 3}) == 1
+    # ties break by replica id
+    assert router.route(_treq(None), {2: 1, 0: 1}) == 0
+    assert router.routed_fallback == 2 and router.routed_affinity == 0
+    assert router.hits == 0, "untemplated traffic never counts as warm"
+
+
+def test_router_least_loaded_policy_ignores_templates():
+    router = Router("least_loaded")
+    for n in range(3):
+        router.add_replica(n)
+    assert router.route(_treq((1, 2)), {0: 5, 1: 0, 2: 5}) == 1
+    assert router.routed_affinity == 0 and router.routed_fallback == 1
+
+
+def test_router_hit_accounting_across_failover():
+    """First placement of a template is a cold miss, repeats are hits;
+    after the owner leaves the ring the key lands somewhere new (one
+    more miss), then is warm on the survivor."""
+    router = Router("prefix")
+    for n in range(2):
+        router.add_replica(n)
+    eligible = {0: 0, 1: 0}
+    key = (3, 1, 4)
+    owner = router.route(_treq(key), eligible)
+    assert router.hits == 0
+    assert router.route(_treq(key), eligible) == owner
+    assert router.hits == 1
+    router.remove_replica(owner)
+    survivor = [n for n in (0, 1) if n != owner][0]
+    assert router.route(_treq(key), {survivor: 0}) == survivor
+    assert router.hits == 1, "post-failover placement is a cold miss"
+    assert router.route(_treq(key), {survivor: 0}) == survivor
+    assert router.hits == 2
+    assert router.hit_rate == pytest.approx(2 / 4)
+
+
+def test_router_validation():
+    with pytest.raises(ValueError):
+        Router("round_robin")
+    with pytest.raises(LookupError):
+        Router().route(_treq(None), {})
+
+
+# --------------------------------------------------------------------------- #
+# Chaos plan (pure python).
+# --------------------------------------------------------------------------- #
+def test_chaos_plan_pop_due_once_and_in_order():
+    plan = ChaosPlan([ChaosEvent(step=5, kind="kill"),
+                      ChaosEvent(step=2, kind="stall")])
+    assert len(plan) == 2
+    assert [e.step for e in plan.pop_due(4)] == [2]
+    assert [e.step for e in plan.pop_due(9)] == [5]
+    assert plan.pop_due(9) == []
+    assert [e.step for e in plan.fired] == [2, 5]
+
+
+def test_chaos_victim_seeded_and_pinned():
+    ev = ChaosEvent(step=0, kind="kill")
+    picks = [ChaosPlan(seed=3).choose_victim(ev, [0, 1, 2])
+             for _ in range(3)]
+    assert len(set(picks)) == 1, "same seed must pick the same victim"
+    assert picks[0] in (0, 1, 2)
+    pinned = ChaosEvent(step=0, kind="kill", replica=1)
+    plan = ChaosPlan()
+    assert plan.choose_victim(pinned, [0, 1]) == 1
+    assert plan.choose_victim(pinned, [0]) is None, "pinned victim dead"
+    assert plan.choose_victim(ev, []) is None
+
+
+def test_chaos_validation_and_from_spec():
+    with pytest.raises(ValueError):
+        ChaosEvent(step=0, kind="explode")
+    with pytest.raises(ValueError):
+        ChaosEvent(step=-1, kind="kill")
+    with pytest.raises(ValueError):
+        ChaosPlan.from_spec("explode")
+    assert len(ChaosPlan.from_spec("")) == 0
+    plan = ChaosPlan.from_spec("stall", chaos_step=3, stall_steps=7)
+    [ev] = plan.pop_due(3)
+    assert (ev.kind, ev.step, ev.stall_steps) == ("stall", 3, 7)
+
+
+def test_fleet_config_validation():
+    with pytest.raises(ValueError):
+        FleetConfig(routing="nearest")
+    with pytest.raises(ValueError):
+        FleetConfig(heartbeat_timeout=0)
+    with pytest.raises(ValueError):
+        Fleet([])
+
+
+# --------------------------------------------------------------------------- #
+# A deterministic host-side Engine stand-in: one token per step per
+# admitted request, token value a pure function of (prompt, position) —
+# so token identity across replicas holds by construction and the fleet
+# driver's failover plumbing is testable without jax compiles.
+# --------------------------------------------------------------------------- #
+class _FakeSched:
+    def __init__(self, eng):
+        self._eng = eng
+
+    @property
+    def has_work(self):
+        return bool(self._eng._running)
+
+
+class FakeEngine:
+    def __init__(self, max_batch=2):
+        self.max_batch = max_batch
+        self._arrivals = []   # (arrival_step, seq, req), kept sorted
+        self._running = []
+        self._finished = []
+        self._step_idx = 0
+        self._seq = itertools.count()
+        self.sched = _FakeSched(self)
+
+    @property
+    def current_step(self):
+        return self._step_idx
+
+    @property
+    def finished(self):
+        return self._finished
+
+    def submit(self, req):
+        self._arrivals.append((req.arrival_step, next(self._seq), req))
+        self._arrivals.sort(key=lambda t: t[:2])
+
+    @staticmethod
+    def _tok(req):
+        return (sum(req.prompt) * 7 + 31 * len(req.tokens)) % 97
+
+    def step(self):
+        now = self._step_idx
+        while (self._arrivals and self._arrivals[0][0] <= now
+               and len(self._running) < self.max_batch):
+            _, _, req = self._arrivals.pop(0)
+            req.state = RequestState.RUNNING
+            req.sched_seq = next(self._seq)
+            req.s_arrival = req.s_arrival if req.s_arrival is not None else now
+            req.t_arrival = req.t_arrival or time.perf_counter()
+            self._running.append(req)
+        for req in list(self._running):
+            if not req.tokens:
+                req.s_first_token = now
+                req.t_first_token = time.perf_counter()
+            req.tokens.append(self._tok(req))
+            if len(req.tokens) >= req.max_new_tokens:
+                req.state = RequestState.FINISHED
+                req.s_done, req.t_done = now, time.perf_counter()
+                self._running.remove(req)
+                self._finished.append(req)
+        self._step_idx += 1
+
+    def finalize(self, t0):
+        report = ServeReport(requests=list(self._finished), steps=[],
+                             elapsed_s=time.perf_counter() - t0)
+        self._arrivals, self._running, self._finished = [], [], []
+        self._step_idx = 0
+        return report
+
+
+def _fake_workload(n=8, *, templated=True, start_id=None):
+    """n short requests, two template keys, staggered arrivals."""
+    reqs = []
+    for i in range(n):
+        template = (11, 13) if i % 2 else (5, 7) if templated else None
+        reqs.append(Request(prompt=[3 + i, 2 * i + 1], max_new_tokens=3,
+                            arrival_step=i // 2, template=template))
+    return reqs
+
+
+def _tokens_by_position(report):
+    """Greedy outputs keyed by submission position (ids are a global
+    counter, so cross-workload comparison is positional)."""
+    reqs = report.merged.requests
+    return [r.tokens for r in sorted(reqs, key=lambda r: r.id)]
+
+
+# --------------------------------------------------------------------------- #
+# Replica state machine (FakeEngine).
+# --------------------------------------------------------------------------- #
+def test_replica_state_machine_starting_ready_draining_dead():
+    rep = Replica(0, FakeEngine())
+    assert rep.state is ReplicaState.STARTING and rep.accepting
+    req = Request(prompt=[1, 2], max_new_tokens=2)
+    rep.submit(req)
+    assert rep.load == 1
+    rep.step(0)
+    assert rep.state is ReplicaState.READY and rep.last_beat == 0
+    rep.drain()
+    assert rep.state is ReplicaState.DRAINING and not rep.accepting
+    with pytest.raises(RuntimeError):
+        rep.submit(Request(prompt=[9], max_new_tokens=1))
+    for fs in range(1, 5):
+        rep.step(fs)
+    assert rep.state is ReplicaState.DEAD
+    assert rep.load == 0, "finished work must be harvested"
+    assert req.state is RequestState.FINISHED
+
+
+def test_replica_stall_stops_heartbeat_then_resumes_identical():
+    rep = Replica(0, FakeEngine())
+    rep.submit(Request(prompt=[4, 5], max_new_tokens=3))
+    rep.step(0)
+    rep.stall(2)
+    assert rep.stalled
+    rep.step(1)
+    rep.step(2)
+    assert rep.last_beat == 0 and rep.heartbeat_age(2) == 2
+    assert rep.engine.current_step == 1, "stalled engine must not step"
+    rep.step(3)
+    assert rep.last_beat == 3 and not rep.stalled
+
+
+def test_replica_kill_returns_orphans_in_admission_order():
+    rep = Replica(0, FakeEngine(max_batch=1))
+    reqs = [Request(prompt=[i + 1], max_new_tokens=5) for i in range(3)]
+    for r in reqs:
+        rep.submit(r)
+    rep.step(0)  # admits reqs[0] only (max_batch=1)
+    orphans = rep.kill()
+    assert rep.state is ReplicaState.DEAD and rep.load == 0
+    assert [o.id for o in orphans] == [r.id for r in reqs]
+    assert orphans[0].sched_seq is not None, "admitted request first"
+    assert rep.kill() == [], "second kill is a no-op"
+
+
+def test_reset_for_retry_strips_runtime_state_keeps_identity():
+    req = Request(prompt=[1, 2, 3], max_new_tokens=4)
+    req.tokens = [10, 11]
+    req.state, req.slot, req.sched_seq = RequestState.RUNNING, 2, 5
+    req.s_arrival = req.s_first_token = 1
+    req.t_arrival = req.t_first_token = 0.5
+    rid = req.id
+    assert reset_for_retry(req) == 2
+    assert req.id == rid and req.prompt == [1, 2, 3]
+    assert req.tokens == [] and req.state is RequestState.WAITING
+    assert req.slot is None and req.sched_seq is None
+    assert req.s_arrival is None and req.t_first_token is None
+
+
+# --------------------------------------------------------------------------- #
+# Fleet failover (FakeEngine): conservation + token identity.
+# --------------------------------------------------------------------------- #
+@given(st.integers(min_value=0, max_value=6),
+       st.integers(min_value=0, max_value=2))
+def test_fleet_kill_reroute_never_drops_or_duplicates(chaos_step, victim):
+    """A seeded kill at any step: every submitted request id finishes
+    exactly once on a survivor (Fleet.run raises otherwise), outputs
+    are identical to a chaos-free single-replica fleet, and lost work
+    is charged to goodput whenever the victim had in-flight requests."""
+    baseline = Fleet([FakeEngine()]).run(_fake_workload())
+    want = _tokens_by_position(baseline)
+
+    plan = ChaosPlan([ChaosEvent(step=chaos_step, kind="kill",
+                                 replica=victim)], seed=0)
+    fleet = Fleet([FakeEngine() for _ in range(3)],
+                  FleetConfig(routing="prefix"), chaos=plan)
+    report = fleet.run(_fake_workload())
+    assert report.requests == 8
+    assert _tokens_by_position(report) == want
+    assert report.kills == 1
+    assert report.replica_states[victim] == "dead"
+    assert report.lost_tokens == report.reroutes == 0 or \
+        report.goodput < 1.0
+    assert report.goodput == pytest.approx(
+        report.tokens_generated
+        / (report.tokens_generated + report.lost_tokens))
+
+
+def test_fleet_duplicate_submit_rejected():
+    fleet = Fleet([FakeEngine()])
+    req = Request(prompt=[1], max_new_tokens=1)
+    fleet.submit(req)
+    with pytest.raises(ValueError):
+        fleet.submit(req)
+
+
+def test_fleet_with_no_survivors_fails_loudly():
+    plan = ChaosPlan([ChaosEvent(step=0, kind="kill", replica=0)])
+    with pytest.raises(RuntimeError, match="no surviving replica"):
+        Fleet([FakeEngine()], chaos=plan).run(_fake_workload(4))
+
+
+def test_fleet_short_stall_resumes_without_failover():
+    """A stall inside the heartbeat budget is absorbed: no kill, no
+    lost work, goodput 1.0, outputs identical to the healthy run."""
+    want = _tokens_by_position(Fleet([FakeEngine()]).run(_fake_workload()))
+    plan = ChaosPlan([ChaosEvent(step=2, kind="stall", replica=0,
+                                 stall_steps=2)])
+    fleet = Fleet([FakeEngine(), FakeEngine()],
+                  FleetConfig(heartbeat_timeout=4), chaos=plan)
+    report = fleet.run(_fake_workload())
+    assert (report.stalls, report.kills, report.lost_tokens) == (1, 0, 0)
+    assert report.goodput == 1.0
+    assert _tokens_by_position(report) == want
+    assert set(report.replica_states.values()) <= {"ready", "starting"}
+
+
+def test_fleet_stall_past_timeout_is_evicted_by_heartbeat():
+    """A stall outlasting heartbeat_timeout converges on the kill path:
+    the monitor buries the replica and its work drains to the survivor."""
+    want = _tokens_by_position(Fleet([FakeEngine()]).run(_fake_workload()))
+    plan = ChaosPlan([ChaosEvent(step=1, kind="stall", replica=0,
+                                 stall_steps=30)])
+    fleet = Fleet([FakeEngine(), FakeEngine()],
+                  FleetConfig(heartbeat_timeout=2), chaos=plan)
+    report = fleet.run(_fake_workload())
+    assert report.stalls == 1 and report.kills == 1
+    assert report.replica_states[0] == "dead"
+    assert report.requests == 8
+    assert _tokens_by_position(report) == want
+
+
+def test_fleet_report_merges_and_summarizes():
+    report = Fleet([FakeEngine(), FakeEngine()]).run(_fake_workload())
+    merged = report.merged
+    assert len(merged.requests) == report.requests == 8
+    assert report.tokens_generated == merged.tokens_generated == 8 * 3
+    s = report.summary()
+    assert s["replicas"] == 2 and s["replicas_alive"] == 2
+    assert s["goodput"] == 1.0 and s["lost_tokens"] == 0
+    assert 0.0 <= s["routing_hit_rate"] <= 1.0
+    assert "replicas" in report.format() and "goodput" in report.format()
+
+
+# --------------------------------------------------------------------------- #
+# ServeReport.goodput (hoisted top-level; satellite bugfix).
+# --------------------------------------------------------------------------- #
+def _finished_req(slo_cls, *, violate=False):
+    req = Request(prompt=[1, 2, 3], max_new_tokens=2, slo=slo_cls)
+    req.tokens, req.state = [5, 6], RequestState.FINISHED
+    req.s_arrival, req.s_first_token = 0, 1
+    budget = slo_cls.latency_steps if slo_cls else None
+    req.s_done = (budget + 5) if (violate and budget) else 2
+    req.t_arrival, req.t_first_token, req.t_done = 0.0, 0.01, 0.02
+    return req
+
+
+def test_serve_report_goodput_weights_classes_by_request_count():
+    """Mixed workload: top-level goodput is the per-class goodputs
+    weighted by class request counts — here identical to the flat
+    request-weighted slo_goodput, and consistent with per_class()."""
+    interactive, batch = get_class("interactive"), get_class("batch")
+    reqs = ([_finished_req(interactive) for _ in range(2)]
+            + [_finished_req(interactive, violate=True)]
+            + [_finished_req(batch) for _ in range(2)])
+    report = ServeReport(requests=reqs, steps=[], elapsed_s=1.0)
+    assert report.goodput == pytest.approx(0.8)
+    assert report.goodput == pytest.approx(report.slo_goodput)
+    pc = report.per_class()
+    assert pc["interactive"]["goodput"] == pytest.approx(2 / 3, abs=1e-4)
+    assert pc["batch"]["goodput"] == 1.0
+    assert report.summary()["goodput"] == pytest.approx(0.8)
+
+
+def test_serve_report_goodput_single_class_and_untagged():
+    interactive = get_class("interactive")
+    one = ServeReport(requests=[_finished_req(interactive),
+                                _finished_req(interactive, violate=True)],
+                      steps=[], elapsed_s=1.0)
+    assert one.goodput == pytest.approx(
+        one.per_class()["interactive"]["goodput"], abs=1e-4)
+    plain = ServeReport(requests=[_finished_req(None) for _ in range(3)],
+                        steps=[], elapsed_s=1.0)
+    assert plain.goodput == 1.0
+    assert "goodput" not in plain.summary(), "untagged summary stays lean"
+    assert ServeReport(requests=[], steps=[], elapsed_s=0.0).goodput == 1.0
+
+
+# --------------------------------------------------------------------------- #
+# RunSpec fleet section + literal mirrors.
+# --------------------------------------------------------------------------- #
+def test_fleet_section_set_paths_and_roundtrip():
+    spec = apply_assignments(RunSpec(mode="serve"), [
+        "fleet.n_replicas=2", "fleet.routing=least_loaded",
+        "fleet.chaos=kill", "fleet.chaos_step=3",
+        "fleet.heartbeat_timeout=6",
+    ])
+    f = spec.fleet
+    assert (f.n_replicas, f.routing, f.chaos) == (2, "least_loaded", "kill")
+    assert (f.chaos_step, f.heartbeat_timeout) == (3, 6)
+    again = RunSpec.from_dict(spec.to_dict())
+    assert again == spec
+    for bad in ("fleet.routing=nearest", "fleet.chaos=explode",
+                "fleet.n_replicas=-1", "fleet.port=0"):
+        with pytest.raises(Exception):
+            apply_assignments(RunSpec(mode="serve"), [bad])
+
+
+def test_spec_literals_mirror_fleet_modules():
+    """spec.py keeps jax-free copies of the fleet's mode literals so the
+    CLI validates without importing engines; they must never drift."""
+    from repro.fleet import chaos as chaos_mod
+    from repro.fleet import router as router_mod
+    assert run_spec_mod.ROUTING_POLICIES == router_mod.ROUTING_POLICIES
+    assert run_spec_mod.CHAOS_MODES == chaos_mod.CHAOS_MODES
+    assert run_spec_mod.ROUTING_POLICIES == ROUTING_POLICIES
+    assert run_spec_mod.CHAOS_MODES == CHAOS_MODES
+
+
+# --------------------------------------------------------------------------- #
+# RunSpec -> k8s manifests (deterministic, golden file).
+# --------------------------------------------------------------------------- #
+def _fleet_spec():
+    spec = load_spec_file(str(REPO / "runs" / "serve_fleet.toml"))
+    # `python -m repro run --spec runs/serve_fleet.toml --mode dryrun`
+    return apply_assignments(spec, ["mode=dryrun"])
+
+
+def test_k8s_render_deterministic_and_matches_golden():
+    spec = _fleet_spec()
+    text = k8s.render(spec)
+    assert text == k8s.render(_fleet_spec()), "two renders must be identical"
+    golden = (REPO / "tests" / "golden" / "serve_fleet_k8s.yaml").read_text()
+    assert text == golden, (
+        "rendered manifests drifted from tests/golden/serve_fleet_k8s.yaml; "
+        "if the change is intentional regenerate with: PYTHONPATH=src "
+        "python -m repro run --spec runs/serve_fleet.toml --mode dryrun "
+        "--set fleet.k8s_out=tests/golden/serve_fleet_k8s.yaml")
+
+
+def test_k8s_manifest_structure_and_embedded_spec():
+    spec = _fleet_spec()
+    configmap, deployment, service = k8s.render_manifests(spec)
+    assert [m["kind"] for m in (configmap, deployment, service)] == [
+        "ConfigMap", "Deployment", "Service"]
+    assert deployment["spec"]["replicas"] == spec.fleet.n_replicas == 2
+    app = deployment["metadata"]["labels"]["app"]
+    assert deployment["spec"]["selector"]["matchLabels"]["app"] == app
+    assert service["spec"]["selector"]["app"] == app
+    assert service["metadata"]["name"] == f"{app}-router"
+    # pods re-run the committed spec: serve mode, fan-out left to k8s
+    pod = json.loads(configmap["data"][k8s.SPEC_FILE])
+    embedded = RunSpec.from_dict(pod)
+    assert embedded.mode == "serve"
+    assert embedded.fleet.n_replicas == 0 and embedded.fleet.k8s_out == ""
+    assert embedded.serve.kv.layout == "paged"
+
+
+def test_k8s_render_requires_replicas():
+    with pytest.raises(ValueError, match="n_replicas"):
+        k8s.render_manifests(RunSpec(mode="serve"))
+
+
+# --------------------------------------------------------------------------- #
+# bench/compare: *_fleet_* rows are additions (satellite a).
+# --------------------------------------------------------------------------- #
+def test_compare_fleet_rows_are_additions(tmp_path):
+    """The pr9 artifact adds `*_fleet_*` rows; against the pr8 baseline
+    they must surface as status `new` (additions never fail the gate),
+    while a same-named row that regressed still does."""
+    def timed(name, median, **derived):
+        return {"name": name,
+                "wall_us": {"median_us": float(median), "iqr_us": 1.0,
+                            "iters": 2, "warmup": 1},
+                "derived": derived}
+
+    def artifact(records):
+        entry = bench_schema.bench_entry(
+            paper_ref="MLPerf-Inference", units="us",
+            derived_keys=("tokens_per_s", "goodput"), records=records)
+        art = make_artifact({"serve_decode": entry}, tag="t", smoke=True,
+                            warmup=1, iters=2)
+        assert validate(art) == []
+        return art
+
+    old = artifact([timed("serve/gemma-7b_paged_offline", 100.0)])
+    new = artifact([timed("serve/gemma-7b_paged_offline", 101.0),
+                    timed("serve/gemma-7b_fleet_offline", 300.0,
+                          goodput=0.83),
+                    timed("serve/gemma-7b_fleet_server", 310.0,
+                          goodput=0.91)])
+    rows, regs = diff_rows(old, new, threshold=1.15)
+    by = {r["name"]: r["status"] for r in rows}
+    assert by["serve_decode:serve/gemma-7b_fleet_offline"] == "new"
+    assert by["serve_decode:serve/gemma-7b_fleet_server"] == "new"
+    assert regs == []
+    old_p, new_p = tmp_path / "old.json", tmp_path / "new.json"
+    bench_schema.dump(old, str(old_p))
+    bench_schema.dump(new, str(new_p))
+    assert compare_main([str(old_p), str(new_p), "--no-wall"]) == 0
+
+
+# --------------------------------------------------------------------------- #
+# Real engines: the acceptance chaos test (slow tier).
+# --------------------------------------------------------------------------- #
+def _engine_env():
+    cfg = get_config("gemma-7b").reduced()
+    api = ModelAPI(cfg)
+    params, _ = split_tree(api.init(cfg, jax.random.PRNGKey(0)))
+    mesh = single_device_mesh()
+    return cfg, params, mesh
+
+
+def _paged_engine(cfg, params):
+    return Engine(cfg, params, None,
+                  ServeConfig(max_batch=2, max_len=20, kv_layout="paged",
+                              page_size=4, prefill_chunk=4,
+                              prefix_cache=True))
+
+
+def _templated_workload(cfg):
+    return synthetic_requests(cfg, n=6, tokens=6, prompt_len=9,
+                              scenario="server", seed=0, arrival_rate=0.75,
+                              shared_prefix_len=6, n_templates=2)
+
+
+@pytest.mark.slow
+def test_fleet_chaos_kill_token_identity_and_goodput():
+    """The PR's acceptance criterion end-to-end on real engines: with a
+    seeded replica kill mid-stream every submitted request completes on
+    the survivor, completed greedy outputs are token-identical to a
+    single-replica run, and FleetReport.goodput strictly decreases vs
+    the chaos-free run (lost decode work is charged)."""
+    cfg, params, mesh = _engine_env()
+    with mesh, use_rules(None):
+        solo_engine = _paged_engine(cfg, params)
+        mate = _paged_engine(cfg, params)
+        healthy = Fleet([solo_engine]).run(_templated_workload(cfg))
+        want = _tokens_by_position(healthy)
+        assert healthy.goodput == 1.0 and healthy.lost_tokens == 0
+
+        plan = ChaosPlan([ChaosEvent(step=4, kind="kill")], seed=0)
+        fleet = Fleet([solo_engine, mate],
+                      FleetConfig(routing="prefix", heartbeat_timeout=4),
+                      chaos=plan)
+        report = fleet.run(_templated_workload(cfg))
+
+    assert report.requests == 6, "every request finished on a survivor"
+    assert _tokens_by_position(report) == want, (
+        "failover changed greedy outputs")
+    assert report.kills == 1 and report.reroutes > 0
+    assert report.lost_tokens > 0, "the victim had in-flight decode work"
+    assert report.goodput < healthy.goodput, (
+        "lost work must strictly decrease fleet goodput")
+    assert sorted(report.replica_states.values()) == ["dead", "ready"]
+    assert report.routed_affinity > 0, "templated traffic uses the ring"
+
+
+@pytest.mark.slow
+def test_fleet_two_replicas_match_one_without_chaos():
+    """Data parallelism alone never changes outputs: 2 replicas with
+    prefix routing produce the same greedy tokens as 1, and templated
+    traffic re-routes to the same home (warm hits accrue)."""
+    cfg, params, mesh = _engine_env()
+    with mesh, use_rules(None):
+        e0, e1 = _paged_engine(cfg, params), _paged_engine(cfg, params)
+        one = Fleet([e0]).run(_templated_workload(cfg))
+        two = Fleet([e0, e1]).run(_templated_workload(cfg))
+    assert _tokens_by_position(two) == _tokens_by_position(one)
+    assert two.goodput == 1.0 and two.kills == 0
+    assert two.routing_hit_rate > 0.0, "repeat templates should be warm"
