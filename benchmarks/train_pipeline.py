@@ -1,0 +1,110 @@
+"""train_pipeline — sync vs async training hot path, as goodput twins.
+
+The paper keeps TPU pods busy by overlapping everything episodic with
+the device step: the input pipeline streams ahead of the step (§2) and
+checkpoints must not stall the loop (the classic async-checkpointing
+argument, arXiv 2011.03641). The CPU analogue runs the same reduced
+model through ``Trainer.fit`` twice — once with the legacy inline feed
+and blocking checkpoint saves, once with the streaming pipeline
+(background prefetch + ``device_put`` double-buffering) and the
+non-blocking background checkpoint writer — and records each twin's
+per-step wall, training goodput, and host-stall breakdown. The headline
+derived key is ``ckpt_block_vs_sync`` on the async row: the fraction of
+the sync twin's checkpoint stall the async path still charges.
+"""
+import shutil
+import tempfile
+
+from benchmarks.common import standalone_context
+from repro.bench import benchmark
+from repro.bench.registry import timing_from_samples
+
+
+def _fit_twin(arch, *, async_path, steps, ckpt_every, batch, seq):
+    """One training run; returns its history (records carry the
+    step_ms/data_wait_ms/ckpt_block_ms breakdown)."""
+    from repro.configs import get_config
+    from repro.data import Pipeline, SyntheticShardSource
+    from repro.data.pipeline import synthetic_lm_batches
+    from repro.launch.mesh import single_device_mesh
+    from repro.train import Hook, Trainer, TrainerConfig
+
+    class _SyncClock(Hook):
+        needs_sync = True  # samples must measure the step, not dispatch
+
+    cfg = get_config(arch).reduced()
+    ckpt_dir = tempfile.mkdtemp(prefix="repro_bench_train_ckpt_")
+    tcfg = TrainerConfig(
+        total_steps=steps, checkpoint_every=ckpt_every,
+        checkpoint_dir=ckpt_dir, log_every=0,
+        async_checkpoint=async_path, double_buffer=async_path,
+    )
+    trainer = Trainer(cfg, single_device_mesh(), tcfg)
+    pipeline = None
+    if async_path:
+        source = SyntheticShardSource(cfg, batch=batch, seq=seq,
+                                      n_batches=steps, shard_size=4)
+        pipeline = batches = Pipeline(source, prefetch_depth=2)
+    else:
+        batches = synthetic_lm_batches(cfg, batch=batch, seq=seq,
+                                       steps=steps)
+    try:
+        return trainer.fit(batches,
+                           hooks=trainer.default_hooks() + [_SyncClock()])
+    finally:
+        if pipeline is not None:
+            pipeline.close()
+        shutil.rmtree(ckpt_dir, ignore_errors=True)
+
+
+def _stats(history):
+    """Breakdown of one twin's history, warmup dropped: the first step
+    (train-step compile) and the first save (the async path's one-time
+    snapshot-copy compile) are excluded, steady state is what's scored."""
+    tail = history[1:] if len(history) > 1 else history
+    step_ms = [r["step_ms"] for r in tail]
+    wait_ms = [r["data_wait_ms"] for r in tail]
+    ckpt_ms = [r["ckpt_block_ms"] for r in tail]
+    productive = sum(step_ms)
+    wall = productive + sum(wait_ms) + sum(ckpt_ms)
+    saves = [c for c in ckpt_ms if c > 0.0]
+    if len(saves) > 1:
+        saves = saves[1:]
+    saves = sorted(saves)
+    return {
+        "samples_us": [ms * 1e3 for ms in step_ms],
+        "goodput": round(productive / wall, 6) if wall else 1.0,
+        "data_wait_ms": round(sum(wait_ms) / len(tail), 4),
+        "ckpt_block_ms": round(saves[len(saves) // 2], 4) if saves else 0.0,
+    }
+
+
+@benchmark("train_pipeline",
+           paper_ref="§2 input pipeline overlap + async checkpointing "
+                     "(arXiv 2011.03641)",
+           units="us",
+           derived_keys=("goodput", "data_wait_ms", "ckpt_block_ms",
+                         "ckpt_block_vs_sync", "steps_per_s"))
+def run(ctx):
+    arch = "rwkv6-3b"  # cheapest reduced config to compile
+    steps = 16 if ctx.smoke else 24
+    # The save cadence must exceed the background writer's duration, or
+    # no async design with at-most-one-in-flight could avoid blocking;
+    # every=4 steps gives the writer ~4 step times of overlap budget.
+    kw = dict(steps=steps, ckpt_every=4, batch=2, seq=32)
+
+    twins = {}
+    for label, async_path in (("sync", False), ("async", True)):
+        s = _stats(_fit_twin(arch, async_path=async_path, **kw))
+        timing = timing_from_samples(s.pop("samples_us"), warmup=1)
+        derived = dict(s, steps_per_s=round(1e6 / timing.median_us, 2))
+        if label == "async" and twins["sync"]["ckpt_block_ms"]:
+            derived["ckpt_block_vs_sync"] = round(
+                s["ckpt_block_ms"] / twins["sync"]["ckpt_block_ms"], 4)
+        twins[label] = s
+        ctx.record(f"train_pipeline/{label}", timing, **derived)
+    return ctx.records
+
+
+if __name__ == "__main__":
+    run(standalone_context())

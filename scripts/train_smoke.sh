@@ -1,0 +1,53 @@
+#!/usr/bin/env bash
+# train-smoke: the async training hot path end-to-end on CPU, via the
+# committed spec (runs/train_async.toml): streaming shard pipeline with
+# on-disk cache + background prefetch, non-blocking checkpointing, and
+# the JSONL metrics stream — then a resume from a mid-run checkpoint
+# (which must reuse the shard cache and seek the stream, not rebuild).
+# Budget: well under a minute on CPU.
+# Usage: scripts/train_smoke.sh  (from the repo root; used by CI and
+# scripts/verify.sh)
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
+
+ROOT=/tmp/repro_train_async   # the paths runs/train_async.toml points at
+rm -rf "$ROOT"
+
+echo "== train-smoke: async pipeline + async checkpointing (12 steps) =="
+python -m repro run --spec runs/train_async.toml
+
+echo "== train-smoke: resume from step_8 (cache reuse + stream seek) =="
+python -m repro run --spec runs/train_async.toml \
+    --set trainer.resume="$ROOT/ckpt/step_8" \
+    --metrics-out "$ROOT/metrics_resumed.jsonl"
+
+echo "== train-smoke: metrics stream + checkpoints check =="
+python - "$ROOT" <<'EOF'
+import json
+import os
+import sys
+
+root = sys.argv[1]
+
+rows = [json.loads(x) for x in open(os.path.join(root, "metrics.jsonl"))]
+assert [r["step"] for r in rows] == list(range(1, 13)), [
+    r["step"] for r in rows]
+need = {"loss", "step_ms", "data_wait_ms", "ckpt_block_ms"}
+missing = [r["step"] for r in rows if not need <= set(r)]
+assert not missing, f"rows missing breakdown keys: {missing}"
+
+resumed = [json.loads(x)
+           for x in open(os.path.join(root, "metrics_resumed.jsonl"))]
+assert [r["step"] for r in resumed] == [9, 10, 11, 12], [
+    r["step"] for r in resumed]
+
+from repro.train.checkpoint import latest_step
+assert latest_step(os.path.join(root, "ckpt")) == 12
+assert os.path.exists(os.path.join(root, "cache", "ledger.json"))
+print("train-smoke checks OK")
+EOF
+
+echo "train-smoke OK"

@@ -2,10 +2,10 @@
 # Tier-1 verify: full CPU test suite + the sharding suite explicitly.
 # Fail-fast ordering: the smoke subset (-m "not slow") runs first so a
 # broken build dies in minutes; the run-smoke CLI sweep (every mode of
-# `python -m repro run`, ~30s) runs before the slow tier for the same
-# reason; the slow system tests run next; the sharding suite runs
-# explicitly last (markers registered in pyproject.toml
-# [tool.pytest.ini_options]).
+# `python -m repro run`, ~30s) and the train-smoke async-hot-path run
+# (~15s) run before the slow tier for the same reason; the slow system
+# tests run next; the sharding suite runs explicitly last (markers
+# registered in pyproject.toml [tool.pytest.ini_options]).
 # Usage: scripts/verify.sh  (from the repo root; used by CI)
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -15,5 +15,6 @@ export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 
 python -m pytest -x -q -m "not slow"
 bash scripts/run_smoke.sh
+bash scripts/train_smoke.sh
 python -m pytest -x -q -m "slow"
 python -m pytest tests/test_sharding.py -q

@@ -32,6 +32,7 @@ BENCHMARK_MODULES = (
     "benchmarks.wus_overhead",
     "benchmarks.roofline",
     "benchmarks.serve_decode",
+    "benchmarks.train_pipeline",
 )
 
 

@@ -1,3 +1,30 @@
-from repro.data import bucketization, pipeline
+from repro.data import bucketization, cache, pipeline, prefetch, source
+from repro.data.cache import (
+    CacheCorruptError,
+    CacheError,
+    CacheMismatchError,
+    CacheStatus,
+    ShardCache,
+    check_cache,
+)
+from repro.data.pipeline import Pipeline
+from repro.data.prefetch import Prefetcher
+from repro.data.source import Source, SyntheticShardSource
 
-__all__ = ["bucketization", "pipeline"]
+__all__ = [
+    "bucketization",
+    "cache",
+    "pipeline",
+    "prefetch",
+    "source",
+    "CacheCorruptError",
+    "CacheError",
+    "CacheMismatchError",
+    "CacheStatus",
+    "ShardCache",
+    "check_cache",
+    "Pipeline",
+    "Prefetcher",
+    "Source",
+    "SyntheticShardSource",
+]

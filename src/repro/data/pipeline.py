@@ -31,25 +31,32 @@ def _zipf_tokens(rng: np.random.Generator, shape, vocab: int) -> np.ndarray:
     return toks
 
 
+def make_lm_batch(cfg: ModelConfig, rng: np.random.Generator, *,
+                  batch: int, seq: int) -> Dict:
+    """One synthetic batch dict in the model family's input layout
+    (tokens, plus media for vision/audio frontends)."""
+    out = {}
+    if cfg.frontend == "vision_patches":
+        n_media = min(cfg.n_media_tokens, seq // 2)
+        out["tokens"] = _zipf_tokens(rng, (batch, seq - n_media), cfg.vocab)
+        out["media"] = rng.standard_normal(
+            (batch, n_media, cfg.d_model)
+        ).astype(np.float32)
+    elif cfg.frontend == "audio_frames":
+        out["tokens"] = _zipf_tokens(rng, (batch, seq), cfg.vocab)
+        out["media"] = rng.standard_normal(
+            (batch, cfg.enc_source_len, cfg.d_model)
+        ).astype(np.float32)
+    else:
+        out["tokens"] = _zipf_tokens(rng, (batch, seq), cfg.vocab)
+    return out
+
+
 def synthetic_lm_batches(cfg: ModelConfig, *, batch: int, seq: int,
                          steps: int, seed: int = 0) -> Iterator[Dict]:
     rng = np.random.default_rng(seed)
     for _ in range(steps):
-        out = {}
-        if cfg.frontend == "vision_patches":
-            n_media = min(cfg.n_media_tokens, seq // 2)
-            out["tokens"] = _zipf_tokens(rng, (batch, seq - n_media), cfg.vocab)
-            out["media"] = rng.standard_normal(
-                (batch, n_media, cfg.d_model)
-            ).astype(np.float32)
-        elif cfg.frontend == "audio_frames":
-            out["tokens"] = _zipf_tokens(rng, (batch, seq), cfg.vocab)
-            out["media"] = rng.standard_normal(
-                (batch, cfg.enc_source_len, cfg.d_model)
-            ).astype(np.float32)
-        else:
-            out["tokens"] = _zipf_tokens(rng, (batch, seq), cfg.vocab)
-        yield out
+        yield make_lm_batch(cfg, rng, batch=batch, seq=seq)
 
 
 def synthetic_eval_set(cfg: ModelConfig, *, batch: int, seq: int,
@@ -114,6 +121,74 @@ class RoundRobinHostPipeline:
                     yield next(s)
                 except StopIteration:
                     done[h] = True
+
+
+# --------------------------------------------------------------------------- #
+# Pipeline: source -> (optional on-disk cache) -> background prefetch.
+# --------------------------------------------------------------------------- #
+class Pipeline:
+    """The streaming training input pipeline, as one iterator.
+
+    Chains a shard-addressed :class:`~repro.data.source.Source` through
+    an optional checksum-verified on-disk :class:`~repro.data.cache.
+    ShardCache` and a bounded background
+    :class:`~repro.data.prefetch.Prefetcher` (depth >= 2), yielding host
+    batch dicts. ``start_batch`` seeks a resumed run to its stream
+    position without generating the skipped shards. ``wait_ms`` exposes
+    the consumer-side stall total (the trainer's ``data_wait_ms``).
+
+    Iterating twice restarts from ``start_batch`` (a fresh worker
+    thread per ``__iter__``); ``close()`` — or the context manager —
+    stops the in-flight worker.
+    """
+
+    def __init__(self, source, *, cache_dir: Optional[str] = None,
+                 prefetch_depth: int = 2, start_batch: int = 0,
+                 verify_cache: bool = True):
+        if start_batch < 0:
+            raise ValueError(f"start_batch must be >= 0, got {start_batch}")
+        self.source = source
+        self.prefetch_depth = prefetch_depth
+        self.start_batch = start_batch
+        self._prefetcher = None
+        self._store = source
+        if cache_dir:
+            from repro.data.cache import ShardCache
+
+            self._store = ShardCache(cache_dir).ensure(
+                source, verify=verify_cache)
+
+    def _shard_stream(self) -> Iterator[Dict]:
+        """Flattened per-batch stream out of the (cached) shard store,
+        seeking past ``start_batch`` whole shards cheaply."""
+        size = self.source.shard_size
+        first, skip = divmod(self.start_batch, size)
+        for i in range(first, self._store.n_shards):
+            yield from self._store.shard(i)[skip:]
+            skip = 0
+
+    def __iter__(self) -> Iterator[Dict]:
+        from repro.data.prefetch import Prefetcher
+
+        self.close()
+        self._prefetcher = Prefetcher(self._shard_stream(),
+                                      depth=self.prefetch_depth)
+        return self._prefetcher
+
+    @property
+    def wait_ms(self) -> float:
+        return self._prefetcher.wait_ms if self._prefetcher else 0.0
+
+    def close(self) -> None:
+        if self._prefetcher is not None:
+            self._prefetcher.close()
+            self._prefetcher = None
+
+    def __enter__(self) -> "Pipeline":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
 
 # --------------------------------------------------------------------------- #

@@ -1,0 +1,95 @@
+"""Background-thread prefetch: the consumer never waits on generation.
+
+:class:`Prefetcher` runs the wrapped iterator on a worker thread into a
+bounded queue (depth >= 2 by default: one batch being consumed, one —
+or more — staged), so batch generation/decode/disk reads overlap the
+device step instead of serializing with it. The consumer-side wait time
+is accumulated in ``wait_ms`` — the host-stall number the trainer's
+``data_wait_ms`` breakdown and the training-goodput row report.
+
+Contract (property-tested in tests/test_train_async.py): the output
+order and contents are exactly the wrapped iterator's; worker
+exceptions re-raise at the consumer's next ``__next__``; ``close()``
+(also via context manager) stops the worker even when the queue is
+full.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from typing import Iterable, Iterator, Optional
+
+_SENTINEL = object()
+
+
+class Prefetcher:
+    """Bounded background prefetch over any iterable of batches."""
+
+    def __init__(self, it: Iterable, depth: int = 2):
+        if depth < 1:
+            raise ValueError(f"prefetch depth must be >= 1, got {depth}")
+        self.depth = depth
+        self.wait_ms = 0.0          # total time the consumer blocked
+        self.batches = 0            # batches handed out so far
+        self._q: "queue.Queue" = queue.Queue(maxsize=depth)
+        self._stop = threading.Event()
+        self._error: Optional[BaseException] = None
+        self._thread = threading.Thread(
+            target=self._worker, args=(iter(it),),
+            name="repro-data-prefetch", daemon=True)
+        self._thread.start()
+
+    def _worker(self, it: Iterator) -> None:
+        try:
+            for item in it:
+                # bounded put that stays responsive to close(): a full
+                # queue must not pin the thread forever
+                while not self._stop.is_set():
+                    try:
+                        self._q.put(item, timeout=0.05)
+                        break
+                    except queue.Full:
+                        continue
+                if self._stop.is_set():
+                    return
+        except BaseException as e:  # noqa: BLE001 — forwarded to consumer
+            self._error = e
+        while not self._stop.is_set():
+            try:
+                self._q.put(_SENTINEL, timeout=0.05)
+                return
+            except queue.Full:
+                continue
+
+    # ------------------------------------------------------------------ #
+    def __iter__(self) -> "Prefetcher":
+        return self
+
+    def __next__(self):
+        t0 = time.perf_counter()
+        item = self._q.get()
+        self.wait_ms += (time.perf_counter() - t0) * 1e3
+        if item is _SENTINEL:
+            if self._error is not None:
+                err, self._error = self._error, None
+                raise err
+            raise StopIteration
+        self.batches += 1
+        return item
+
+    def close(self) -> None:
+        """Stop the worker thread and release the queue."""
+        self._stop.set()
+        self._thread.join(timeout=5.0)
+        while True:  # drain so repeated close()/gc never blocks anything
+            try:
+                self._q.get_nowait()
+            except queue.Empty:
+                break
+
+    def __enter__(self) -> "Prefetcher":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

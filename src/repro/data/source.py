@@ -1,0 +1,98 @@
+"""Shard-addressed batch sources: the producer end of the streaming
+input pipeline.
+
+A :class:`Source` is the unit the on-disk cache (:mod:`repro.data.cache`)
+and the background :class:`~repro.data.prefetch.Prefetcher` agree on:
+data comes in *shards*, each shard is a deterministic list of batch
+dicts addressable by index (so any shard can be generated — or read back
+from cache — without producing its predecessors), and the training
+stream is the shards concatenated in order.
+
+:class:`SyntheticShardSource` is the synthetic-LM instance: shard ``i``
+is generated from its own ``(seed, i)``-derived RNG, so shard content is
+independent of how many shards precede it and a resumed run can seek to
+any global batch index in O(1) shards.
+"""
+from __future__ import annotations
+
+import itertools
+from typing import Dict, Iterator, List, Protocol
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.data.pipeline import make_lm_batch
+
+
+class Source(Protocol):
+    """Shard-addressed batch producer (what Pipeline/ShardCache consume).
+
+    ``n_shards`` shards, each ``shard(i)`` a deterministic list of batch
+    dicts (str -> np.ndarray). ``fingerprint()`` identifies the exact
+    stream for cache-reuse checks.
+    """
+
+    n_shards: int
+
+    def shard(self, i: int) -> List[Dict[str, np.ndarray]]:
+        ...
+
+    def fingerprint(self) -> Dict:
+        ...
+
+
+class SyntheticShardSource:
+    """Synthetic zipfian-LM batches, carved into independent shards.
+
+    ``n_batches`` total batches of ``(batch, seq)`` split into shards of
+    ``shard_size`` (the last shard may be short). Per-shard RNGs are
+    seeded from ``(seed, shard_index)`` so each shard regenerates
+    bit-identically in isolation — the property the on-disk cache's
+    checksum verification relies on.
+    """
+
+    def __init__(self, cfg: ModelConfig, *, batch: int, seq: int,
+                 n_batches: int, shard_size: int = 8, seed: int = 0):
+        if shard_size < 1:
+            raise ValueError(f"shard_size must be >= 1, got {shard_size}")
+        if n_batches < 0:
+            raise ValueError(f"n_batches must be >= 0, got {n_batches}")
+        self.cfg = cfg
+        self.batch = batch
+        self.seq = seq
+        self.n_batches = n_batches
+        self.shard_size = shard_size
+        self.seed = seed
+        self.n_shards = -(-n_batches // shard_size) if n_batches else 0
+
+    def shard(self, i: int) -> List[Dict[str, np.ndarray]]:
+        if not 0 <= i < self.n_shards:
+            raise IndexError(f"shard {i} out of range [0, {self.n_shards})")
+        rng = np.random.default_rng([self.seed, i])
+        n = min(self.shard_size, self.n_batches - i * self.shard_size)
+        return [make_lm_batch(self.cfg, rng, batch=self.batch, seq=self.seq)
+                for _ in range(n)]
+
+    def fingerprint(self) -> Dict:
+        """Stream identity for cache-reuse validation (a cache built for
+        a different geometry/seed must not be silently trained on)."""
+        return {
+            "kind": "synthetic_lm",
+            "arch": self.cfg.name,
+            "vocab": self.cfg.vocab,
+            "frontend": self.cfg.frontend,
+            "batch": self.batch,
+            "seq": self.seq,
+            "n_batches": self.n_batches,
+            "shard_size": self.shard_size,
+            "seed": self.seed,
+        }
+
+    def batches(self, start: int = 0) -> Iterator[Dict[str, np.ndarray]]:
+        """The flattened stream, skipping the first ``start`` batches
+        (resume seek) without generating the skipped shards."""
+        first = start // self.shard_size if self.shard_size else 0
+        skip = start - first * self.shard_size
+        for i in range(first, self.n_shards):
+            yield from itertools.islice(self.shard(i), skip, None)
+            skip = 0

@@ -34,6 +34,10 @@ def build_spec(args) -> RunSpec:
     }
     if flags:
         spec = dataclasses.replace(spec, **flags)
+    if getattr(args, "metrics_out", None):
+        spec = dataclasses.replace(
+            spec, trainer=dataclasses.replace(
+                spec.trainer, metrics_out=args.metrics_out))
     return apply_assignments(spec, args.set or [])
 
 
@@ -58,6 +62,9 @@ def main(argv=None) -> int:
                     default=None, help="smoke-scale config (the default)")
     ap.add_argument("--full", dest="reduced", action="store_false",
                     help="published dimensions (pod-scale)")
+    ap.add_argument("--metrics-out", default=None, metavar="FILE",
+                    help="stream every fit record to FILE as JSONL "
+                         "(shorthand for --set trainer.metrics_out=FILE)")
     ap.add_argument("--set", action="append", metavar="KEY=VALUE",
                     help="dotted-key override, e.g. trainer.total_steps=50")
     args = ap.parse_args(argv[1:])

@@ -88,6 +88,9 @@ def _make_trainer(spec: RunSpec):
         log_every=t.log_every,
         seed=spec.seed,
         metrics=t.metrics,
+        async_checkpoint=t.async_checkpoint,
+        double_buffer=t.data.pipeline == "async",
+        metrics_out=t.metrics_out,
     )
     return Trainer(resolve_config(spec), build_mesh(spec), tcfg)
 
@@ -101,15 +104,36 @@ def _run_train(spec: RunSpec) -> Dict[str, Any]:
     t = spec.trainer
     trainer = _make_trainer(spec)
     start = trainer.resume(t.resume) if t.resume else 0
-    # One deterministic stream for the whole run: a resumed run skips the
-    # batches the checkpointed steps already consumed, so interrupted +
-    # resumed == uninterrupted, step for step.
-    batches = synthetic_lm_batches(
-        trainer.cfg, batch=t.batch, seq=t.seq, steps=t.total_steps,
-        seed=spec.seed,
-    )
-    if start:
-        batches = itertools.islice(batches, start, None)
+    pipeline = None
+    if t.data.pipeline == "async":
+        # Streaming pipeline: shard-addressed source (per-shard RNG, so
+        # the resume seek below is O(1)) -> optional checksum-verified
+        # cache -> background prefetch. A resumed run starts at the
+        # stream position its checkpointed steps had consumed, so
+        # interrupted + resumed == uninterrupted, step for step.
+        from repro.data import Pipeline, SyntheticShardSource
+
+        source = SyntheticShardSource(
+            trainer.cfg, batch=t.batch, seq=t.seq,
+            n_batches=t.total_steps, shard_size=t.data.shard_size,
+            seed=spec.seed,
+        )
+        pipeline = Pipeline(
+            source, cache_dir=t.data.cache_dir or None,
+            prefetch_depth=t.data.prefetch_depth, start_batch=start,
+            verify_cache=t.data.verify_cache,
+        )
+        batches = pipeline
+    else:
+        # One deterministic stream for the whole run: a resumed run skips
+        # the batches the checkpointed steps already consumed, so
+        # interrupted + resumed == uninterrupted, step for step.
+        batches = synthetic_lm_batches(
+            trainer.cfg, batch=t.batch, seq=t.seq, steps=t.total_steps,
+            seed=spec.seed,
+        )
+        if start:
+            batches = itertools.islice(batches, start, None)
     eval_fn = None
     if t.eval_every:
         eval_fn = synthetic_eval_set(trainer.cfg, batch=t.batch, seq=t.seq)
@@ -117,7 +141,11 @@ def _run_train(spec: RunSpec) -> Dict[str, Any]:
     if t.bench_out:
         hooks.append(BenchRecordHook(t.bench_out, arch=trainer.cfg.name,
                                      tag=f"train-{spec.arch}"))
-    history = trainer.fit(batches, eval_fn, hooks=hooks)
+    try:
+        history = trainer.fit(batches, eval_fn, hooks=hooks)
+    finally:
+        if pipeline is not None:
+            pipeline.close()
     print("done", history[-1] if history else "")
     return {"history": history, "trainer": trainer}
 

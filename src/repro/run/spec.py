@@ -42,6 +42,36 @@ SLO_CLASSES = ("interactive", "standard", "batch")
 # Mirrors train.steps.EXTRA_METRICS (kept literal so spec parsing stays
 # jax-free; a drift test in tests/test_run.py asserts the two agree).
 TRAIN_METRICS = ("grad_norm", "param_norm")
+PIPELINES = ("sync", "async")
+
+
+@dataclass(frozen=True)
+class DataSection:
+    """The ``trainer.data`` sub-section: input-pipeline mode and shard
+    geometry (``--set trainer.data.pipeline=async``).
+
+    ``sync`` (default) keeps the inline generator feed; ``async`` runs
+    the streaming :class:`repro.data.Pipeline` — shard-addressed source,
+    optional checksum-verified on-disk cache, background prefetch, and
+    ``device_put`` double-buffering so the step never waits on H2D.
+    """
+
+    pipeline: str = "sync"      # sync | async
+    prefetch_depth: int = 2     # async: batches buffered ahead of the step
+    shard_size: int = 8         # async: batches per source shard
+    cache_dir: str = ""         # async: on-disk shard cache ('' = off)
+    verify_cache: bool = True   # async: checksum-verify the cache ledger
+
+    def __post_init__(self):
+        if self.pipeline not in PIPELINES:
+            raise SpecError(
+                f"trainer.data.pipeline must be one of {PIPELINES}, got "
+                f"{self.pipeline!r}"
+                + did_you_mean(self.pipeline, PIPELINES))
+        if self.prefetch_depth < 1:
+            raise SpecError("trainer.data.prefetch_depth must be >= 1")
+        if self.shard_size < 1:
+            raise SpecError("trainer.data.shard_size must be >= 1")
 
 
 @dataclass(frozen=True)
@@ -58,6 +88,9 @@ class TrainerSection:
     resume: str = ""            # checkpoint dir (root or step_N) to resume
     metrics: Tuple[str, ...] = ()  # extra per-step metrics, e.g. grad_norm
     bench_out: str = ""         # write a BENCH_*.json of this training run
+    async_checkpoint: bool = False  # non-blocking background ckpt writer
+    metrics_out: str = ""       # stream every fit record to this JSONL file
+    data: DataSection = field(default_factory=DataSection)
 
     def __post_init__(self):
         for m in self.metrics:

@@ -1,4 +1,5 @@
-from repro.train import checkpoint, steps
+from repro.train import checkpoint, steps, tracker
+from repro.train.checkpoint import AsyncCheckpointer
 from repro.train.hooks import (
     BenchRecordHook,
     CheckpointHook,
@@ -6,16 +7,23 @@ from repro.train.hooks import (
     Hook,
     MetricsLogger,
 )
+from repro.train.tracker import ConsoleSink, DictSink, JsonlSink, Sink
 from repro.train.trainer import Trainer, TrainerConfig
 
 __all__ = [
+    "AsyncCheckpointer",
     "BenchRecordHook",
     "CheckpointHook",
+    "ConsoleSink",
+    "DictSink",
     "EvalHook",
     "Hook",
+    "JsonlSink",
     "MetricsLogger",
+    "Sink",
     "Trainer",
     "TrainerConfig",
     "checkpoint",
     "steps",
+    "tracker",
 ]

@@ -1,7 +1,7 @@
 """Trainer hooks: the extension surface of ``Trainer.fit``.
 
 ``fit`` itself only runs the compiled train step; everything episodic —
-console logging, the paper's nested eval loop (C4), checkpointing,
+metric tracking, the paper's nested eval loop (C4), checkpointing,
 benchmark capture — is a :class:`Hook`. Stock hooks reproduce the
 pre-hook behavior exactly; ``run.dispatch`` and user code can append
 their own (any object with the same methods works, subclassing ``Hook``
@@ -15,14 +15,20 @@ Call protocol, per fitted step (in hook-list order):
     on_finish(trainer, history)           # once, after the loop
 
 ``record`` is the same dict appended to ``fit``'s returned history, so a
-hook that adds keys (``EvalHook`` adds ``eval_nll``) enriches the
-history entry callers see.
+hook that adds keys (``EvalHook`` adds ``eval_nll``, ``CheckpointHook``
+overwrites ``ckpt_block_ms``) enriches the history entry callers see.
+Every record also carries the step-time breakdown ``fit`` stamps:
+``step_ms`` (train-step wall), ``data_wait_ms`` (host blocked on the
+input feed) and ``ckpt_block_ms`` (host blocked on checkpointing, 0
+on non-checkpoint steps).
 """
 from __future__ import annotations
 
 import os
 import time
-from typing import Callable, List, Optional
+from typing import Callable, List, Optional, Sequence
+
+from repro.train.tracker import ConsoleSink, Sink
 
 
 class Hook:
@@ -52,26 +58,36 @@ class Hook:
 
 
 class MetricsLogger(Hook):
-    """Console metrics sink (replaces the bare ``print`` that used to be
-    inlined in ``Trainer.fit``). ``log_every=0`` silences step lines;
-    eval lines always print when an eval ran."""
+    """Multi-sink metrics tracker (the front-end; sinks live in
+    :mod:`repro.train.tracker`).
+
+    Default is the classic console logger. ``sink=`` keeps the original
+    line-callable surface (routes console lines there instead of
+    stdout); ``sinks=`` attaches any extra :class:`~repro.train.tracker.
+    Sink` objects (JSONL file, wandb-shaped dict, ...), all fed the same
+    per-step records.
+    """
 
     def __init__(self, log_every: int = 10,
-                 sink: Optional[Callable[[str], None]] = None):
+                 sink: Optional[Callable[[str], None]] = None,
+                 sinks: Sequence[Sink] = ()):
         self.log_every = log_every
-        self.sink = sink or (lambda line: print(line, flush=True))
-        self._t0: Optional[float] = None
+        self.sinks: List[Sink] = [ConsoleSink(log_every, sink),
+                                  *sinks]
 
     def on_step(self, trainer, step, record):
-        if self._t0 is None:
-            self._t0 = time.time() - trainer.last_step_s
-        if self.log_every and step % self.log_every == 0:
-            dt = time.time() - self._t0
-            self.sink(f"step {step}: loss={record['loss']:.4f} "
-                      f"nll={record['nll']:.4f} ({dt:.1f}s)")
+        t0 = time.time() - trainer.last_step_s
+        for s in self.sinks:
+            s.start_clock(t0)
+            s.log(step, record)
 
     def on_eval(self, trainer, step, record):
-        self.sink(f"  eval @ {step}: nll={record['eval_nll']:.4f}")
+        for s in self.sinks:
+            s.log_eval(step, record)
+
+    def on_finish(self, trainer, history):
+        for s in self.sinks:
+            s.finish(history)
 
 
 class EvalHook(Hook):
@@ -90,20 +106,66 @@ class EvalHook(Hook):
 
 
 class CheckpointHook(Hook):
-    """Periodic sharded checkpoints under ``dir/step_<N>``."""
+    """Periodic sharded checkpoints under ``dir/step_<N>``.
 
-    def __init__(self, every: int, directory: str):
+    ``async_save=True`` switches to the non-blocking path
+    (:class:`repro.train.checkpoint.AsyncCheckpointer`): the step loop
+    only dispatches device-side snapshot copies and drains the
+    *previous* in-flight save; serialization and IO run on a writer
+    thread. Either way the hook:
+
+      * stamps the host-blocked time into ``record["ckpt_block_ms"]``;
+      * skips redundant saves when the global step hasn't advanced past
+        the last save (e.g. a resume immediately followed by the final
+        flush);
+      * at ``fit`` end, saves the final step if it isn't checkpointed
+        yet and always drains the in-flight async save — a fast exit
+        never silently drops a checkpoint.
+    """
+
+    def __init__(self, every: int, directory: str, *,
+                 async_save: bool = False):
         self.every = every
         self.directory = directory
+        self.async_save = async_save
+        self.checkpointer = None  # AsyncCheckpointer, lazily
+        self._last_saved: Optional[int] = None
 
-    def on_step(self, trainer, step, record):
-        if self.every and step % self.every == 0:
-            from repro.train import checkpoint as ckpt
+    def _save(self, trainer, step: int) -> str:
+        from repro.train import checkpoint as ckpt
 
-            path = os.path.join(self.directory, f"step_{step}")
+        path = os.path.join(self.directory, f"step_{step}")
+        if self.async_save:
+            if self.checkpointer is None:
+                self.checkpointer = ckpt.AsyncCheckpointer()
+            self.checkpointer.save(path, trainer.state, step=step,
+                                   pspecs=trainer.state_specs)
+        else:
             ckpt.save_checkpoint(path, trainer.state, step=step,
                                  pspecs=trainer.state_specs)
+        self._last_saved = step
+        return path
+
+    def on_step(self, trainer, step, record):
+        if self._last_saved is None:
+            self._last_saved = trainer.start_step  # resumed state is on disk
+        if self.every and step % self.every == 0 \
+                and step != self._last_saved:
+            t0 = time.perf_counter()
+            path = self._save(trainer, step)
+            record["ckpt_block_ms"] = (time.perf_counter() - t0) * 1e3
             trainer.emit("on_checkpoint", step, path)
+
+    def on_finish(self, trainer, history):
+        if self._last_saved is None:
+            self._last_saved = trainer.start_step
+        final = history[-1]["step"] if history else trainer.start_step
+        if self.every and final != self._last_saved:
+            # fast exit between cadence points: keep the newest steps
+            path = self._save(trainer, final)
+            trainer.emit("on_checkpoint", final, path)
+        if self.checkpointer is not None:
+            self.checkpointer.wait()  # never drop the in-flight save
 
 
 class BenchRecordHook(Hook):
@@ -113,7 +175,11 @@ class BenchRecordHook(Hook):
 
     Per-step wall samples become one median/IQR record (the first step
     is dropped as compile warmup when more than one sample exists);
-    final loss/nll ride along as derived keys. ``needs_sync`` makes the
+    final loss/nll ride along as derived keys. A second ``goodput``
+    record charges every host stall the breakdown surfaces: productive
+    step time over wall time including input waits and checkpoint
+    blocks (arXiv 2502.06982's unmeasured-stall argument, applied to
+    training), plus examples/s and tokens/s. ``needs_sync`` makes the
     fit block once per step so the samples measure the step, not jax's
     async dispatch.
     """
@@ -125,9 +191,13 @@ class BenchRecordHook(Hook):
         self.arch = arch
         self.tag = tag
         self._samples_us: List[float] = []
+        self._wait_ms: List[float] = []
+        self._ckpt_ms: List[float] = []
 
     def on_step(self, trainer, step, record):
         self._samples_us.append(trainer.last_step_s * 1e6)
+        self._wait_ms.append(float(record.get("data_wait_ms", 0.0)))
+        self._ckpt_ms.append(float(record.get("ckpt_block_ms", 0.0)))
 
     def on_finish(self, trainer, history):
         from repro.bench import schema
@@ -145,12 +215,39 @@ class BenchRecordHook(Hook):
             if "eval_nll" in history[-1]:
                 derived["final_eval_nll"] = history[-1]["eval_nll"]
         name = f"train/{self.arch or trainer.cfg.name}/step"
+        records = [{"name": name, "wall_us": timing.as_dict(),
+                    "derived": derived}]
+
+        # training goodput: charge the stalls (skip the compile step so
+        # warmup doesn't dominate short runs)
+        step_ms = [us / 1e3 for us in samples]
+        wait_ms = self._wait_ms[-len(samples):]
+        ckpt_ms = self._ckpt_ms[-len(samples):]
+        productive = sum(step_ms)
+        wall = productive + sum(wait_ms) + sum(ckpt_ms)
+        n = len(samples)
+        goodput = {
+            "goodput": round(productive / wall, 6) if wall else 1.0,
+            "data_wait_ms_mean": round(sum(wait_ms) / n, 4),
+            "ckpt_block_ms_mean": round(sum(ckpt_ms) / n, 4),
+            "step_ms_mean": round(productive / n, 4),
+        }
+        shape = getattr(trainer, "batch_shape", None)
+        if shape:
+            b, t = shape
+            per_s = n / (wall / 1e3) if wall else 0.0
+            goodput["examples_per_s"] = round(b * per_s, 2)
+            goodput["tokens_per_s"] = round(b * t * per_s, 2)
+        records.append({
+            "name": f"train/{self.arch or trainer.cfg.name}/goodput",
+            "wall_us": None, "derived": goodput,
+        })
+
         entry = schema.bench_entry(
             paper_ref="§Train (RunSpec-driven training run)",
             units="us",
-            derived_keys=tuple(derived),
-            records=[{"name": name, "wall_us": timing.as_dict(),
-                      "derived": derived}],
+            derived_keys=tuple(derived) + tuple(goodput),
+            records=records,
         )
         artifact = schema.make_artifact(
             {"train_run": entry}, tag=self.tag, smoke=True,

@@ -1,0 +1,134 @@
+"""Metric sinks: the pluggable back half of ``MetricsLogger``.
+
+``MetricsLogger`` (train/hooks.py) is the tracker front-end — it owns
+*when* to emit; sinks own *where*. A sink is any object with the three
+methods of :class:`Sink` (subclassing just inherits the no-ops), in the
+levanter-tracker spirit: one training run fans the same step records out
+to the console, a JSONL file, and/or a wandb-shaped collector without
+the Trainer knowing any of them exist.
+
+Hot-path discipline: record values may still be on-device scalars while
+the fit is in flight (reading one forces a host sync). ``ConsoleSink``
+reads at its log cadence (exactly the pre-refactor sync pattern);
+``JsonlSink`` buffers record *references* and serializes them at flush
+boundaries (trailing by one record so same-step hook enrichment — eval
+keys, checkpoint timings — lands in the line); ``DictSink`` only
+collects references and materializes at finish.
+"""
+from __future__ import annotations
+
+import json
+from typing import Any, Callable, List, Optional
+
+
+def _jsonable(v: Any):
+    """Materialize one record value for serialization (device scalars ->
+    floats, numpy scalars -> python, everything else as-is)."""
+    if isinstance(v, (str, bool, int, float)) or v is None:
+        return v
+    if hasattr(v, "item"):  # jax/numpy scalar (forces a host sync)
+        try:
+            return v.item()
+        except (TypeError, ValueError):
+            pass
+    return str(v)
+
+
+class Sink:
+    """No-op base: override any subset."""
+
+    def start_clock(self, t0: float) -> None:
+        pass
+
+    def log(self, step: int, record: dict) -> None:
+        pass
+
+    def log_eval(self, step: int, record: dict) -> None:
+        pass
+
+    def finish(self, history: List[dict]) -> None:
+        pass
+
+
+class ConsoleSink(Sink):
+    """The classic console lines (what ``Trainer.fit`` once printed
+    inline). ``log_every=0`` silences step lines; eval lines always
+    print when an eval ran."""
+
+    def __init__(self, log_every: int = 10,
+                 out: Optional[Callable[[str], None]] = None):
+        self.log_every = log_every
+        self.out = out or (lambda line: print(line, flush=True))
+        self._t0: Optional[float] = None
+
+    def start_clock(self, t0: float) -> None:
+        if self._t0 is None:
+            self._t0 = t0
+
+    def log(self, step, record):
+        import time
+
+        if self.log_every and step % self.log_every == 0:
+            dt = time.time() - (self._t0 if self._t0 is not None
+                                else time.time())
+            self.out(f"step {step}: loss={record['loss']:.4f} "
+                     f"nll={record['nll']:.4f} ({dt:.1f}s)")
+
+    def log_eval(self, step, record):
+        self.out(f"  eval @ {step}: nll={record['eval_nll']:.4f}")
+
+
+class JsonlSink(Sink):
+    """Streams every fit record — non-numeric keys included — to a
+    ``metrics.jsonl`` file, one JSON object per line.
+
+    Records are buffered by reference and written ``flush_every``
+    records behind the head (so keys a later hook in the same emit cycle
+    adds — ``eval_nll``, ``ckpt_block_ms`` — are in the line), with the
+    tail flushed at finish after ``fit`` materialized everything.
+    ``flush_every=0`` defers all IO to finish.
+    """
+
+    def __init__(self, path: str, *, flush_every: int = 25):
+        self.path = path
+        self.flush_every = flush_every
+        self._pending: List[dict] = []
+        self._fh = None
+
+    def _flush(self, keep_tail: int) -> None:
+        if self._fh is None:
+            self._fh = open(self.path, "w")
+        while len(self._pending) > keep_tail:
+            record = self._pending.pop(0)
+            self._fh.write(json.dumps(
+                {k: _jsonable(v) for k, v in record.items()}) + "\n")
+        self._fh.flush()
+
+    def log(self, step, record):
+        self._pending.append(record)
+        if self.flush_every and len(self._pending) > self.flush_every:
+            self._flush(keep_tail=1)  # trail the head by one record
+
+    def finish(self, history):
+        self._flush(keep_tail=0)
+        if self._fh is not None:
+            self._fh.close()
+            self._fh = None
+
+
+class DictSink(Sink):
+    """wandb-shaped in-memory collector (the test double for a real
+    ``wandb.log`` integration): every record lands as one dict in
+    ``logged``, materialized at finish."""
+
+    def __init__(self):
+        self.logged: List[dict] = []
+        self.finished = False
+
+    def log(self, step, record):
+        self.logged.append(record)  # reference; materialized in finish
+
+    def finish(self, history):
+        self.logged = [{k: _jsonable(v) for k, v in r.items()}
+                       for r in self.logged]
+        self.finished = True

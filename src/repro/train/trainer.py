@@ -33,6 +33,9 @@ class TrainerConfig:
     log_every: int = 10
     seed: int = 0
     metrics: Tuple[str, ...] = ()  # extra step metrics (e.g. "grad_norm")
+    async_checkpoint: bool = False  # non-blocking background ckpt writer
+    double_buffer: bool = False    # stage next batch's H2D ahead of the step
+    metrics_out: str = ""          # JSONL path for the full metric stream
 
 
 class Trainer:
@@ -61,6 +64,7 @@ class Trainer:
         self._eval_step = None
         self.start_step = 0          # set by resume(); fit continues from it
         self.last_step_s = 0.0       # wall time of the latest train step
+        self.batch_shape: Optional[Tuple[int, int]] = None  # (batch, seq)
         self._hooks: List[Hook] = []
 
     def _ns(self, spec_tree):
@@ -76,6 +80,9 @@ class Trainer:
             lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), batch
         )
         bspecs = T.batch_pspecs(bshapes, self.rules)
+        toks = bshapes["tokens"] if isinstance(bshapes, dict) else None
+        if toks is not None and len(toks.shape) >= 2:
+            self.batch_shape = (int(toks.shape[0]), int(toks.shape[1]))
         step = T.make_train_step(self.cfg, self.optimizer, self.rules,
                                  self.axes, extra_metrics=self.tcfg.metrics)
         self._train_step = jax.jit(
@@ -106,13 +113,20 @@ class Trainer:
     def default_hooks(self, eval_batches: Optional[Callable] = None
                       ) -> List[Hook]:
         """The stock hook set implied by ``TrainerConfig`` (exactly the
-        behavior the pre-hook ``fit`` had inlined)."""
-        hooks: List[Hook] = [MetricsLogger(self.tcfg.log_every)]
+        behavior the pre-hook ``fit`` had inlined, plus the opt-in JSONL
+        stream and async checkpointing)."""
+        sinks = []
+        if self.tcfg.metrics_out:
+            from repro.train.tracker import JsonlSink
+
+            sinks.append(JsonlSink(self.tcfg.metrics_out))
+        hooks: List[Hook] = [MetricsLogger(self.tcfg.log_every, sinks=sinks)]
         if self.tcfg.eval_every and eval_batches is not None:
             hooks.append(EvalHook(eval_batches, self.tcfg.eval_every))
         if self.tcfg.checkpoint_every:
-            hooks.append(CheckpointHook(self.tcfg.checkpoint_every,
-                                        self.tcfg.checkpoint_dir))
+            hooks.append(CheckpointHook(
+                self.tcfg.checkpoint_every, self.tcfg.checkpoint_dir,
+                async_save=self.tcfg.async_checkpoint))
         return hooks
 
     def emit(self, event: str, *args) -> None:
@@ -167,6 +181,25 @@ class Trainer:
     # ------------------------------------------------------------------ #
     # Fit.
     # ------------------------------------------------------------------ #
+    def _device_stream(self, batches: Iterable) -> Iterable:
+        """Double-buffer stage: ``device_put`` each batch (async dispatch,
+        correct input sharding) one batch ahead of the step that consumes
+        it, so the step never waits on the host-to-device copy."""
+        shardings = None
+        pending = None
+        for batch in batches:
+            if shardings is None:
+                bshapes = jax.tree_util.tree_map(
+                    lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), batch
+                )
+                shardings = self._ns(T.batch_pspecs(bshapes, self.rules))
+            staged = jax.device_put(batch, shardings)
+            if pending is not None:
+                yield pending
+            pending = staged
+        if pending is not None:
+            yield pending
+
     def fit(self, train_batches: Iterable,
             eval_batches: Optional[Callable] = None,
             hooks: Optional[List[Hook]] = None) -> List[dict]:
@@ -178,6 +211,11 @@ class Trainer:
         yielding (batch, mask) pairs (see core.distributed_eval), used
         by the stock ``EvalHook`` when ``tcfg.eval_every`` is set.
         ``hooks``: explicit hook list; None means ``default_hooks``.
+
+        Every record carries the step-time breakdown: ``step_ms`` (the
+        train-step call), ``data_wait_ms`` (host blocked on the input
+        iterator) and ``ckpt_block_ms`` (host blocked on checkpointing;
+        ``CheckpointHook`` overwrites the 0 on save steps).
         """
         self._hooks = (self.default_hooks(eval_batches)
                        if hooks is None else list(hooks))
@@ -191,9 +229,16 @@ class Trainer:
         history: List[dict] = []
         step = self.start_step
         with self.mesh:
-            for batch in train_batches:
-                if step >= self.tcfg.total_steps:
+            if self.tcfg.double_buffer:
+                train_batches = self._device_stream(train_batches)
+            it = iter(train_batches)
+            while step < self.tcfg.total_steps:
+                t_wait = time.perf_counter()
+                try:
+                    batch = next(it)
+                except StopIteration:
                     break
+                data_wait_ms = (time.perf_counter() - t_wait) * 1e3
                 if self._train_step is None:
                     self._compile_train(batch)
                 t0 = time.perf_counter()
@@ -202,7 +247,10 @@ class Trainer:
                     jax.block_until_ready(metrics)
                 self.last_step_s = time.perf_counter() - t0
                 step += 1
-                record = {"step": step, **metrics}
+                record = {"step": step, **metrics,
+                          "step_ms": self.last_step_s * 1e3,
+                          "data_wait_ms": data_wait_ms,
+                          "ckpt_block_ms": 0.0}
                 history.append(record)
                 self.emit("on_step", step, record)
             for record in history:  # materialize device scalars -> floats

@@ -22,7 +22,7 @@ def _blocks(doc):
 
 def test_docs_exist():
     for doc in ("architecture.md", "paper_map.md", "dist.md",
-                "benchmarks.md", "serving.md", "run.md"):
+                "benchmarks.md", "serving.md", "run.md", "training.md"):
         path = os.path.join(DOCS, doc)
         assert os.path.exists(path), f"docs/{doc} missing"
         assert os.path.getsize(path) > 500, f"docs/{doc} is a stub"
@@ -70,6 +70,23 @@ def test_run_md_snippets_execute():
             exec(compile(src, f"docs/run.md[block {i}]", "exec"), ns)
         except Exception as e:  # noqa: BLE001
             pytest.fail(f"docs/run.md block {i} failed: "
+                        f"{type(e).__name__}: {e}\n---\n{src}")
+
+
+@pytest.mark.slow  # trains (tiny) models: compile + real fit calls
+def test_training_md_snippets_execute():
+    """The training guide's python blocks run verbatim, sequentially
+    (shard source determinism, pipeline==direct-iteration equality,
+    cache corruption/mismatch, async checkpoint save/restore, sink
+    fan-out), asserts included."""
+    blocks = _blocks("training.md")
+    assert len(blocks) >= 5, "training.md lost its runnable snippets"
+    ns = {}
+    for i, src in enumerate(blocks):
+        try:
+            exec(compile(src, f"docs/training.md[block {i}]", "exec"), ns)
+        except Exception as e:  # noqa: BLE001
+            pytest.fail(f"docs/training.md block {i} failed: "
                         f"{type(e).__name__}: {e}\n---\n{src}")
 
 
